@@ -1,0 +1,70 @@
+"""Figure 9(b) + §10.6: database-backed application loops — the remote
+client iterating row-by-row over a JDBC-style result set vs the pushed-down
+aggregate.  Measures both wall time and DATA MOVEMENT (bytes crossing the
+app↔DBMS boundary), the paper's headline win for this class.
+
+The 'client' is the Python host: the cursor baseline fetches every row to
+the host (device→host transfer per result set) and folds in Python; Aggify
+ships the loop into the engine (device) and transfers one scalar."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import aggify, run_cursor, run_rewritten
+from repro.relational import execute
+from repro.relational.tpch import gen_tpch
+
+from .queries import q2_min_cost_supp, q14_promo_revenue
+from .util import emit, time_fn
+
+ROW_BYTES_Q2 = 4 + 9 + 25     # paper §10.6: partkey + supplycost + name
+OUT_BYTES_Q2 = 4 + 34
+
+
+def _client_roi_loop(catalog, d0, d1):
+    """The Figure-2 pattern: fetch all rows to the app, fold in Python."""
+    prog = q14_promo_revenue()
+    from repro.relational import engine
+    t = engine.execute(prog.loop.query, catalog,
+                       {"d0": d0, "d1": d1})
+    rows = t.to_numpy()                      # device -> client transfer
+    rev, promo = 1e-9, 0.0
+    for price, disc, pr in zip(rows["l_extendedprice"], rows["l_discount"],
+                               rows["p_type_promo"]):
+        rev += price * (1 - disc)
+        if pr:
+            promo += price * (1 - disc)
+    moved = sum(a.nbytes for a in rows.values())
+    return 100 * promo / rev, moved
+
+
+def run(scale: float = 0.002, repeats: int = 3, **_) -> None:
+    catalog = gen_tpch(scale)
+    d0, d1 = 0, 2556      # full range: the paper's large-result regime
+
+    # client-side loop (original program)
+    us_client = time_fn(lambda: _client_roi_loop(catalog, d0, d1)[0],
+                        repeats=repeats, warmup=1)
+    _, moved_client = _client_roi_loop(catalog, d0, d1)
+
+    # pushed-down aggregate (rewritten program), one compiled query
+    prog = q14_promo_revenue()
+    rp = aggify(prog)
+    import jax
+    agg_fn = jax.jit(lambda a, b: run_rewritten(rp, catalog,
+                                                {"d0": a, "d1": b})["pct"])
+    us_agg = time_fn(lambda: agg_fn(d0, d1), repeats=repeats, warmup=1)
+    ref, _ = _client_roi_loop(catalog, d0, d1)
+    got = float(agg_fn(d0, d1))
+    assert abs(ref - got) < 0.5, (ref, got)
+
+    emit("app_client_loop", us_client, f"bytes_moved={moved_client}")
+    emit("app_aggify_pushdown", us_agg,
+         f"bytes_moved=4;speedup={us_client/us_agg:.2f}x;"
+         f"data_reduction={moved_client/4:.0f}x")
+
+    # paper's §10.6 analytic model for the MinCostSupplier app
+    for n in (1_000, 100_000, 2_000_000):
+        emit("app_q2_data_model", 0,
+             f"n={n};orig_bytes={ROW_BYTES_Q2*n};aggify_bytes={OUT_BYTES_Q2};"
+             f"reduction={ROW_BYTES_Q2*n/OUT_BYTES_Q2:.0f}x")

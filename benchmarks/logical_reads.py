@@ -1,0 +1,52 @@
+"""Table 4: logical reads — bytes materialized and (re)scanned.
+
+The cursor baseline materializes the cursor-query result into a temp table
+(write + read back during iteration: 2× its bytes) on TOP of the base-table
+scan; Aggify's pipelined execution scans the base tables only.  We count
+these quantities exactly from the plan + table sizes (the analogue of SQL
+Server's logical-read counters)."""
+from __future__ import annotations
+
+from repro.core import aggify
+from repro.relational import engine, execute
+from repro.relational.tpch import gen_tpch
+
+from .queries import DEFAULT_PARAMS, QUERIES
+from .util import emit
+
+
+def _base_scan_bytes(plan, catalog) -> int:
+    from repro.relational.plan import Scan
+    total = 0
+    stack = [plan]
+    seen = set()
+    while stack:
+        node = stack.pop()
+        if isinstance(node, Scan):
+            if node.table not in seen:
+                seen.add(node.table)
+                total += catalog[node.table].nbytes()
+        for attr in ("child", "left", "right"):
+            if hasattr(node, attr):
+                stack.append(getattr(node, attr))
+    return total
+
+
+def run(scale: float = 0.0005, **_) -> None:
+    catalog = gen_tpch(scale)
+    for qname, (factory, corr, _) in QUERIES.items():
+        prog = factory()
+        params = dict(DEFAULT_PARAMS[qname])
+        if corr:
+            params[corr] = 0
+        base = _base_scan_bytes(prog.loop.query, catalog)
+        result = engine.execute(prog.loop.query, catalog, params)
+        temp = result.nbytes()
+        n_inv = 24 if corr else 1
+        cursor_reads = n_inv * (base + 2 * temp)   # scan + write + iterate
+        aggify_reads = n_inv * base                # pipelined: base scan only
+        grouped_reads = base                       # Aggify+: one pass
+        emit(f"logical_reads_{qname}", 0,
+             f"cursor={cursor_reads};aggify={aggify_reads};"
+             f"aggify_plus={grouped_reads};"
+             f"savings={100*(1-aggify_reads/max(cursor_reads,1)):.0f}%")

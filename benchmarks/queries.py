@@ -1,0 +1,136 @@
+"""The TPC-H cursor-loop workload (paper §10.1): six queries implemented as
+cursor loops, mirroring the paper's benchmark of TPC-H specifications
+"implemented using cursor loops".
+
+Each entry provides the loop Program, its correlation parameter domain (for
+per-invocation queries like Q2's per-part minCostSupp), and a grouped
+decorrelation spec (the Aggify+ execution)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import (Assign, BinOp, Col, Const, CursorLoop, If, Program,
+                        UnOp, Var, let)
+from repro.relational import Filter, Join, Scan
+from repro.relational.tpch import SCHEMAS, gen_tpch
+
+
+def scan(t):
+    return Scan(t, SCHEMAS[t])
+
+
+def q2_min_cost_supp() -> Program:
+    """Per-part minimum-cost supplier with lower bound (paper Figure 1)."""
+    q = Filter(
+        Join(scan("PARTSUPP"), scan("SUPPLIER"),
+             left_key="ps_suppkey", right_key="s_suppkey"),
+        Col("ps_partkey").eq(Var("pkey")))
+    body = [If(BinOp("and", Var("pCost") < Var("minCost"),
+                     Var("pCost") > Var("lb")),
+               [Assign("minCost", Var("pCost")),
+                Assign("suppName", Var("sName"))])]
+    return Program(
+        "minCostSupp", params=("pkey", "lb"),
+        pre=[let("minCost", Const(100000.0)), let("suppName", Const(-1))],
+        loop=CursorLoop(q, fetch=[("pCost", "ps_supplycost"),
+                                  ("sName", "s_name")], body=body),
+        post=[], returns=("suppName",),
+        var_dtypes={"suppName": jnp.int32})
+
+
+def q13_order_count() -> Program:
+    """Per-customer count of orders without 'special request' comments."""
+    q = Filter(scan("ORDERS"), Col("o_custkey").eq(Var("ck")))
+    body = [If(UnOp("not", Var("special")),
+               [Assign("cnt", Var("cnt") + 1.0)])]
+    return Program(
+        "orderCount", params=("ck",),
+        pre=[let("cnt", Const(0.0))],
+        loop=CursorLoop(q, fetch=[("special", "o_comment_special")],
+                        body=body),
+        post=[], returns=("cnt",))
+
+
+def q14_promo_revenue() -> Program:
+    """Promo revenue share over a ship-date window (whole-table loop)."""
+    q = Filter(Join(scan("LINEITEM"), scan("PART"),
+                    left_key="l_partkey", right_key="p_partkey"),
+               BinOp("and", Col("l_shipdate") >= Var("d0"),
+                     Col("l_shipdate") < Var("d1")))
+    body = [
+        Assign("rev", Var("rev") + Var("price") * (1.0 - Var("disc"))),
+        If(Var("promo"),
+           [Assign("promoRev",
+                   Var("promoRev") + Var("price") * (1.0 - Var("disc")))]),
+    ]
+    return Program(
+        "promoRevenue", params=("d0", "d1"),
+        pre=[let("rev", Const(1e-9)), let("promoRev", Const(0.0))],
+        loop=CursorLoop(q, fetch=[("price", "l_extendedprice"),
+                                  ("disc", "l_discount"),
+                                  ("promo", "p_type_promo")], body=body),
+        post=[Assign("pct", Const(100.0) * Var("promoRev") / Var("rev"))],
+        returns=("pct",))
+
+
+def q18_order_quantity() -> Program:
+    """Per-order total quantity (large-volume-order detection)."""
+    q = Filter(scan("LINEITEM"), Col("l_orderkey").eq(Var("ok")))
+    return Program(
+        "orderQty", params=("ok",),
+        pre=[let("qty", Const(0.0))],
+        loop=CursorLoop(q, fetch=[("lq", "l_quantity")],
+                        body=[Assign("qty", Var("qty") + Var("lq"))]),
+        post=[], returns=("qty",))
+
+
+def q19_discounted_revenue() -> Program:
+    """Multi-predicate discounted revenue (guarded sum)."""
+    q = Join(scan("LINEITEM"), scan("PART"),
+             left_key="l_partkey", right_key="p_partkey")
+    cond = BinOp("and",
+                 BinOp("and", Var("qty") >= Var("qlo"),
+                       Var("qty") <= Var("qhi")),
+                 Var("promo"))
+    body = [If(cond, [Assign("rev", Var("rev")
+                             + Var("price") * (1.0 - Var("disc")))])]
+    return Program(
+        "discRevenue", params=("qlo", "qhi"),
+        pre=[let("rev", Const(0.0))],
+        loop=CursorLoop(q, fetch=[("qty", "l_quantity"),
+                                  ("price", "l_extendedprice"),
+                                  ("disc", "l_discount"),
+                                  ("promo", "p_type_promo")], body=body),
+        post=[], returns=("rev",))
+
+
+def q21_waiting_suppliers() -> Program:
+    """Per-supplier count of line items whose receipt exceeded commit."""
+    q = Filter(scan("LINEITEM"), Col("l_suppkey").eq(Var("sk")))
+    body = [If(Var("rd") > Var("cd"), [Assign("late", Var("late") + 1.0)])]
+    return Program(
+        "lateCount", params=("sk",),
+        pre=[let("late", Const(0.0))],
+        loop=CursorLoop(q, fetch=[("rd", "l_receiptdate"),
+                                  ("cd", "l_commitdate")], body=body),
+        post=[], returns=("late",))
+
+
+# (program factory, correlation param name or None, group key for Aggify+)
+QUERIES = {
+    "Q2": (q2_min_cost_supp, "pkey", "ps_partkey"),
+    "Q13": (q13_order_count, "ck", "o_custkey"),
+    "Q14": (q14_promo_revenue, None, None),
+    "Q18": (q18_order_quantity, "ok", "l_orderkey"),
+    "Q19": (q19_discounted_revenue, None, None),
+    "Q21": (q21_waiting_suppliers, "sk", "l_suppkey"),
+}
+
+DEFAULT_PARAMS = {
+    "Q2": {"lb": 4.0},
+    "Q13": {},
+    "Q14": {"d0": 100, "d1": 800},
+    "Q18": {},
+    "Q19": {"qlo": 5.0, "qhi": 36.0},
+    "Q21": {},
+}

@@ -1,0 +1,25 @@
+"""Roofline bench: renders the §Roofline terms from the dry-run artifacts
+(artifacts/dryrun/*.json).  If the artifacts are missing (dry-run not yet
+run), emits a pointer instead of failing — the dry-run is a separate,
+heavier entry point (python -m repro.launch.dryrun)."""
+from __future__ import annotations
+
+import os
+
+from .util import emit
+
+
+def run(art_dir: str = "artifacts/dryrun", **_) -> None:
+    if not os.path.isdir(art_dir) or not os.listdir(art_dir):
+        emit("roofline", 0, "no artifacts; run python -m repro.launch.dryrun")
+        return
+    from repro.analysis.roofline import load_rows
+    rows = load_rows(art_dir)
+    for r in rows:
+        if r.status != "OK":
+            emit(f"roofline_{r.arch}_{r.shape}_{r.mesh}", 0, r.status)
+            continue
+        emit(f"roofline_{r.arch}_{r.shape}_{r.mesh}",
+             r.bound_s * 1e6,
+             f"dom={r.dominant};frac={r.roofline_fraction:.3f};"
+             f"useful={r.useful_ratio:.2f}")

@@ -1,0 +1,60 @@
+"""Benchmark driver — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.
+
+  applicability   — Tables 1/2 (loop-corpus preconditions)
+  tpch_loops      — Figure 9(a) (cursor vs Aggify vs Aggify+)
+  app_loops       — Figure 9(b) + §10.6 (client loops, data movement)
+  workload_loops  — Figure 9(c)/Table 3 (L1..L8 incl. nested, inserts)
+  logical_reads   — Table 4
+  scalability     — Figures 10/11/12
+  roofline        — §Roofline terms from the dry-run artifacts
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="all",
+                    help="comma list of benchmark names")
+    ap.add_argument("--scale", type=float, default=0.0005)
+    ap.add_argument("--full", action="store_true",
+                    help="larger data sizes (slower)")
+    args = ap.parse_args()
+
+    from . import (app_loops, applicability, logical_reads, roofline_bench,
+                   scalability, tpch_loops, workload_loops)
+
+    scale = 0.005 if args.full else args.scale
+    sizes = ((100, 1_000, 10_000, 100_000, 1_000_000, 3_000_000)
+             if args.full else (100, 1_000, 10_000, 100_000))
+    benches = {
+        "applicability": lambda: applicability.run(),
+        "tpch_loops": lambda: tpch_loops.run(scale=scale),
+        "app_loops": lambda: app_loops.run(scale=scale),
+        "workload_loops": lambda: workload_loops.run(),
+        "logical_reads": lambda: logical_reads.run(scale=scale),
+        "scalability": lambda: scalability.run(sizes=sizes),
+        "roofline": lambda: roofline_bench.run(),
+    }
+    only = None if args.only == "all" else set(args.only.split(","))
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in benches.items():
+        if only and name not in only:
+            continue
+        try:
+            fn()
+        except Exception as e:  # keep the harness running; report at exit
+            import traceback
+            traceback.print_exc()
+            print(f"{name},0,ERROR:{type(e).__name__}")
+            failures += 1
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Figures 10/11/12: scalability with loop iteration count, plus the data-
+movement secondary axis — cursor vs Aggify as N grows (the paper's
+crossover: cursor degrades, Aggify stays near-flat)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import (Assign, Const, CursorLoop, Program, Var, aggify, let,
+                        run_cursor, run_rewritten)
+from repro.relational import Scan, Table
+
+from .util import emit, time_fn
+
+
+def _prog():
+    q = Scan("T", ("roi",))
+    return Program(
+        "cumROI", params=(),
+        pre=[let("c", Const(1.0))],
+        loop=CursorLoop(q, [("r", "roi")],
+                        [Assign("c", Var("c") * (Var("r") + 1.0))]),
+        post=[Assign("c", Var("c") - 1.0)], returns=("c",))
+
+
+def run(repeats: int = 3, sizes=(100, 1_000, 10_000, 100_000, 1_000_000),
+        **_) -> None:
+    prog = _prog()
+    rng = np.random.default_rng(0)
+    for n in sizes:
+        cat = {"T": Table.from_columns(
+            roi=(rng.uniform(-0.001, 0.001, n)).astype(np.float32))}
+        us_cur = time_fn(lambda: run_cursor(prog, cat), repeats=repeats,
+                         warmup=1)
+        rp = aggify(prog)
+        us_agg = time_fn(lambda: run_rewritten(rp, cat), repeats=repeats,
+                         warmup=1)
+        # interpreted client baseline only at small N (paper's worst case)
+        if n <= 1_000:
+            us_int = time_fn(lambda: run_cursor(prog, cat, interpreted=True),
+                             repeats=1, warmup=0)
+            emit(f"scal_n{n}_interpreted", us_int, "")
+        emit(f"scal_n{n}_cursor", us_cur, f"bytes_moved={4*n}")
+        emit(f"scal_n{n}_aggify", us_agg,
+             f"bytes_moved=4;speedup={us_cur/us_agg:.2f}x")

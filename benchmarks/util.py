@@ -1,0 +1,27 @@
+"""Benchmark timing helpers."""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+
+
+def time_fn(fn: Callable[[], object], *, repeats: int = 5,
+            warmup: int = 2) -> float:
+    """Median wall time in microseconds (blocks on the result)."""
+    for _ in range(warmup):
+        r = fn()
+        jax.block_until_ready(r)
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        r = fn()
+        jax.block_until_ready(r)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def emit(name: str, us: float, derived: str = "") -> None:
+    print(f"{name},{us:.1f},{derived}")

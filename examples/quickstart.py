@@ -1,0 +1,77 @@
+"""Quickstart: the paper's Figure-2 example end-to-end.
+
+Builds the cumulative-ROI cursor loop in the loop IR, runs Algorithm 1
+(dataflow analysis → custom aggregate → query rewrite), shows the derived
+aggregate signature, and executes both forms — cursor semantics vs the
+pipelined aggregate (streaming / merge-parallel / set-oriented).
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import time
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core import (Assign, Col, Const, CursorLoop, Program, Var,
+                        aggify, analyze_loop, build_aggregate, let,
+                        run_cursor, run_rewritten)
+from repro.relational import Filter, Scan, Table
+from repro.relational.plan import OrderBy
+
+
+def main():
+    # --- the monthly_investments table and the Figure-2 loop -------------
+    rng = np.random.default_rng(0)
+    n = 200_000
+    catalog = {"MONTHLY": Table.from_columns(
+        investor_id=rng.integers(0, 50, n).astype(np.int32),
+        month=np.arange(n, dtype=np.int32),
+        roi=rng.uniform(-0.002, 0.002, n).astype(np.float32))}
+
+    q = OrderBy(Filter(Scan("MONTHLY", ("investor_id", "month", "roi")),
+                       Col("investor_id").eq(Var("id"))), ("month",))
+    prog = Program(
+        "computeCumulativeReturn", params=("id",),
+        pre=[let("cumulativeROI", Const(1.0))],
+        loop=CursorLoop(q, fetch=[("monthlyROI", "roi")],
+                        body=[Assign("cumulativeROI",
+                                     Var("cumulativeROI")
+                                     * (Var("monthlyROI") + 1.0))]),
+        post=[Assign("cumulativeROI", Var("cumulativeROI") - 1.0)],
+        returns=("cumulativeROI",))
+
+    # --- Algorithm 1: analysis + aggregate construction -------------------
+    ana, _, _ = analyze_loop(prog)
+    agg = build_aggregate(prog)
+    print("Aggify analysis (paper §5):")
+    print(f"  V_Δ      = {sorted(ana.v_delta)}")
+    print(f"  V_fetch  = {sorted(ana.v_fetch)}")
+    print(f"  V_F      = {sorted(ana.v_fields)} ∪ {{isInitialized}}")
+    print(f"  P_accum  = {ana.p_accum}")
+    print(f"  V_init   = {sorted(ana.v_init)}")
+    print(f"  V_term   = {ana.v_term}")
+    print(f"  Accumulate({', '.join(agg.accum_params)}) / "
+          f"recognized updates: {[u.kind for u in agg.recognized]}")
+    print(f"  mergeable (parallel-safe): {agg.mergeable}\n")
+
+    # --- execute both forms ------------------------------------------------
+    t0 = time.perf_counter()
+    ref = run_cursor(prog, catalog, {"id": 7})
+    t_cursor = time.perf_counter() - t0
+
+    rp = aggify(prog)
+    t0 = time.perf_counter()
+    got = run_rewritten(rp, catalog, {"id": 7})
+    t_aggify = time.perf_counter() - t0
+
+    print(f"cursor loop      : {float(ref['cumulativeROI']):+.6f}"
+          f"  ({t_cursor*1e3:.1f} ms, temp-table materialization)")
+    print(f"aggify (rewrite) : {float(got['cumulativeROI']):+.6f}"
+          f"  ({t_aggify*1e3:.1f} ms, pipelined)")
+    print(f"speedup: {t_cursor/t_aggify:.1f}x")
+    assert abs(float(ref["cumulativeROI"]) - float(got["cumulativeROI"])) < 1e-5
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""End-to-end serving driver: continuous-batching server over a reduced
+LM, with the aggregate-contract decode attention (the paper's technique in
+the serving hot path).
+
+    PYTHONPATH=src python examples/serve_lm.py --arch qwen3-14b --requests 8
+"""
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import LM
+from repro.serve.serving import Request, Server
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-14b", choices=list(ARCH_IDS))
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=12)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced()
+    if cfg.family in ("vlm", "audio"):
+        raise SystemExit("serve_lm demo targets text-only archs")
+    lm = LM(cfg, q_chunk=16, kv_chunk=16, ssd_chunk=8)
+    params = lm.init(jax.random.PRNGKey(0))
+
+    server = Server(lm, params, slots=args.slots, max_len=128)
+    rng = np.random.default_rng(0)
+    reqs = []
+    for i in range(args.requests):
+        prompt = rng.integers(0, cfg.vocab, rng.integers(3, 10)).tolist()
+        r = Request(rid=i, prompt=prompt, max_new=args.max_new)
+        reqs.append(r)
+        server.submit(r)
+
+    t0 = time.perf_counter()
+    server.run(max_steps=2000)
+    dt = time.perf_counter() - t0
+
+    done = sum(r.done for r in reqs)
+    toks = sum(len(r.out) for r in reqs)
+    print(f"arch={args.arch} (reduced) slots={args.slots}")
+    print(f"completed {done}/{len(reqs)} requests, {toks} tokens "
+          f"in {dt:.2f}s ({toks/dt:.1f} tok/s, continuous batching)")
+    for r in reqs[:3]:
+        print(f"  req {r.rid}: prompt={r.prompt[:5]}... -> {r.out}")
+    assert done == len(reqs)
+
+
+if __name__ == "__main__":
+    main()

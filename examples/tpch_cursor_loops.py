@@ -1,0 +1,24 @@
+"""TPC-H cursor-loop example (the paper's §10.1 workload, runnable):
+
+For each of the six queries: build the cursor-loop program, aggify it,
+cross-check results, and report cursor vs Aggify vs Aggify+ timings.
+
+    PYTHONPATH=src python examples/tpch_cursor_loops.py [--scale 0.001]
+"""
+import argparse
+import sys
+
+sys.path.insert(0, ".")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=0.0005)
+    args = ap.parse_args()
+    from benchmarks import tpch_loops
+    print("name,us_per_call,derived")
+    tpch_loops.run(scale=args.scale)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+"""repro.aggregates — built-in aggregate library (paper §3.1) as Aggregate
+contract instances."""
+from .builtin import (BUILTINS, argmin_agg, avg_agg, count_agg, max_agg,
+                      min_agg, sum_agg, var_agg)
+
+__all__ = ["BUILTINS", "argmin_agg", "avg_agg", "count_agg", "max_agg",
+           "min_agg", "sum_agg", "var_agg"]

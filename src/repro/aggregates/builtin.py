@@ -1,0 +1,123 @@
+"""Built-in aggregates as first-class Aggregate instances (paper §3.1:
+"min, max, sum, avg and count are provided by DBMSs as built-in aggregate
+functions") — all deterministic, all with Merge, so every executor
+(streaming / chunked / tree / shard-merge) applies.
+
+These are also the targets the recognizer lowers synthesized aggregates
+onto; having them as explicit contract instances lets tests cross-check
+the recognizer output against a hand-written reference for each algebra.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.aggregate import Aggregate
+
+F32 = jnp.float32
+
+
+def sum_agg(dtype=F32) -> Aggregate:
+    def init():
+        return {"s": jnp.zeros((), dtype)}
+    return Aggregate(
+        "sum", init,
+        lambda st, row: {"s": st["s"] + row["x"].astype(dtype)},
+        lambda st: st["s"],
+        merge=lambda a, b: {"s": a["s"] + b["s"]},
+        identity=init)
+
+
+def count_agg() -> Aggregate:
+    def init():
+        return {"n": jnp.zeros((), jnp.int32)}
+    return Aggregate(
+        "count", init,
+        lambda st, row: {"n": st["n"] + 1},
+        lambda st: st["n"],
+        merge=lambda a, b: {"n": a["n"] + b["n"]},
+        identity=init)
+
+
+def min_agg(dtype=F32) -> Aggregate:
+    def identity():
+        return {"m": jnp.array(jnp.inf, dtype)}
+    return Aggregate(
+        "min", identity,
+        lambda st, row: {"m": jnp.minimum(st["m"], row["x"].astype(dtype))},
+        lambda st: st["m"],
+        merge=lambda a, b: {"m": jnp.minimum(a["m"], b["m"])},
+        identity=identity)
+
+
+def max_agg(dtype=F32) -> Aggregate:
+    def identity():
+        return {"m": jnp.array(-jnp.inf, dtype)}
+    return Aggregate(
+        "max", identity,
+        lambda st, row: {"m": jnp.maximum(st["m"], row["x"].astype(dtype))},
+        lambda st: st["m"],
+        merge=lambda a, b: {"m": jnp.maximum(a["m"], b["m"])},
+        identity=identity)
+
+
+def avg_agg(dtype=F32) -> Aggregate:
+    """Average via (sum, count) state — the canonical 'merge needs more
+    state than terminate returns' example."""
+    def init():
+        return {"s": jnp.zeros((), dtype), "n": jnp.zeros((), dtype)}
+    return Aggregate(
+        "avg", init,
+        lambda st, row: {"s": st["s"] + row["x"].astype(dtype),
+                         "n": st["n"] + 1},
+        lambda st: st["s"] / jnp.maximum(st["n"], 1),
+        merge=lambda a, b: {"s": a["s"] + b["s"], "n": a["n"] + b["n"]},
+        identity=init)
+
+
+def argmin_agg(dtype=F32) -> Aggregate:
+    """argmin with payload — the minCostSupp algebra (strict <: first
+    attaining row wins, earlier chunk wins on merge ties)."""
+    def identity():
+        return {"k": jnp.array(jnp.inf, dtype),
+                "p": jnp.zeros((), jnp.int32)}
+    def accumulate(st, row):
+        better = row["key"].astype(dtype) < st["k"]
+        return {"k": jnp.where(better, row["key"].astype(dtype), st["k"]),
+                "p": jnp.where(better, row["payload"], st["p"])}
+    def merge(a, b):
+        take_b = b["k"] < a["k"]
+        return {"k": jnp.where(take_b, b["k"], a["k"]),
+                "p": jnp.where(take_b, b["p"], a["p"])}
+    return Aggregate("argmin", identity, accumulate, lambda st: st["p"],
+                     merge=merge, identity=identity)
+
+
+def var_agg(dtype=F32) -> Aggregate:
+    """Welford/Chan parallel variance — a nontrivial Merge (the class of
+    aggregate the paper's streaming-only engine cannot parallelize but the
+    contract's Merge can)."""
+    def init():
+        return {"n": jnp.zeros((), dtype), "mean": jnp.zeros((), dtype),
+                "m2": jnp.zeros((), dtype)}
+    def accumulate(st, row):
+        n = st["n"] + 1
+        d = row["x"].astype(dtype) - st["mean"]
+        mean = st["mean"] + d / n
+        return {"n": n, "mean": mean,
+                "m2": st["m2"] + d * (row["x"].astype(dtype) - mean)}
+    def merge(a, b):
+        n = a["n"] + b["n"]
+        safe = jnp.maximum(n, 1)
+        d = b["mean"] - a["mean"]
+        mean = (a["n"] * a["mean"] + b["n"] * b["mean"]) / safe
+        m2 = a["m2"] + b["m2"] + d * d * a["n"] * b["n"] / safe
+        return {"n": n, "mean": mean, "m2": m2}
+    return Aggregate("var", init, accumulate,
+                     lambda st: st["m2"] / jnp.maximum(st["n"], 1),
+                     merge=merge, identity=init)
+
+
+BUILTINS = {
+    "sum": sum_agg, "count": count_agg, "min": min_agg, "max": max_agg,
+    "avg": avg_agg, "argmin": argmin_agg, "var": var_agg,
+}

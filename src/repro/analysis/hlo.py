@@ -1,0 +1,241 @@
+"""Trip-count-aware HLO cost analysis.
+
+``compiled.cost_analysis()`` visits each ``while`` body ONCE — a scanned
+64-layer transformer reports ~1/64 of its true FLOPs (verified empirically;
+see EXPERIMENTS.md §Dry-run).  Since the whole framework scans over layers,
+we parse the optimized per-device HLO text and account costs per
+computation, multiplying ``while`` bodies by their trip count (recovered
+from the loop-condition constant).
+
+Accounted:
+  * flops            — dot ops: 2 × |result| × |contracting dims| (plus the
+                       same inside fusions/called computations);
+  * traffic_bytes    — HBM-traffic proxy: operand+result bytes of
+                       materializing ops (fusion, dot, copy, collectives,
+                       dynamic-update-slice, …): post-fusion boundaries are
+                       what actually hits memory;
+  * collective_bytes — per collective kind, result-shape bytes (the data a
+                       chip must move for its shard).
+
+All values are per-device (the compiled module is the per-device SPMD
+program).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1,
+    "f8e5m2": 1, "f8e4m3": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(" + "|".join(_DTYPE_BYTES) + r")\[([\d,]*)\]")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+# Ops whose operand/result bytes approximate TPU HBM traffic.  Two earlier
+# iterations over-counted by orders of magnitude (recorded in EXPERIMENTS.md
+# §Perf methodology): (v1) counting broadcast/reshape/iota — those fuse on
+# TPU; (v2) counting every CPU-backend fusion's I/O — the CPU backend
+# fragments into many tiny fusions re-reading the same tensors.  The stable
+# proxy: tensor-contraction and data-movement ops only — dots (weights +
+# activations), gathers/scatters (embedding, MoE dispatch), sorts (MoE
+# routing), cache updates, convolutions, and collectives.  Elementwise
+# chains fuse into these on TPU and are free at first order.
+_TRAFFIC_OPS = _COLLECTIVES + (
+    "dot", "dynamic-update-slice", "dynamic-slice", "convolution",
+    "scatter", "gather", "sort", "select-and-scatter",
+)
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(tok: str) -> tuple[str, list[int]]:
+    m = _SHAPE_RE.search(tok)
+    if not m:
+        return "", []
+    dims = [int(d) for d in m.group(2).split(",")] if m.group(2) else []
+    return m.group(1), dims
+
+
+@dataclass
+class CompCosts:
+    flops: float = 0.0
+    traffic: float = 0.0
+    collectives: dict = field(default_factory=dict)
+    whiles: list = field(default_factory=list)    # (cond, body, trip|None)
+    calls: list = field(default_factory=list)     # called computation names
+
+
+@dataclass
+class HloCosts:
+    flops: float = 0.0
+    traffic_bytes: float = 0.0
+    collective_bytes: dict = field(default_factory=dict)
+
+    @property
+    def collective_total(self) -> float:
+        return float(sum(self.collective_bytes.values()))
+
+
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(")
+_INSTR = re.compile(r"^\s+(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.*)$")
+_OPERAND_NAME = re.compile(r"%([\w\.\-]+)")
+_CALLEE = re.compile(r"(?:calls|to_apply)=%?([\w\.\-]+)")
+_COND = re.compile(r"condition=%?([\w\.\-]+)")
+_BODY = re.compile(r"body=%?([\w\.\-]+)")
+_CONST_INT = re.compile(r"\b[su]32\[\]\s+constant\((\d+)\)")
+_TRIP = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+
+
+def parse_hlo(text: str) -> tuple[dict[str, CompCosts], str, dict[str, int]]:
+    comps: dict[str, CompCosts] = {}
+    consts: dict[str, list[int]] = {}
+    shapes: dict[str, dict[str, str]] = {}
+    entry = ""
+    cur = None
+    for line in text.splitlines():
+        if not line.startswith((" ", "\t")) and line.rstrip().endswith("{") \
+                and "->" in line:
+            hdr = _COMP_HDR.match(line)
+            if hdr:
+                cur = hdr.group(1)
+                comps[cur] = CompCosts()
+                consts[cur] = []
+                if line.startswith("ENTRY"):
+                    entry = cur
+                continue
+        if cur is None:
+            continue
+        m = _INSTR.match(line)
+        if not m:
+            continue
+        name, rhs = m.group(1), m.group(2)
+        for cm in _CONST_INT.finditer(rhs):
+            consts[cur].append(int(cm.group(1)))
+        # split "TYPE opcode(operands...), attrs"
+        op_m = re.search(r"\)?\s*([a-z][\w\-]*)\(", rhs)
+        if not op_m:
+            continue
+        opcode = op_m.group(1)
+        result_part = rhs[:op_m.start()]
+        operand_part = rhs[op_m.end():]
+        # operand list ends at the first unmatched ')'
+        depth = 0
+        end = len(operand_part)
+        for i, ch in enumerate(operand_part):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                if depth == 0:
+                    end = i
+                    break
+                depth -= 1
+        operand_str = operand_part[:end]
+        # symbol table: scheduled HLO references operands by %name only
+        shapes.setdefault(cur, {})[name] = result_part
+        operand_shapes = [shapes[cur].get(nm, "")
+                          for nm in _OPERAND_NAME.findall(operand_str)]
+        c = comps[cur]
+
+        if opcode == "while":
+            cond = _COND.search(rhs)
+            body = _BODY.search(rhs)
+            trip_m = _TRIP.search(rhs)
+            if cond and body:
+                c.whiles.append((cond.group(1), body.group(1),
+                                 int(trip_m.group(1)) if trip_m else None))
+            continue
+        if opcode in ("call", "fusion", "map", "conditional", "custom-call",
+                      "reduce", "sort", "scatter", "select-and-scatter",
+                      "reduce-window", "reduce-scatter", "all-reduce"):
+            callee = _CALLEE.search(rhs)
+            if callee and opcode in ("call", "conditional"):
+                c.calls.append(callee.group(1))
+            if opcode == "fusion" and callee:
+                c.calls.append(callee.group(1))
+
+        if opcode == "dot":
+            _, res_dims = _shape_dims(result_part)
+            contract = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", rhs)
+            res_n = 1
+            for d in res_dims:
+                res_n *= d
+            k = 1
+            lhs_shape = operand_shapes[0] if operand_shapes else ""
+            _, lhs_dims = _shape_dims(lhs_shape)
+            if contract and lhs_dims:
+                for idx in (contract.group(1).split(",")
+                            if contract.group(1) else []):
+                    k *= lhs_dims[int(idx)]
+            c.flops += 2.0 * res_n * k
+
+        if opcode in _COLLECTIVES:
+            b = _shape_bytes(result_part)
+            c.collectives[opcode] = c.collectives.get(opcode, 0.0) + b
+
+        if opcode in _TRAFFIC_OPS:
+            if opcode in ("dynamic-slice", "gather"):
+                # reads only the sliced region (NOT the whole operand —
+                # counting the full stacked-layer params per scan slice
+                # overstated traffic ~16×), then writes the result
+                c.traffic += 2 * _shape_bytes(result_part)
+            elif opcode == "dynamic-update-slice":
+                upd = operand_shapes[1] if len(operand_shapes) > 1 \
+                    else result_part
+                c.traffic += 2 * _shape_bytes(upd)
+            elif opcode == "scatter":
+                upd = operand_shapes[2] if len(operand_shapes) > 2 \
+                    else result_part
+                c.traffic += 2 * _shape_bytes(upd)
+            else:
+                c.traffic += _shape_bytes(result_part) \
+                    + sum(_shape_bytes(s) for s in operand_shapes)
+
+    trip_consts = {name: (max(v) if v else 1) for name, v in consts.items()}
+    return comps, entry, trip_consts
+
+
+def analyze_hlo(text: str) -> HloCosts:
+    comps, entry, consts = parse_hlo(text)
+
+    memo: dict[str, HloCosts] = {}
+
+    def walk(name: str, depth=0) -> HloCosts:
+        if name in memo:
+            return memo[name]
+        if name not in comps or depth > 64:
+            return HloCosts()
+        memo[name] = HloCosts()          # break cycles
+        c = comps[name]
+        out = HloCosts(flops=c.flops, traffic_bytes=c.traffic,
+                       collective_bytes=dict(c.collectives))
+        for callee in c.calls:
+            sub = walk(callee, depth + 1)
+            out.flops += sub.flops
+            out.traffic_bytes += sub.traffic_bytes
+            for k, v in sub.collective_bytes.items():
+                out.collective_bytes[k] = out.collective_bytes.get(k, 0) + v
+        for cond, body, trip_known in c.whiles:
+            trip = trip_known if trip_known is not None else consts.get(cond, 1)
+            sub = walk(body, depth + 1)
+            out.flops += trip * sub.flops
+            out.traffic_bytes += trip * sub.traffic_bytes
+            for k, v in sub.collective_bytes.items():
+                out.collective_bytes[k] = out.collective_bytes.get(k, 0) \
+                    + trip * v
+        memo[name] = out
+        return out
+
+    return walk(entry)

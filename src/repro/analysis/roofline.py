@@ -1,0 +1,157 @@
+"""Roofline model: compute / memory / collective terms per (arch × shape ×
+mesh), derived from the dry-run artifacts.
+
+Hardware constants (TPU v5e-like, per chip):
+    peak bf16 compute : 197 TFLOP/s
+    HBM bandwidth     : 819 GB/s
+    ICI               : ~50 GB/s per link
+
+Terms (seconds per step, per the assignment's definition):
+    compute    = HLO_FLOPs / (chips × peak)        [= per-device flops/peak]
+    memory     = HLO_bytes / (chips × HBM bw)
+    collective = collective_bytes / (chips × link bw)
+
+Our per-device numbers come from the trip-count-corrected HLO analysis
+(analysis/hlo.py) — ``compiled.cost_analysis()`` visits each scan body once
+and undercounts a 64-layer model by ~64× (both raw and corrected values are
+recorded in the artifacts).
+
+MODEL_FLOPS convention: 6·N·D for training (D = tokens), 2·N·D for
+inference; MoE uses N_active.  The usefulness ratio MODEL_FLOPS/HLO_FLOPs
+exposes remat/recompute waste (flash backward recompute, causal masking
+waste, dead padding).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from dataclasses import dataclass
+from typing import Optional
+
+from repro.configs import SHAPES, get_config
+
+PEAK_FLOPS = 197e12        # bf16 / chip
+HBM_BW = 819e9             # bytes/s / chip
+ICI_BW = 50e9              # bytes/s / link
+
+
+@dataclass
+class RooflineRow:
+    arch: str
+    shape: str
+    mesh: str
+    status: str
+    compute_s: float = 0.0
+    memory_s: float = 0.0
+    collective_s: float = 0.0
+    dominant: str = ""
+    model_flops_per_dev: float = 0.0
+    useful_ratio: float = 0.0
+    hbm_gb: float = 0.0
+    reason: str = ""
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the step bound that is *useful* model compute —
+        (model_flops/peak) / max(term): 1.0 = perfectly compute-bound with
+        zero overhead."""
+        if self.bound_s <= 0:
+            return 0.0
+        return (self.model_flops_per_dev / PEAK_FLOPS) / self.bound_s
+
+
+def model_flops_per_device(arch: str, shape_name: str, chips: int) -> float:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        d = shape.global_batch * shape.seq_len
+        total = 6.0 * n * d
+    elif shape.kind == "prefill":
+        d = shape.global_batch * shape.seq_len
+        total = 2.0 * n * d
+    else:  # decode: one token per sequence
+        total = 2.0 * n * shape.global_batch
+    return total / chips
+
+
+def row_from_artifact(rec: dict) -> RooflineRow:
+    mesh = "2x16x16" if rec.get("multi_pod") else "16x16"
+    if rec.get("status") != "OK":
+        return RooflineRow(rec["arch"], rec["shape"], mesh,
+                           rec.get("status", "FAIL"),
+                           reason=rec.get("reason", rec.get("error", "")))
+    chips = rec["chips"]
+    hlo = rec["hlo_per_device"]
+    compute_s = hlo["flops"] / PEAK_FLOPS
+    memory_s = hlo["traffic_bytes"] / HBM_BW
+    collective_s = hlo["collective_total"] / ICI_BW
+    mf = model_flops_per_device(rec["arch"], rec["shape"], chips)
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    hbm = (rec["memory"]["argument_bytes"] + rec["memory"]["temp_bytes"]
+           + rec["memory"]["output_bytes"]
+           - rec["memory"]["alias_bytes"]) / 1e9
+    return RooflineRow(
+        arch=rec["arch"], shape=rec["shape"], mesh=mesh, status="OK",
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        dominant=dominant, model_flops_per_dev=mf,
+        useful_ratio=mf / hlo["flops"] if hlo["flops"] else 0.0,
+        hbm_gb=hbm)
+
+
+def load_rows(art_dir: str) -> list[RooflineRow]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
+        with open(path) as f:
+            rows.append(row_from_artifact(json.load(f)))
+    return rows
+
+
+def _fmt_s(x: float) -> str:
+    if x == 0:
+        return "0"
+    if x < 1e-3:
+        return f"{x*1e6:.0f}µs"
+    if x < 1:
+        return f"{x*1e3:.1f}ms"
+    return f"{x:.2f}s"
+
+
+def render_table(rows: list[RooflineRow], mesh: Optional[str] = "16x16") -> str:
+    out = ["| arch | shape | compute | memory | collective | dominant | "
+           "useful | roofline frac | HBM GB | status |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if mesh and r.mesh != mesh:
+            continue
+        if r.status != "OK":
+            out.append(f"| {r.arch} | {r.shape} | | | | | | | | "
+                       f"{r.status}: {r.reason[:60]} |")
+            continue
+        out.append(
+            f"| {r.arch} | {r.shape} | {_fmt_s(r.compute_s)} | "
+            f"{_fmt_s(r.memory_s)} | {_fmt_s(r.collective_s)} | "
+            f"{r.dominant} | {r.useful_ratio:.2f} | "
+            f"{r.roofline_fraction:.3f} | {r.hbm_gb:.1f} | OK |")
+    return "\n".join(out)
+
+
+def main() -> None:
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--art", default="artifacts/dryrun")
+    ap.add_argument("--mesh", default="16x16")
+    args = ap.parse_args()
+    rows = load_rows(args.art)
+    print(render_table(rows, None if args.mesh == "all" else args.mesh))
+
+
+if __name__ == "__main__":
+    main()

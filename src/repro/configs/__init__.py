@@ -1,0 +1,25 @@
+"""repro.configs — one module per assigned architecture (exact public
+configs) + the shape grid.  ``get_config(arch_id)`` resolves by public id;
+``reduced`` variants drive the CPU smoke tests."""
+from .base import SHAPES, ArchConfig, ShapeSpec, supports_shape
+
+from . import (command_r_35b, h2o_danube_1_8b, hymba_1_5b,
+               llama3_2_vision_90b, llama4_scout_17b_a16e, mamba2_2_7b,
+               olmoe_1b_7b, qwen1_5_32b, qwen3_14b, whisper_small)
+
+_MODULES = [qwen1_5_32b, qwen3_14b, h2o_danube_1_8b, command_r_35b,
+            llama3_2_vision_90b, olmoe_1b_7b, llama4_scout_17b_a16e,
+            mamba2_2_7b, hymba_1_5b, whisper_small]
+
+CONFIGS = {m.CONFIG.arch_id: m.CONFIG for m in _MODULES}
+ARCH_IDS = tuple(CONFIGS)
+
+
+def get_config(arch_id: str) -> ArchConfig:
+    if arch_id not in CONFIGS:
+        raise KeyError(f"unknown arch {arch_id!r}; available: {ARCH_IDS}")
+    return CONFIGS[arch_id]
+
+
+__all__ = ["SHAPES", "ArchConfig", "ShapeSpec", "supports_shape",
+           "CONFIGS", "ARCH_IDS", "get_config"]

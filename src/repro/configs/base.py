@@ -1,0 +1,148 @@
+"""Architecture + shape configuration system."""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Optional
+
+
+@dataclass(frozen=True)
+class ArchConfig:
+    arch_id: str
+    family: str                 # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    d_head: int = 0             # 0 → d_model // n_heads
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    sliding_window: int = 0     # 0 = full attention
+    rope_theta: float = 1e4
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    # SSM
+    ssm_state: int = 0
+    ssm_headdim: int = 64
+    ssm_expand: int = 2
+    conv_width: int = 4
+    # VLM (cross-attention image layers)
+    cross_attn_every: int = 0   # every Nth layer is a cross-attn layer
+    n_img_tokens: int = 0
+    # encoder-decoder (audio)
+    enc_layers: int = 0
+    enc_seq: int = 0            # stub frontend sequence (whisper: 1500 frames)
+    norm: str = "rms"           # rms | ln
+    tie_embeddings: bool = False
+    source: str = ""            # provenance tag [source; verified-tier]
+
+    @property
+    def head_dim(self) -> int:
+        if self.d_head:
+            return self.d_head
+        return self.d_model // self.n_heads if self.n_heads else 0
+
+    @property
+    def attn_free(self) -> bool:
+        return self.family == "ssm"
+
+    def reduced(self) -> "ArchConfig":
+        """Same-family smoke config: tiny widths/depths, preserved structure
+        (GQA ratio, MoE routing, SSD shapes, cross-attn cadence)."""
+        kv = max(1, min(self.n_kv_heads, 2))
+        heads = kv * max(1, min(self.n_heads // max(self.n_kv_heads, 1), 2))
+        return dataclasses.replace(
+            self,
+            n_layers=min(self.n_layers, 4 if self.cross_attn_every else 2),
+            d_model=64,
+            n_heads=heads,
+            n_kv_heads=kv,
+            d_head=16,
+            d_ff=96 if self.d_ff else 0,
+            vocab=128,
+            n_experts=min(self.n_experts, 4) if self.n_experts else 0,
+            top_k=min(self.top_k, 2) if self.top_k else 0,
+            ssm_state=min(self.ssm_state, 8) if self.ssm_state else 0,
+            ssm_headdim=16 if self.ssm_state else 64,
+            sliding_window=min(self.sliding_window, 16) if self.sliding_window else 0,
+            cross_attn_every=self.cross_attn_every and 2,
+            n_img_tokens=min(self.n_img_tokens, 8) if self.n_img_tokens else 0,
+            enc_layers=min(self.enc_layers, 2) if self.enc_layers else 0,
+            enc_seq=min(self.enc_seq, 16) if self.enc_seq else 0,
+        )
+
+    def param_count(self) -> int:
+        """Analytic parameter count (for MODEL_FLOPS = 6·N·D)."""
+        d, ff, v = self.d_model, self.d_ff, self.vocab
+        h, kv, dh = self.n_heads, self.n_kv_heads, self.head_dim
+        attn = d * (h + 2 * kv) * dh + h * dh * d
+        mlp = 3 * d * ff if ff else 0
+        n = 0
+        if self.family == "ssm":
+            d_inner = self.ssm_expand * d
+            nh = d_inner // self.ssm_headdim
+            per = d * (2 * d_inner + 2 * self.ssm_state + nh) \
+                + self.conv_width * (d_inner + 2 * self.ssm_state) \
+                + d_inner * d + 2 * d
+            n = self.n_layers * per
+        elif self.family == "moe":
+            per = attn + 3 * d * ff * self.n_experts + d * self.n_experts + 2 * d
+            n = self.n_layers * per
+        elif self.family == "hybrid":
+            d_inner = self.ssm_expand * d
+            nh = d_inner // self.ssm_headdim
+            ssm = d * (2 * d_inner + 2 * self.ssm_state + nh) \
+                + self.conv_width * (d_inner + 2 * self.ssm_state) + d_inner * d
+            n = self.n_layers * (attn + ssm + mlp + 2 * d)
+        elif self.family == "vlm":
+            n_cross = self.n_layers // self.cross_attn_every
+            n_self = self.n_layers - n_cross
+            n = n_self * (attn + mlp + 2 * d) + n_cross * (attn + mlp + 2 * d)
+        elif self.family == "audio":
+            n = (self.enc_layers * (attn + mlp + 2 * d)
+                 + self.n_layers * (2 * attn + mlp + 3 * d))
+        else:
+            n = self.n_layers * (attn + mlp + 2 * d)
+        n += v * d * (1 if self.tie_embeddings else 2)
+        return n
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: only routed experts)."""
+        if self.family != "moe":
+            return self.param_count()
+        d, ff = self.d_model, self.d_ff
+        h, kv, dh = self.n_heads, self.n_kv_heads, self.head_dim
+        attn = d * (h + 2 * kv) * dh + h * dh * d
+        per = attn + 3 * d * ff * self.top_k + d * self.n_experts + 2 * d
+        return self.n_layers * per + self.vocab * d * (1 if self.tie_embeddings else 2)
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str          # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524288, 1),
+}
+
+
+def supports_shape(cfg: ArchConfig, shape: ShapeSpec) -> tuple[bool, str]:
+    """long_500k needs sub-quadratic attention: run for SSM / hybrid /
+    sliding-window archs, skip for pure full-attention archs (documented in
+    DESIGN.md §5)."""
+    if shape.name == "long_500k":
+        if cfg.family in ("ssm", "hybrid") or cfg.sliding_window:
+            return True, ""
+        return False, ("full attention: 500k decode KV exceeds the "
+                       "sub-quadratic requirement; skipped per assignment")
+    return True, ""

@@ -1,0 +1,11 @@
+"""h2o-danube-1.8b [dense] — llama+mistral mix, sliding-window attention.
+[arXiv:2401.16818; hf]"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    arch_id="h2o-danube-1.8b", family="dense",
+    n_layers=24, d_model=2560, n_heads=32, n_kv_heads=8,
+    d_ff=6912, vocab=32000, d_head=80,
+    sliding_window=4096, rope_theta=1e4,
+    source="[arXiv:2401.16818; hf]",
+)

@@ -1,0 +1,12 @@
+"""hymba-1.5b [hybrid] — parallel attention + mamba heads per layer, SWA
+on the attention path, ssm_state=16.  [arXiv:2411.13676; hf]"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    arch_id="hymba-1.5b", family="hybrid",
+    n_layers=32, d_model=1600, n_heads=25, n_kv_heads=5,
+    d_ff=5504, vocab=32001, d_head=64,
+    sliding_window=1024,
+    ssm_state=16, ssm_headdim=64, ssm_expand=2, conv_width=4,
+    source="[arXiv:2411.13676; hf]",
+)

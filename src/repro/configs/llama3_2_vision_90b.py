@@ -1,0 +1,12 @@
+"""llama-3.2-vision-90b [vlm] — cross-attn image layers every 5th layer;
+patch-embedding frontend is a STUB (input_specs supplies image-token
+embeddings).  [hf:meta-llama/Llama-3.2-11B-Vision; unverified]"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    arch_id="llama-3.2-vision-90b", family="vlm",
+    n_layers=100, d_model=8192, n_heads=64, n_kv_heads=8,
+    d_ff=28672, vocab=128256, d_head=128,
+    cross_attn_every=5, n_img_tokens=1600, rope_theta=5e5,
+    source="[hf:meta-llama/Llama-3.2-11B-Vision; unverified]",
+)

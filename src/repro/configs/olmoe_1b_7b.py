@@ -1,0 +1,11 @@
+"""olmoe-1b-7b [moe] — 64 experts, top-8, expert d_ff=1024.
+[arXiv:2409.02060; hf]"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    arch_id="olmoe-1b-7b", family="moe",
+    n_layers=16, d_model=2048, n_heads=16, n_kv_heads=16,
+    d_ff=1024, vocab=50304, d_head=128,
+    n_experts=64, top_k=8, qk_norm=True, rope_theta=1e4,
+    source="[arXiv:2409.02060; hf]",
+)

@@ -1,0 +1,13 @@
+"""whisper-small [audio] — encoder-decoder; conv frontend is a STUB
+(input_specs supplies precomputed frame embeddings, 1500 frames).
+[arXiv:2212.04356; unverified]"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    arch_id="whisper-small", family="audio",
+    n_layers=12, d_model=768, n_heads=12, n_kv_heads=12,
+    d_ff=3072, vocab=51865, d_head=64,
+    enc_layers=12, enc_seq=1500, norm="ln", rope_theta=0.0,
+    tie_embeddings=True,
+    source="[arXiv:2212.04356; unverified]",
+)

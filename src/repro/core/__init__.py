@@ -1,0 +1,31 @@
+"""repro.core — Aggify: cursor-loop → custom-aggregate compilation (the
+paper's contribution), plus the aggregation contract and its parallel
+execution combinators used across the framework (relational engine, decode
+attention, SSD scan, MoE dispatch)."""
+from .aggregate import (Aggregate, associative_scan, chunked, shard_merge,
+                        streaming, tree_reduce)
+from .aggify import (AggifyAnalysis, CustomAggregate, NotAggifyable,
+                     RewrittenProgram, aggify, analyze_loop, build_aggregate,
+                     check_applicability, exec_stmts, is_aggifyable)
+from .cfg import CFG, FETCH_STATUS
+from .code_motion import apply_acyclic_code_motion
+from .dataflow import analyze
+from .executors import (agg_call_values, execute_agg_call, grouped_agg_call,
+                        run_aggify, run_cursor, run_rewritten)
+from .for_loops import rewrite_for
+from .loop_ir import (Assign, BinOp, Call, Col, Const, CursorLoop, Expr,
+                      ForLoop, If, InsertLocal, Program, Stmt, UnOp, Var,
+                      Where, let, maximum, minimum, wrap)
+
+__all__ = [
+    "Aggregate", "associative_scan", "chunked", "shard_merge", "streaming",
+    "tree_reduce", "AggifyAnalysis", "CustomAggregate", "NotAggifyable",
+    "RewrittenProgram", "aggify", "analyze_loop", "build_aggregate",
+    "check_applicability", "exec_stmts", "is_aggifyable", "CFG",
+    "FETCH_STATUS", "apply_acyclic_code_motion", "analyze",
+    "agg_call_values", "execute_agg_call", "grouped_agg_call", "run_aggify",
+    "run_cursor", "run_rewritten", "rewrite_for", "Assign", "BinOp", "Call",
+    "Col", "Const", "CursorLoop", "Expr", "ForLoop", "If", "InsertLocal",
+    "Program", "Stmt", "UnOp", "Var", "Where", "let", "maximum", "minimum",
+    "wrap",
+]

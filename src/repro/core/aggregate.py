@@ -1,0 +1,207 @@
+"""The aggregation contract (paper §3.1) as a first-class JAX object, plus
+the execution combinators that realize its parallelism:
+
+  * ``streaming``      — sequential ``lax.scan`` over rows (the *Streaming
+                         Aggregate* physical operator of Eq. 6).
+  * ``chunked``        — rows split into C chunks; per-chunk sequential
+                         ``accumulate`` runs in parallel (vmap), partials
+                         combined with ``merge``.  Because chunks partition
+                         the input *in order* and merge respects chunk
+                         order, this is valid for ordered aggregates too —
+                         the Merge-based intra-query parallelism of §3.1
+                         extended beyond the paper's streaming-only engine.
+  * ``tree_reduce``    — log-depth merge tree of per-row states (for cheap
+                         accumulate; fully vectorized lift).
+  * ``shard_merge``    — cross-device partial aggregation: local accumulate
+                         on each shard + ICI merge (used by flash-decode /
+                         sequence-parallel attention and by grouped EP
+                         aggregation).
+
+State is any pytree.  ``merge`` is optional, exactly as in the paper: a
+merge-less aggregate can only execute as a streaming aggregate.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+PyTree = Any
+
+
+@dataclass(frozen=True)
+class Aggregate:
+    """init/accumulate/merge/terminate — the custom-aggregate contract.
+
+    init:       (init_args) -> state
+    accumulate: (state, row) -> state          (row: pytree of per-row values)
+    merge:      (state, state) -> state | None  (optional; None => stream-only)
+    terminate:  (state) -> result
+    identity:   optional () -> state that is a left/right identity of merge;
+                required by tree_reduce / shard_merge when padding exists.
+    """
+    name: str
+    init: Callable[..., PyTree]
+    accumulate: Callable[[PyTree, PyTree], PyTree]
+    terminate: Callable[[PyTree], PyTree]
+    merge: Optional[Callable[[PyTree, PyTree], PyTree]] = None
+    identity: Optional[Callable[[], PyTree]] = None
+
+    @property
+    def mergeable(self) -> bool:
+        return self.merge is not None
+
+
+# ---------------------------------------------------------------------------
+# Execution combinators
+# ---------------------------------------------------------------------------
+
+
+def streaming(agg: Aggregate, rows: PyTree, valid: Optional[jax.Array] = None,
+              *init_args) -> PyTree:
+    """Sequential fold over the leading axis of ``rows`` (Eq. 6 semantics).
+    ``valid`` masks padded rows (skipped: state passes through)."""
+    state0 = agg.init(*init_args)
+
+    def step(state, xs):
+        if valid is None:
+            row = xs
+            new = agg.accumulate(state, row)
+        else:
+            row, ok = xs
+            new = agg.accumulate(state, row)
+            new = jax.tree.map(lambda a, b: jnp.where(ok, a, b), new, state)
+        return new, None
+
+    xs = rows if valid is None else (rows, valid)
+    state, _ = lax.scan(step, state0, xs)
+    return agg.terminate(state)
+
+
+def chunked(agg: Aggregate, rows: PyTree, valid: Optional[jax.Array] = None,
+            *init_args, num_chunks: int = 8) -> PyTree:
+    """Parallel partial aggregation: C per-chunk streaming folds (vmapped)
+    + an ordered merge of the C partial states.
+
+    Chunk 0 starts from ``init(*init_args)``; chunks 1..C-1 start from the
+    merge identity, so ``merge(p0, p1, ..., p_{C-1})`` (left fold, in chunk
+    order) equals the sequential fold.  Requires ``merge`` + ``identity``.
+    """
+    if agg.merge is None or agg.identity is None:
+        raise ValueError(f"aggregate {agg.name!r} is not mergeable; "
+                         "only streaming execution is available")
+    leaves = jax.tree.leaves(rows)
+    n = leaves[0].shape[0] if leaves else valid.shape[0]
+    num_chunks = max(1, min(num_chunks, n))
+    pad = (-n) % num_chunks
+    if pad:
+        def _pad(x):
+            cfg = [(0, pad)] + [(0, 0)] * (x.ndim - 1)
+            return jnp.pad(x, cfg)
+        rows = jax.tree.map(_pad, rows)
+        v = jnp.arange(n + pad) < n
+        valid = v if valid is None else jnp.concatenate([valid, jnp.zeros(pad, bool)]) & v
+    elif valid is None:
+        valid = jnp.ones(n, dtype=bool)
+    m = (n + pad) // num_chunks
+    rows_c = jax.tree.map(lambda x: x.reshape((num_chunks, m) + x.shape[1:]), rows)
+    valid_c = valid.reshape(num_chunks, m)
+
+    ident = agg.identity()
+
+    def fold_chunk(chunk_rows, chunk_valid):
+        def step(state, xs):
+            row, ok = xs
+            new = agg.accumulate(state, row)
+            return jax.tree.map(lambda a, b: jnp.where(ok, a, b), new, state), None
+        state, _ = lax.scan(step, ident, (chunk_rows, chunk_valid))
+        return state
+
+    partials = jax.vmap(fold_chunk)(rows_c, valid_c)
+
+    # ordered left-fold merge of the C partials, seeded with init state
+    state0 = agg.init(*init_args)
+
+    def merge_step(acc, part):
+        return agg.merge(acc, part), None
+
+    state, _ = lax.scan(merge_step, state0,
+                        jax.tree.map(lambda x: x, partials))
+    return agg.terminate(state)
+
+
+def tree_reduce(agg: Aggregate, rows: PyTree, valid: Optional[jax.Array] = None,
+                *init_args) -> PyTree:
+    """Fully vectorized lift: per-row singleton states merged in a log-depth
+    tree.  Valid only for *commutative-enough* merges or order-respecting
+    reductions (the tree preserves left-to-right order)."""
+    if agg.merge is None or agg.identity is None:
+        raise ValueError(f"aggregate {agg.name!r} is not mergeable")
+    ident = agg.identity()
+
+    def lift(row, ok):
+        st = agg.accumulate(ident, row)
+        return jax.tree.map(lambda a, b: jnp.where(ok, a, b), st, ident)
+
+    leaves = jax.tree.leaves(rows)
+    n = leaves[0].shape[0] if leaves else valid.shape[0]
+    v = jnp.ones(n, dtype=bool) if valid is None else valid
+    states = jax.vmap(lift)(rows, v)
+
+    # pad to a power of two with identities, then log-depth pairwise merge
+    size = 1
+    while size < n:
+        size *= 2
+    pad = size - n
+    if pad:
+        states = jax.tree.map(
+            lambda x, i: jnp.concatenate(
+                [x, jnp.broadcast_to(jnp.asarray(i)[None], (pad,) + jnp.asarray(i).shape)], 0),
+            states, ident)
+    while size > 1:
+        half = size // 2
+        a = jax.tree.map(lambda x: x[0:2 * half:2], states)
+        b = jax.tree.map(lambda x: x[1:2 * half:2], states)
+        states = jax.vmap(agg.merge)(a, b)
+        size = half
+    final = jax.tree.map(lambda x: x[0], states)
+    state0 = agg.init(*init_args)
+    final = agg.merge(state0, final)
+    return agg.terminate(final)
+
+
+def associative_scan(agg: Aggregate, rows: PyTree,
+                     *init_args) -> PyTree:
+    """All-prefix aggregation (returns terminate() of every prefix state).
+    Requires an associative merge.  Used by SSD-style ordered aggregates."""
+    if agg.merge is None or agg.identity is None:
+        raise ValueError(f"aggregate {agg.name!r} is not mergeable")
+    ident = agg.identity()
+    states = jax.vmap(lambda r: agg.accumulate(ident, r))(rows)
+    prefix = lax.associative_scan(jax.vmap(agg.merge), states)
+    state0 = agg.init(*init_args)
+    prefix = jax.vmap(lambda p: agg.merge(state0, p))(prefix)
+    return jax.vmap(agg.terminate)(prefix)
+
+
+def shard_merge(agg: Aggregate, local_state: PyTree, axis_name: str) -> PyTree:
+    """Cross-device partial aggregation: all-gather the per-shard partial
+    states over ``axis_name`` and left-fold ``merge`` in shard order.
+    Called inside shard_map.  For order-insensitive merges XLA will pattern
+    this into an all-reduce-shaped schedule."""
+    if agg.merge is None:
+        raise ValueError(f"aggregate {agg.name!r} is not mergeable")
+    gathered = jax.tree.map(
+        lambda x: lax.all_gather(x, axis_name, axis=0), local_state)
+    size = lax.psum(1, axis_name)
+
+    def body(i, acc):
+        part = jax.tree.map(lambda g: g[i], gathered)
+        return agg.merge(acc, part)
+
+    first = jax.tree.map(lambda g: g[0], gathered)
+    return lax.fori_loop(1, size, body, first)

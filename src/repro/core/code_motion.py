@@ -1,0 +1,142 @@
+"""§8.1 — Acyclic code motion.
+
+Beyond classical loop-invariant code motion, the paper hoists *loop-variant*
+expressions out of the loop body into the cursor query Q, provided the
+expression involves no variable written in the loop body ("acyclic").  Two
+transformations are implemented:
+
+1. **Guard-to-WHERE**: when the loop body is a single guarded update
+   ``If(c1 ∧ c2 ∧ …, S)``, every conjunct whose variables are all acyclic
+   (fetch vars or loop-invariant program vars) moves into Q's WHERE clause —
+   the paper's own example hoists ``@pCost > @lb`` out of Figure 1.  Fetch
+   variables become column references; invariant vars remain Var references
+   bound from the enclosing program (the engine's correlated-parameter
+   mechanism).
+
+2. **Expression-to-projection**: maximal acyclic subexpressions of body
+   assignments that reference at least one fetch variable are computed in Q
+   as projected columns; the body reads the precomputed column.  This
+   exposes the arithmetic to the set-oriented engine (vector units) and
+   shrinks Accumulate — the paper's "expose more operations to the query
+   optimizer".
+"""
+from __future__ import annotations
+
+from dataclasses import replace
+from typing import Optional
+
+from repro.relational.plan import Project, push_filter, strip_order
+
+from .loop_ir import (Assign, BinOp, Col, CursorLoop, Expr, If, Program, Stmt,
+                      UnOp, Var, Where, assigned_vars, expr_cols, expr_vars,
+                      vars_to_cols)
+from .recognize import split_conjuncts, _conjoin
+
+
+def apply_acyclic_code_motion(prog: Program,
+                              hoist_guards: bool = True,
+                              hoist_exprs: bool = True) -> Program:
+    loop = prog.loop
+    if not isinstance(loop, CursorLoop):
+        return prog
+    body = list(loop.body)
+    q = loop.query
+    fetch_map = dict(loop.fetch)          # var -> column
+    written = assigned_vars(body)
+    acyclic_vars = set(fetch_map)         # fetch vars are per-row (column) refs
+
+    def is_acyclic(e: Expr) -> bool:
+        return not (expr_vars(e) & written)
+
+    # ---- 1. guard-to-WHERE -------------------------------------------------
+    if hoist_guards and len(body) == 1 and isinstance(body[0], If) \
+            and not body[0].orelse:
+        guard = body[0]
+        conjs = split_conjuncts(guard.cond)
+        hoisted = [c for c in conjs if is_acyclic(c)]
+        kept = [c for c in conjs if not is_acyclic(c)]
+        if hoisted:
+            pred = _conjoin([_to_query_expr(c, fetch_map) for c in hoisted])
+            child, keys, desc = strip_order(q)
+            child = push_filter(child, pred)
+            q = _reorder(child, keys, desc)
+            if kept:
+                body = [If(_conjoin(kept), guard.then)]
+            else:
+                body = list(guard.then)
+
+    # ---- 2. expression-to-projection ---------------------------------------
+    if hoist_exprs:
+        proj: dict[str, Expr] = {}
+        counter = [0]
+
+        def hoist(e: Expr) -> Expr:
+            if _worth_hoisting(e, is_acyclic, set(fetch_map)):
+                name = f"__acm_{counter[0]}"
+                counter[0] += 1
+                proj[name] = _to_query_expr(e, fetch_map)
+                return Var(name)   # bound per-row via the extended FETCH
+            if isinstance(e, BinOp):
+                return BinOp(e.op, hoist(e.lhs), hoist(e.rhs))
+            if isinstance(e, UnOp):
+                return UnOp(e.op, hoist(e.operand))
+            if isinstance(e, Where):
+                return Where(hoist(e.cond), hoist(e.t), hoist(e.f))
+            return e
+
+        new_body = [_map_exprs(s, hoist) for s in body]
+        if proj:
+            child, keys, desc = strip_order(q)
+            passthrough = {c: Col(c) for c in child.columns}
+            passthrough.update(proj)
+            child = Project(child, tuple(passthrough.items()))
+            q = _reorder(child, keys, desc)
+            body = new_body
+            # extend the fetch binding with the precomputed columns
+            fetch = tuple(loop.fetch) + tuple(
+                (name, name) for name in proj)
+            new_loop = CursorLoop(q, fetch, body)
+            return Program(prog.name, prog.params, prog.pre, new_loop,
+                           prog.post, prog.returns, prog.var_dtypes,
+                           prog.local_tables)
+
+    new_loop = CursorLoop(q, loop.fetch, body)
+    return Program(prog.name, prog.params, prog.pre, new_loop, prog.post,
+                   prog.returns, prog.var_dtypes, prog.local_tables)
+
+
+def _reorder(child, keys, desc):
+    if not keys:
+        return child
+    from repro.relational.plan import OrderBy
+    return OrderBy(child, keys, desc)
+
+
+def _to_query_expr(e: Expr, fetch_map: dict[str, str]) -> Expr:
+    """Var(v in fetch) -> Col(column); other Vars stay (correlated params)."""
+    from .loop_ir import substitute
+    return substitute(e, {v: Col(c) for v, c in fetch_map.items()})
+
+
+def _worth_hoisting(e: Expr, is_acyclic, fetch_vars: set[str]) -> bool:
+    """Hoist maximal acyclic *compound* expressions that touch ≥1 fetch var
+    (pure-invariant expressions are loop-invariant code motion and are left
+    to the scalar env — they're already computed once)."""
+    if not isinstance(e, (BinOp, UnOp, Where)):
+        return False
+    if not is_acyclic(e):
+        return False
+    vs = expr_vars(e)
+    return bool(vs & fetch_vars)
+
+
+def _map_exprs(s: Stmt, fn) -> Stmt:
+    if isinstance(s, Assign):
+        return Assign(s.var, fn(s.expr))
+    if isinstance(s, If):
+        return If(fn(s.cond), tuple(_map_exprs(x, fn) for x in s.then),
+                  tuple(_map_exprs(x, fn) for x in s.orelse))
+    from .loop_ir import InsertLocal
+    if isinstance(s, InsertLocal):
+        return InsertLocal(s.table_var, tuple(fn(e) for e in s.values))
+    raise TypeError(type(s))

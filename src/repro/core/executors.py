@@ -1,0 +1,398 @@
+"""Executors: the faithful cursor baselines and the Aggify execution paths.
+
+Baselines (paper §2.3 — what Aggify eliminates):
+  * ``run_cursor(interpreted=True)``  — host-driven row-at-a-time evaluation
+    (the client/JDBC or interpreted T-SQL model: per-row dispatch overhead).
+  * ``run_cursor()``                  — in-engine sequential loop: the cursor
+    query is **materialized** (temp table barrier), then folded row-by-row
+    with ``lax.scan``.
+
+Aggify paths (§5/§6 + our beyond-paper parallel modes):
+  * ``mode='stream'``     — Eq. 6 streaming aggregate (sequential, pipelined,
+                            no temp table).  Always available.
+  * ``mode='chunked'``    — Merge-parallel partial aggregation (synthesized
+                            merge; see recognize.py).
+  * ``mode='recognized'`` — fully set-oriented closed form (no scan at all).
+  * ``mode='auto'``       — recognized > chunked > stream.
+
+Grouped invocation (``AggCall.group_keys``) decorrelates per-group loops
+(the paper's Q2/minCostSupp-per-part pattern) into a single pass — either
+segment-vectorized (recognized) or one segmented scan (generic).
+"""
+from __future__ import annotations
+
+from typing import Any, Mapping, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.relational import engine as _engine
+from repro.relational.plan import AggCall
+from repro.relational.table import Table
+
+from . import recognize as _recognize
+from .aggify import CustomAggregate, RewrittenProgram, aggify, exec_stmts
+from .loop_ir import (Assign, Col, CursorLoop, Program, Var, assigned_vars,
+                      eval_expr)
+
+
+# ---------------------------------------------------------------------------
+# Environment setup
+# ---------------------------------------------------------------------------
+
+
+def _default_for(prog, name):
+    dt = prog.var_dtypes.get(name, jnp.float32)
+    return jnp.zeros((), dtype=dt)
+
+
+def build_env(prog, catalog, params: Optional[Mapping[str, Any]] = None) -> dict:
+    env: dict[str, Any] = {}
+    for p in prog.params:
+        if params is None or p not in params:
+            raise ValueError(f"missing parameter {p!r}")
+        env[p] = jnp.asarray(params[p])
+    for tv, (dtypes, cap) in prog.local_tables.items():
+        bufs = tuple(jnp.zeros((cap,), dtype=d) for d in dtypes)
+        env[tv] = (bufs, jnp.array(0, jnp.int32))
+    env = exec_stmts(prog.pre, env)
+    return env
+
+
+# ---------------------------------------------------------------------------
+# Cursor baselines
+# ---------------------------------------------------------------------------
+
+
+def run_cursor(prog: Program, catalog, params=None, interpreted: bool = False):
+    """Reference semantics: materialize Q, iterate Δ row-by-row."""
+    env = build_env(prog, catalog, params)
+    loop = prog.loop
+    assert isinstance(loop, CursorLoop)
+    t = _engine.execute(loop.query, catalog, env)
+    t = t.compress().materialize()       # the temp-table barrier (§2.3)
+
+    rows = {v: t.columns[c] for v, c in loop.fetch}
+    valid = t.mask()
+    state_vars = sorted(assigned_vars(loop.body))
+    state0 = {v: env[v] if v in env else _default_for(prog, v)
+              for v in state_vars}
+
+    if interpreted:
+        import numpy as np
+        n = int(np.asarray(jnp.sum(valid)))
+        st = dict(state0)
+        for i in range(n):
+            e = dict(env); e.update(st)
+            e.update({v: jax.tree.map(lambda a: a[i], c)
+                      for v, c in rows.items()})
+            e2 = exec_stmts(loop.body, e)
+            st = {v: e2[v] for v in state_vars}
+        env.update(st)
+    else:
+        def step(state, xs):
+            row, ok = xs
+            e = dict(env); e.update(state); e.update(row)
+            e2 = exec_stmts(loop.body, dict(e))
+            new = {v: e2[v] for v in state_vars}
+            new = jax.tree.map(lambda a, b: jnp.where(ok, a, b), new, state)
+            return new, None
+
+        final, _ = lax.scan(step, state0, (rows, valid))
+        env.update(final)
+
+    env = exec_stmts(prog.post, env)
+    return {r: env[r] for r in prog.returns}
+
+
+# ---------------------------------------------------------------------------
+# Rewritten execution
+# ---------------------------------------------------------------------------
+
+
+def run_rewritten(rp: RewrittenProgram, catalog, params=None,
+                  mode: Optional[str] = None, deferred_init: bool = False,
+                  num_chunks: int = 8):
+    env: dict[str, Any] = {}
+    for p in rp.params:
+        if params is None or p not in params:
+            raise ValueError(f"missing parameter {p!r}")
+        env[p] = jnp.asarray(params[p])
+    agg = rp.aggregate
+    for tv, (dtypes, cap) in agg.local_tables.items():
+        bufs = tuple(jnp.zeros((cap,), dtype=d) for d in dtypes)
+        env[tv] = (bufs, jnp.array(0, jnp.int32))
+    env = exec_stmts(rp.pre, env)
+
+    call = rp.agg_call if mode is None else AggCall(
+        rp.agg_call.child, rp.agg_call.aggregate, rp.agg_call.param_binding,
+        rp.agg_call.ordered, rp.agg_call.sort_keys, rp.agg_call.sort_desc,
+        rp.agg_call.group_keys, mode)
+    vals = agg_call_values(call, catalog, env, deferred_init=deferred_init,
+                           num_chunks=num_chunks, var_dtypes=rp.var_dtypes)
+    env.update(vals)
+    env = exec_stmts(rp.post, env)
+    return {r: env[r] for r in rp.returns}
+
+
+def run_aggify(prog: Program, catalog, params=None, mode: str = "auto",
+               deferred_init: bool = False, num_chunks: int = 8):
+    """Convenience: Algorithm 1 + execute."""
+    rp = aggify(prog, mode=mode)
+    return run_rewritten(rp, catalog, params, deferred_init=deferred_init,
+                         num_chunks=num_chunks)
+
+
+# ---------------------------------------------------------------------------
+# AggCall evaluation
+# ---------------------------------------------------------------------------
+
+
+def _resolve_mode(call: AggCall, agg: CustomAggregate,
+                  deferred_init: bool) -> str:
+    mode = call.mode
+    if deferred_init:
+        return "stream"
+    if mode == "auto":
+        if agg.recognized is not None and not agg.local_tables:
+            return "recognized"
+        if agg.mergeable:
+            return "chunked"
+        return "stream"
+    if mode == "recognized" and agg.recognized is None:
+        raise ValueError(f"aggregate {agg.name!r} not recognized; cannot "
+                         "run in recognized mode")
+    if mode == "chunked" and not agg.mergeable:
+        raise ValueError(f"aggregate {agg.name!r} has no merge")
+    return mode
+
+
+def agg_call_values(call: AggCall, catalog, env, deferred_init=False,
+                    num_chunks: int = 8, var_dtypes=None) -> dict[str, Any]:
+    """Evaluate 𝒢_{AggΔ}(Q) (ungrouped) → {V_term var: value}."""
+    if call.group_keys:
+        raise ValueError("grouped AggCall: use execute_agg_call / engine")
+    agg: CustomAggregate = call.aggregate
+    t = _engine.execute(call.child, catalog, env)
+    if call.ordered:
+        t = t.sort_by(call.sort_keys, call.sort_desc)
+
+    rows: dict[str, jax.Array] = {}
+    outer_vals: dict[str, Any] = {}
+    for name, e in call.param_binding:
+        if isinstance(e, Col):
+            rows[name] = t.columns[e.name]
+        else:
+            outer_vals[name] = eval_expr(e, env)
+    for f in agg.fields:
+        if f in env:
+            outer_vals.setdefault(f, env[f])
+        else:
+            dt = (var_dtypes or {}).get(f, jnp.float32)
+            outer_vals.setdefault(f, jnp.zeros((), dtype=dt))
+
+    valid = t.mask()
+    mode = _resolve_mode(call, agg, deferred_init)
+
+    if mode == "recognized":
+        col_env = dict(outer_vals)
+        col_env.update(rows)
+        outer_state = {f: jnp.asarray(outer_vals[f]) for f in agg.fields}
+        out = _recognize.vectorized_eval(agg.recognized, col_env, valid,
+                                         outer_state)
+        return {v: out.get(v, outer_state[v]) for v in agg.terminate_vars}
+
+    jagg = agg.as_jax_aggregate(outer_vals, deferred_init=deferred_init)
+    from .aggregate import chunked, streaming
+    if mode == "chunked":
+        res = chunked(jagg, rows, valid, num_chunks=num_chunks)
+    else:
+        res = streaming(jagg, rows, valid)
+    return dict(zip(agg.terminate_vars, res))
+
+
+def execute_agg_call(call: AggCall, catalog, env) -> Table:
+    """Engine entry point: returns a Table (1 row, or one row per group)."""
+    if call.group_keys:
+        return grouped_agg_call(call, catalog, env)
+    vals = agg_call_values(call, catalog, env)
+    cols = {}
+    for k, v in vals.items():
+        a = jnp.asarray(v)
+        cols[k] = a[None] if a.ndim == 0 else a[None, ...]
+    return Table(cols, jnp.ones(1, dtype=bool))
+
+
+# ---------------------------------------------------------------------------
+# Grouped invocation (decorrelation)
+# ---------------------------------------------------------------------------
+
+
+def grouped_agg_call(call: AggCall, catalog, env) -> Table:
+    agg: CustomAggregate = call.aggregate
+    t = _engine.execute(call.child, catalog, env)
+    sort_keys = tuple(call.group_keys) + tuple(call.sort_keys)
+    sort_desc = (False,) * len(call.group_keys) + tuple(
+        call.sort_desc or (False,) * len(call.sort_keys))
+    from repro.relational.engine import segment_ids_for
+    st, seg, starts = segment_ids_for(
+        t.sort_by(sort_keys, sort_desc), call.group_keys)
+    # note: sort_by in segment_ids_for re-sorts by group keys only (stable),
+    # preserving the intra-group order established above.
+    cap = st.capacity
+    m = st.mask()
+    nseg = jnp.sum(starts.astype(jnp.int32))
+    out_valid = jnp.arange(cap) < nseg
+
+    rows: dict[str, jax.Array] = {}
+    outer_vals: dict[str, Any] = {}
+    for name, e in call.param_binding:
+        if isinstance(e, Col):
+            rows[name] = st.columns[e.name]
+        else:
+            outer_vals[name] = eval_expr(e, env)
+    for f in agg.fields:
+        outer_vals.setdefault(f, env.get(f, jnp.zeros((), jnp.float32)))
+
+    cols: dict[str, jax.Array] = {}
+    first_idx = jnp.where(starts, jnp.arange(cap), cap)
+    first_of_seg = jax.ops.segment_min(first_idx, seg, num_segments=cap)
+    safe_first = jnp.clip(first_of_seg, 0, cap - 1)
+    for k in call.group_keys:
+        cols[k] = jnp.take(st.columns[k], safe_first)
+
+    if agg.recognized is not None and not agg.local_tables:
+        import os as _os
+        out = _grouped_recognized(
+            agg, rows, outer_vals, m, seg, cap,
+            use_pallas=_os.environ.get("REPRO_SEGAGG_PALLAS") == "1")
+    else:
+        out = _grouped_scan(agg, rows, outer_vals, m, starts, seg, cap)
+    for v in agg.terminate_vars:
+        cols[v] = out[v]
+    return Table(cols, out_valid)
+
+
+def _grouped_recognized(agg, rows, outer_vals, valid, seg, cap,
+                        use_pallas: bool = False):
+    """Segment-vectorized recognized aggregation.  ``use_pallas`` routes
+    sum/min/max/count through the fused Pallas segment-aggregate kernel
+    (kernels/segment_agg.py) — one HBM pass computes all four moments; on
+    CPU it runs in interpret mode (tests) while jnp segment ops remain the
+    default execution."""
+    col_env = dict(outer_vals)
+    col_env.update(rows)
+    out: dict[str, jax.Array] = {}
+    n = valid.shape[0]
+    idx = jnp.arange(n)
+    for u in agg.recognized:
+        g = valid
+        if u.guard is not None:
+            g = g & jnp.asarray(eval_expr(u.guard, col_env), bool)
+        if use_pallas and u.kind in ("sum", "min", "max"):
+            from repro.kernels.segment_agg import segment_agg as _seg_kernel
+            f = u.fields[0]
+            d = jnp.asarray(outer_vals[f]).dtype
+            e = jnp.broadcast_to(
+                jnp.asarray(eval_expr(u.exprs[0], col_env), jnp.float32), (n,))
+            fused = _seg_kernel(e, seg.astype(jnp.int32), g, cap,
+                                interpret=True)
+            row_i = {"sum": 0, "min": 2, "max": 3}[u.kind]
+            r = fused[row_i].astype(d)
+            if u.kind == "sum":
+                out[f] = outer_vals[f] + r
+            elif u.kind == "min":
+                out[f] = jnp.minimum(outer_vals[f], r)
+            else:
+                out[f] = jnp.maximum(outer_vals[f], r)
+            continue
+        if u.kind in ("sum", "prod", "min", "max"):
+            f = u.fields[0]
+            d = jnp.asarray(outer_vals[f]).dtype
+            e = jnp.broadcast_to(jnp.asarray(eval_expr(u.exprs[0], col_env), d), (n,))
+            if u.kind == "sum":
+                out[f] = outer_vals[f] + jax.ops.segment_sum(
+                    jnp.where(g, e, 0), seg, num_segments=cap)
+            elif u.kind == "prod":
+                out[f] = outer_vals[f] * jax.ops.segment_prod(
+                    jnp.where(g, e, 1), seg, num_segments=cap)
+            elif u.kind == "min":
+                r = jax.ops.segment_min(
+                    jnp.where(g, e, _recognize._MINMAX_ID["min"](d)), seg,
+                    num_segments=cap)
+                out[f] = jnp.minimum(outer_vals[f], r)
+            else:
+                r = jax.ops.segment_max(
+                    jnp.where(g, e, _recognize._MINMAX_ID["max"](d)), seg,
+                    num_segments=cap)
+                out[f] = jnp.maximum(outer_vals[f], r)
+        elif u.kind == "arg_group":
+            kf = u.fields[0]
+            kd = jnp.asarray(outer_vals[kf]).dtype
+            key = jnp.broadcast_to(jnp.asarray(eval_expr(u.exprs[0], col_env), kd), (n,))
+            minimize = u.op in ("<", "<=")
+            worst = _recognize._MINMAX_ID["min" if minimize else "max"](kd)
+            masked = jnp.where(g, key, worst)
+            segfn = jax.ops.segment_min if minimize else jax.ops.segment_max
+            best = segfn(masked, seg, num_segments=cap)
+            hit = g & (masked == jnp.take(best, seg))
+            # first (strict) or last (non-strict) attaining row per segment
+            cand = jnp.where(hit, idx, (n if u.op in ("<", ">") else -1))
+            pickfn = jax.ops.segment_min if u.op in ("<", ">") else jax.ops.segment_max
+            pick = pickfn(cand, seg, num_segments=cap)
+            safe = jnp.clip(pick, 0, n - 1)
+            cmp = {"<": best < outer_vals[kf], "<=": best <= outer_vals[kf],
+                   ">": best > outer_vals[kf], ">=": best >= outer_vals[kf]}[u.op]
+            beat = cmp & (pick < n) & (pick >= 0)
+            out[kf] = jnp.where(beat, best, outer_vals[kf])
+            for f, pe in zip(u.fields[1:], u.exprs[1:]):
+                pd = jnp.asarray(outer_vals[f]).dtype
+                pv = jnp.broadcast_to(jnp.asarray(eval_expr(pe, col_env), pd), (n,))
+                out[f] = jnp.where(beat, jnp.take(pv, safe), outer_vals[f])
+        elif u.kind == "last":
+            f = u.fields[0]
+            pd = jnp.asarray(outer_vals[f]).dtype
+            e = jnp.broadcast_to(jnp.asarray(eval_expr(u.exprs[0], col_env), pd), (n,))
+            cand = jnp.where(g, idx, -1)
+            pick = jax.ops.segment_max(cand, seg, num_segments=cap)
+            got = pick >= 0
+            out[f] = jnp.where(got, jnp.take(e, jnp.clip(pick, 0, n - 1)),
+                               outer_vals[f])
+        else:  # pragma: no cover
+            raise ValueError(u.kind)
+    return out
+
+
+def _grouped_scan(agg, rows, outer_vals, valid, starts, seg, cap):
+    """Generic grouped custom aggregate: ONE segmented scan pass — state
+    resets at segment starts; per-segment final states gathered at segment
+    ends and terminated."""
+    jagg = agg.as_jax_aggregate(outer_vals, deferred_init=False)
+    init_state = jagg.init()
+
+    def step(state, xs):
+        row, ok, is_start = xs
+        st = jax.tree.map(lambda i, s: jnp.where(is_start, i, s),
+                          init_state, state)
+        new = jagg.accumulate(st, row)
+        new = jax.tree.map(lambda a, b: jnp.where(ok, a, b), new, st)
+        return new, new
+
+    n = valid.shape[0]
+    state0 = jax.tree.map(lambda x: x, init_state)
+    _, states = lax.scan(step, state0, (rows, valid, starts))
+
+    # last row index of each segment
+    idx = jnp.arange(n)
+    cand = jnp.where(valid, idx, -1)
+    last = jax.ops.segment_max(cand, seg, num_segments=cap)
+    safe = jnp.clip(last, 0, n - 1)
+    seg_states = jax.tree.map(lambda s: jnp.take(s, safe, axis=0), states)
+    terms = jax.vmap(jagg.terminate)(seg_states)
+    out = dict(zip(agg.terminate_vars, terms))
+    # empty segments fall back to pre-loop values
+    got = last >= 0
+    for v in agg.terminate_vars:
+        out[v] = jnp.where(got, out[v], outer_vals.get(v, jnp.zeros_like(out[v])))
+    return out

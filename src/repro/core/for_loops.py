@@ -1,0 +1,32 @@
+"""§8.2 — Optimizing iterative FOR loops.
+
+A FOR loop with a fixed iteration structure is rewritten as a cursor loop
+over an *iteration-space relation* (the paper uses a recursive CTE; our
+engine's equivalent is the ``IterSpace`` leaf plan, which generates the
+space from the loop's init/bound/step expressions at execution time — the
+values need not be statically determinable, exactly as §8.2 requires).
+
+Once rewritten, the loop is a standard cursor loop and Algorithm 1 applies.
+XLA's static-shape discipline requires a capacity (maximum trip count);
+rows beyond the dynamic bound are masked invalid.
+"""
+from __future__ import annotations
+
+from repro.relational.plan import IterSpace
+
+from .loop_ir import CursorLoop, ForLoop, Program
+
+
+def rewrite_for(prog: Program, capacity: int) -> Program:
+    """Program-with-ForLoop -> Program-with-CursorLoop over IterSpace."""
+    loop = prog.loop
+    if isinstance(loop, CursorLoop):
+        return prog
+    if not isinstance(loop, ForLoop):
+        raise TypeError(type(loop))
+    col = f"__iter_{loop.var}"
+    q = IterSpace(init=loop.init, bound=loop.bound, step=loop.step,
+                  inclusive=loop.inclusive, capacity=capacity, column=col)
+    cl = CursorLoop(query=q, fetch=((loop.var, col),), body=loop.body)
+    return Program(prog.name, prog.params, prog.pre, cl, prog.post,
+                   prog.returns, prog.var_dtypes, prog.local_tables)

@@ -1,0 +1,385 @@
+"""Aggregate recognition & Merge synthesis.
+
+The paper's §3.1 contract includes an *optional* ``Merge`` used for
+intra-query parallelism, but (a) SQL Server never derives one
+automatically, and (b) the paper's engine executes user-defined aggregates
+only as streaming aggregates.  This module is the beyond-paper step that
+makes the technique TPU-native:
+
+1. **Merge synthesis** — pattern-match the loop body Δ and derive a merge
+   operator + merge identity ("no rows seen" state).  With these, the
+   chunked / tree / shard executors in ``aggregate.py`` parallelize the
+   loop within a chip (VPU lanes) and across chips (ICI) while preserving
+   the sequential semantics (chunks partition the input in order; ties in
+   extremal updates resolve toward the earlier chunk, matching the strict-
+   comparison first-writer-wins of the loop).
+
+2. **Closed-form recognition** — when every state update matches a known
+   algebra, emit a fully set-oriented evaluation (vectorized jnp / Pallas
+   segment kernels) with *no scan at all*: the "optimizer visibility" the
+   paper argues for in §8.1, taken to its limit.
+
+Recognized field-update algebras:
+
+    sum      f = f + e            (count is sum with e = 1)
+    prod     f = f * e
+    min/max  f = min/max(f, e)   or   If(e < f, f = e)
+    argmin/argmax group:
+             If(e ⊲ f_key [and acyclic-guard], f_key = e; payload_i = p_i)
+             with ⊲ ∈ {<, <=, >, >=}
+    last     f = e               (e acyclic; order-sensitive)
+
+where every contribution ``e``/``p_i``/guard is *acyclic*: it reads only
+fetch variables, outer parameters, and constants — never a state field.
+Bodies mixing recognized updates are recognized field-by-field; any
+unrecognized statement makes the whole body unrecognized (stream-only,
+exactly the paper's execution model).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Mapping, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .loop_ir import (Assign, BinOp, Const, Expr, If, Stmt, UnOp, Var, Where,
+                      expr_vars, wrap)
+
+
+@dataclass(frozen=True)
+class FieldUpdate:
+    kind: str                       # sum|prod|min|max|arg_group|last
+    fields: tuple[str, ...]         # updated fields (1 for scalars; key+payloads for arg_group)
+    exprs: tuple[Expr, ...]         # contribution per field (key expr first for arg_group)
+    guard: Optional[Expr] = None    # acyclic guard (None = always)
+    op: str = ""                    # for arg_group: the comparison < <= > >=
+
+
+# ---------------------------------------------------------------------------
+# Recognition
+# ---------------------------------------------------------------------------
+
+
+def recognize(body: Sequence[Stmt], fetch_vars: set[str], fields: set[str],
+              outer_params: set[str]) -> Optional[tuple[FieldUpdate, ...]]:
+    """``fields`` must be the set of fields *written* in the body: a field
+    that is only read (e.g. the @lb lower bound of the paper's Figure 1) is
+    loop-constant and therefore acyclic — it participates in contributions
+    and guards like any outer parameter."""
+    updates: list[FieldUpdate] = []
+    written: set[str] = set()
+
+    def is_acyclic(e: Expr) -> bool:
+        return not (expr_vars(e) & fields)
+
+    for s in body:
+        u = _match_stmt(s, fields, is_acyclic)
+        if u is None:
+            return None
+        # each field may be target of exactly one recognized update, and a
+        # contribution may not read a field written earlier in the body
+        for f in u.fields:
+            if f in written:
+                return None
+            written.add(f)
+        updates.append(u)
+    return tuple(updates)
+
+
+def _match_stmt(s: Stmt, fields: set[str], is_acyclic) -> Optional[FieldUpdate]:
+    if isinstance(s, Assign):
+        return _match_assign(s, fields, is_acyclic)
+    if isinstance(s, If) and not s.orelse:
+        return _match_guarded(s, fields, is_acyclic)
+    return None
+
+
+def _match_assign(s: Assign, fields: set[str], is_acyclic) -> Optional[FieldUpdate]:
+    f, e = s.var, s.expr
+    if f not in fields:
+        return None
+    # f = f + e   /  f = e + f
+    if isinstance(e, BinOp) and e.op in ("+", "*", "min", "max"):
+        for self_side, other in ((e.lhs, e.rhs), (e.rhs, e.lhs)):
+            if isinstance(self_side, Var) and self_side.name == f and is_acyclic(other):
+                kind = {"+": "sum", "*": "prod", "min": "min", "max": "max"}[e.op]
+                return FieldUpdate(kind, (f,), (other,))
+    # f = f - e  (sum of negated contribution)
+    if isinstance(e, BinOp) and e.op == "-":
+        if isinstance(e.lhs, Var) and e.lhs.name == f and is_acyclic(e.rhs):
+            return FieldUpdate("sum", (f,), (UnOp("neg", e.rhs),))
+    # f = e (acyclic) — last value
+    if is_acyclic(e):
+        return FieldUpdate("last", (f,), (e,))
+    return None
+
+
+_CMP_FLIP = {"<": ">", "<=": ">=", ">": "<", ">=": "<="}
+
+
+def _match_guarded(s: If, fields: set[str], is_acyclic) -> Optional[FieldUpdate]:
+    """If(conj ∧ (e ⊲ f_key) ∧ conj, f_key = e; payload...) — argmin/argmax
+    with optional acyclic guard conjuncts."""
+    conjs = split_conjuncts(s.cond)
+    assigns: list[Assign] = []
+    for b in s.then:
+        if not isinstance(b, Assign):
+            return None
+        assigns.append(b)
+    targets = {a.var for a in assigns}
+    if not targets <= fields:
+        return None
+
+    # find the single cyclic comparison conjunct
+    key_cmp = None
+    guard_conjs: list[Expr] = []
+    for c in conjs:
+        if is_acyclic(c):
+            guard_conjs.append(c)
+            continue
+        if key_cmp is not None:
+            return None
+        key_cmp = c
+    guard = _conjoin(guard_conjs)
+
+    if key_cmp is None:
+        # uniformly guarded recognized update: If(acyclic, f = f + e)
+        if len(assigns) != 1:
+            return None
+        u = _match_assign(assigns[0], fields, is_acyclic)
+        if u is None:
+            return None
+        return FieldUpdate(u.kind, u.fields, u.exprs, guard=guard)
+
+    # key comparison: e ⊲ key_field, with key_field ∈ fields and e acyclic
+    if not isinstance(key_cmp, BinOp) or key_cmp.op not in ("<", "<=", ">", ">="):
+        return None
+    lhs, rhs, op = key_cmp.lhs, key_cmp.rhs, key_cmp.op
+    if isinstance(rhs, Var) and rhs.name in fields and is_acyclic(lhs):
+        key_field, key_expr = rhs.name, lhs
+    elif isinstance(lhs, Var) and lhs.name in fields and is_acyclic(rhs):
+        key_field, key_expr, op = lhs.name, rhs, _CMP_FLIP[op]
+    else:
+        return None
+    # now semantics: update when  key_expr ⟨op⟩ current_key
+
+    # the branch must assign key_field = key_expr and acyclic payloads
+    key_assigned = False
+    payload_fields: list[str] = []
+    payload_exprs: list[Expr] = []
+    for a in assigns:
+        if a.var == key_field:
+            if a.expr != key_expr:
+                return None
+            key_assigned = True
+        else:
+            if not is_acyclic(a.expr):
+                return None
+            payload_fields.append(a.var)
+            payload_exprs.append(a.expr)
+    if not key_assigned:
+        return None
+    return FieldUpdate("arg_group",
+                       (key_field,) + tuple(payload_fields),
+                       (key_expr,) + tuple(payload_exprs),
+                       guard=guard, op=op)
+
+
+def split_conjuncts(e: Expr) -> list[Expr]:
+    if isinstance(e, BinOp) and e.op == "and":
+        return split_conjuncts(e.lhs) + split_conjuncts(e.rhs)
+    return [e]
+
+
+def _conjoin(es: Sequence[Expr]) -> Optional[Expr]:
+    if not es:
+        return None
+    out = es[0]
+    for e in es[1:]:
+        out = BinOp("and", out, e)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Merge synthesis
+# ---------------------------------------------------------------------------
+
+
+_MINMAX_ID = {
+    "min": lambda d: jnp.array(jnp.inf, d) if jnp.issubdtype(d, jnp.floating)
+    else jnp.array(jnp.iinfo(d).max, d),
+    "max": lambda d: jnp.array(-jnp.inf, d) if jnp.issubdtype(d, jnp.floating)
+    else jnp.array(jnp.iinfo(d).min, d),
+}
+
+
+def set_flag(field: str) -> str:
+    """State key of the 'this last-value field has been written' flag."""
+    return f"{field}__set"
+
+
+def make_identity(updates: tuple[FieldUpdate, ...],
+                  outer_state: Mapping[str, Any]):
+    """The 'no rows seen' state: sum→0, prod→1, min→+∞, max→−∞,
+    arg_group→(worst key, zero payload), last→zero + set-flag.  Fields not
+    written by any update (loop-constant reads) keep their P_0 value so the
+    state structure matches Accumulate's output."""
+    def identity():
+        st: dict[str, Any] = {f: jnp.asarray(v) for f, v in outer_state.items()}
+        for u in updates:
+            if u.kind == "sum":
+                st[u.fields[0]] = jnp.zeros_like(outer_state[u.fields[0]])
+            elif u.kind == "prod":
+                st[u.fields[0]] = jnp.ones_like(outer_state[u.fields[0]])
+            elif u.kind in ("min", "max"):
+                d = jnp.asarray(outer_state[u.fields[0]]).dtype
+                st[u.fields[0]] = _MINMAX_ID[u.kind](d)
+            elif u.kind == "arg_group":
+                kf = u.fields[0]
+                d = jnp.asarray(outer_state[kf]).dtype
+                worst = _MINMAX_ID["min" if u.op in ("<", "<=") else "max"](d)
+                st[kf] = worst
+                for p in u.fields[1:]:
+                    st[p] = jnp.zeros_like(outer_state[p])
+            elif u.kind == "last":
+                st[u.fields[0]] = jnp.zeros_like(outer_state[u.fields[0]])
+                st[set_flag(u.fields[0])] = jnp.array(False)
+            else:  # pragma: no cover
+                raise ValueError(u.kind)
+        return st
+    return identity
+
+
+def bookkeeping(updates: tuple[FieldUpdate, ...]):
+    """Post-body state maintenance executed by the aggregate wrapper (the
+    compiled Δ knows nothing of merge bookkeeping): raise the set-flag of
+    each 'last' field whose (optional) guard passed for this row."""
+    from .loop_ir import eval_expr
+
+    lasts = [u for u in updates if u.kind == "last"]
+
+    def update(state: dict[str, Any], row_env: Mapping[str, Any]) -> dict[str, Any]:
+        for u in lasts:
+            fired = (jnp.asarray(True) if u.guard is None
+                     else jnp.asarray(eval_expr(u.guard, row_env), bool))
+            k = set_flag(u.fields[0])
+            state[k] = jnp.logical_or(state.get(k, jnp.array(False)), fired)
+        return state
+
+    return update, tuple(set_flag(u.fields[0]) for u in lasts)
+
+
+def make_merge(updates: tuple[FieldUpdate, ...]):
+    """Ordered merge: ``a`` is the earlier chunk.  Exactness w.r.t. the
+    sequential loop follows chunk-locality of each algebra (see module
+    docstring)."""
+    def merge(a, b):
+        out: dict[str, Any] = dict(a)   # loop-constant fields pass through
+        for u in updates:
+            if u.kind == "sum":
+                f = u.fields[0]
+                out[f] = a[f] + b[f]
+            elif u.kind == "prod":
+                f = u.fields[0]
+                out[f] = a[f] * b[f]
+            elif u.kind == "min":
+                f = u.fields[0]
+                out[f] = jnp.minimum(a[f], b[f])
+            elif u.kind == "max":
+                f = u.fields[0]
+                out[f] = jnp.maximum(a[f], b[f])
+            elif u.kind == "arg_group":
+                kf = u.fields[0]
+                cmp = {"<": lambda x, y: x < y, "<=": lambda x, y: x <= y,
+                       ">": lambda x, y: x > y, ">=": lambda x, y: x >= y}[u.op]
+                # does b's champion beat a's?  strict ops keep the earlier
+                # chunk on ties (first-writer-wins); non-strict keep later.
+                take_b = cmp(b[kf], a[kf])
+                for f in u.fields:
+                    out[f] = jnp.where(take_b, b[f], a[f])
+            elif u.kind == "last":
+                f = u.fields[0]
+                k = set_flag(f)
+                out[f] = jnp.where(b[k], b[f], a[f])
+                out[k] = jnp.logical_or(a[k], b[k])
+            else:  # pragma: no cover
+                raise ValueError(u.kind)
+        return out
+    return merge
+
+
+# ---------------------------------------------------------------------------
+# Closed-form (fully vectorized) evaluation
+# ---------------------------------------------------------------------------
+
+
+def vectorized_eval(updates: tuple[FieldUpdate, ...],
+                    col_env: Mapping[str, Any],
+                    valid: jax.Array,
+                    outer_state: Mapping[str, Any]) -> dict[str, Any]:
+    """Evaluate all recognized updates set-orientedly over whole columns.
+
+    ``col_env`` binds fetch params to columns and outer params to scalars.
+    Tie order matches the sequential loop (first/last attaining row for
+    strict/non-strict comparisons; 'last' takes the final valid row).
+    """
+    from .loop_ir import eval_expr
+
+    n = valid.shape[0]
+    out: dict[str, Any] = {}
+    for u in updates:
+        g = valid
+        if u.guard is not None:
+            g = g & jnp.asarray(eval_expr(u.guard, col_env), bool)
+        if u.kind in ("sum", "prod", "min", "max"):
+            f = u.fields[0]
+            e = jnp.broadcast_to(
+                jnp.asarray(eval_expr(u.exprs[0], col_env),
+                            jnp.asarray(outer_state[f]).dtype), (n,))
+            if u.kind == "sum":
+                out[f] = outer_state[f] + jnp.sum(jnp.where(g, e, 0))
+            elif u.kind == "prod":
+                out[f] = outer_state[f] * jnp.prod(jnp.where(g, e, 1))
+            elif u.kind == "min":
+                out[f] = jnp.minimum(outer_state[f],
+                                     jnp.min(jnp.where(g, e, _MINMAX_ID["min"](e.dtype))))
+            else:
+                out[f] = jnp.maximum(outer_state[f],
+                                     jnp.max(jnp.where(g, e, _MINMAX_ID["max"](e.dtype))))
+        elif u.kind == "arg_group":
+            kf = u.fields[0]
+            kd = jnp.asarray(outer_state[kf]).dtype
+            key = jnp.broadcast_to(jnp.asarray(eval_expr(u.exprs[0], col_env), kd), (n,))
+            minimize = u.op in ("<", "<=")
+            worst = _MINMAX_ID["min" if minimize else "max"](kd)
+            masked = jnp.where(g, key, worst)
+            if u.op == "<":
+                idx = jnp.argmin(masked)                      # first min
+            elif u.op == "<=":
+                idx = n - 1 - jnp.argmin(masked[::-1])        # last min
+            elif u.op == ">":
+                idx = jnp.argmax(masked)
+            else:
+                idx = n - 1 - jnp.argmax(masked[::-1])
+            best = masked[idx]
+            cmp = {"<": best < outer_state[kf], "<=": best <= outer_state[kf],
+                   ">": best > outer_state[kf], ">=": best >= outer_state[kf]}[u.op]
+            beat = cmp & g[idx]
+            out[kf] = jnp.where(beat, best, outer_state[kf])
+            for f, pe in zip(u.fields[1:], u.exprs[1:]):
+                pv = jnp.broadcast_to(
+                    jnp.asarray(eval_expr(pe, col_env),
+                                jnp.asarray(outer_state[f]).dtype), (n,))
+                out[f] = jnp.where(beat, pv[idx], outer_state[f])
+        elif u.kind == "last":
+            f = u.fields[0]
+            e = jnp.broadcast_to(
+                jnp.asarray(eval_expr(u.exprs[0], col_env),
+                            jnp.asarray(outer_state[f]).dtype), (n,))
+            any_valid = jnp.any(g)
+            last_idx = n - 1 - jnp.argmax(g[::-1])
+            out[f] = jnp.where(any_valid, e[last_idx], outer_state[f])
+        else:  # pragma: no cover
+            raise ValueError(u.kind)
+    return out

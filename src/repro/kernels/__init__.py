@@ -1,0 +1,11 @@
+"""repro.kernels — Pallas TPU kernels for the aggregation hot paths.
+
+Each kernel ships with a pure-jnp oracle (ref.py) and a dispatching wrapper
+(ops.py).  All kernels are instances of the paper's aggregation contract —
+see the module docstrings."""
+from . import ops, ref
+from .decode_attn import decode_attention
+from .segment_agg import segment_agg
+from .ssd_scan import ssd_scan
+
+__all__ = ["ops", "ref", "decode_attention", "segment_agg", "ssd_scan"]

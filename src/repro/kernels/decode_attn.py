@@ -1,0 +1,116 @@
+"""Pallas TPU kernel: flash-decode attention as an online-softmax
+*aggregate* (the paper's Init/Accumulate/Merge/Terminate contract on the
+sequence axis).
+
+One decode step attends a group of G query heads (the GQA group sharing a
+KV head) against an S-long KV cache:
+
+    Init:        m = -inf, l = 0, acc = 0
+    Accumulate:  per KV chunk j —  s = q·K_j^T;  m' = max(m, max_j s)
+                 p = exp(s - m'); acc = acc·e^{m-m'} + p·V_j; l = l·e^{m-m'}+Σp
+    Merge:       same rescale-combine across *shards* of the KV cache
+                 (repro.models.attention.softmax_aggregate, executed with
+                 core.aggregate.shard_merge over the sequence-parallel axis)
+    Terminate:   out = acc / l
+
+TPU adaptation: the CUDA flash-decode formulation splits KV across SMs and
+merges in shared memory; here the intra-chip split is the sequential grid
+(chunk state lives in VMEM scratch across grid steps — the accumulate), and
+the inter-chip split is the aggregate Merge over ICI.  MXU alignment: block
+shapes are (G≥8, D multiple of 128) and KV chunks of 128/256 rows.
+
+Grid: (BH, num_kv_chunks) — BH = batch × kv_heads; scratch persists per BH
+row (re-initialized when the chunk index wraps to 0).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = float("-inf")
+
+
+def _decode_attn_kernel(q_ref, k_ref, v_ref, len_ref, o_ref,
+                        m_scr, l_scr, acc_scr, *, scale: float,
+                        chunk: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0]                       # (G, D)
+    k = k_ref[0]                       # (C, D)
+    v = v_ref[0]                       # (C, D)
+    kv_len = len_ref[0, 0]
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale  # (G, C)
+    pos = j * chunk + lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(pos < kv_len, s, NEG_INF)
+
+    m_prev = m_scr[...]                # (G, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    # guard the all-masked chunk (exp(-inf - -inf))
+    m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+    p = jnp.exp(jnp.where(jnp.isfinite(s), s - m_safe, NEG_INF))   # (G, C)
+    alpha = jnp.exp(jnp.where(jnp.isfinite(m_prev), m_prev - m_safe, NEG_INF))
+
+    l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    pv = jax.lax.dot_general(p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)    # (G, D)
+    acc_scr[...] = acc_scr[...] * alpha + pv
+    m_scr[...] = m_new
+
+    @pl.when(j == pl.num_programs(1) - 1)
+    def _fin():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     kv_len: jax.Array, chunk: int = 128,
+                     interpret: bool = True) -> jax.Array:
+    """q (BH, G, D); k,v (BH, S, D); kv_len (BH,) int32 → out (BH, G, D).
+
+    BH folds batch × kv_heads; G is the GQA query-group size; S is the
+    (padded) cache capacity.
+    """
+    bh, g, d = q.shape
+    s = k.shape[1]
+    pad = (-s) % chunk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0)))
+    s_p = s + pad
+    scale = 1.0 / (d ** 0.5)
+    lens = kv_len.astype(jnp.int32).reshape(bh, 1)
+
+    grid = (bh, s_p // chunk)
+    out = pl.pallas_call(
+        functools.partial(_decode_attn_kernel, scale=scale, chunk=chunk),
+        out_shape=jax.ShapeDtypeStruct((bh, g, d), q.dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, g, d), lambda b, j: (b, 0, 0)),
+            pl.BlockSpec((1, chunk, d), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((1, chunk, d), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((1, 1), lambda b, j: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, g, d), lambda b, j: (b, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),   # m
+            pltpu.VMEM((g, 1), jnp.float32),   # l
+            pltpu.VMEM((g, d), jnp.float32),   # acc
+        ],
+        interpret=interpret,
+    )(q, k, v, lens)
+    return out

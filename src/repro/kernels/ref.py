@@ -1,0 +1,105 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contracts the
+interpret-mode sweeps assert against)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def segment_agg_ref(vals: jax.Array, segs: jax.Array, valid: jax.Array,
+                    num_segments: int) -> jax.Array:
+    """[sum, count, min, max] per segment, (4, num_segments) f32."""
+    v = vals.astype(jnp.float32)
+    s = jax.ops.segment_sum(jnp.where(valid, v, 0), segs,
+                            num_segments=num_segments)
+    c = jax.ops.segment_sum(valid.astype(jnp.float32), segs,
+                            num_segments=num_segments)
+    mn = jax.ops.segment_min(jnp.where(valid, v, jnp.inf), segs,
+                             num_segments=num_segments)
+    mx = jax.ops.segment_max(jnp.where(valid, v, -jnp.inf), segs,
+                             num_segments=num_segments)
+    return jnp.stack([s, c, mn, mx])
+
+
+def decode_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                         kv_len: jax.Array) -> jax.Array:
+    """Masked softmax attention, fp32 accumulation.  q (BH,G,D);
+    k,v (BH,S,D); kv_len (BH,) → (BH,G,D)."""
+    bh, g, d = q.shape
+    s = k.shape[1]
+    scale = 1.0 / (d ** 0.5)
+    logits = jnp.einsum("bgd,bsd->bgs", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    mask = jnp.arange(s)[None, None, :] < kv_len[:, None, None]
+    logits = jnp.where(mask, logits, -jnp.inf)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bgs,bsd->bgd", w, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def ssd_scan_chunked(x: jax.Array, log_a: jax.Array, b: jax.Array,
+                     c: jax.Array, chunk: int = 64) -> jax.Array:
+    """Chunked SSD in pure jnp — the SAME dual-form math as the Pallas
+    kernel (matmul intra-chunk + carried-state merge), scanning over
+    chunks instead of timesteps.  This is the lowering path on non-TPU
+    backends: the sequential ref below is the semantic oracle but lowers
+    to a T-step scan (T dynamic-update-slices of the state — catastrophic
+    as an execution plan)."""
+    bh, t, p = x.shape
+    n = b.shape[-1]
+    assert t % chunk == 0
+    nc = t // chunk
+    xc = x.reshape(bh, nc, chunk, p).astype(jnp.float32)
+    lac = log_a.reshape(bh, nc, chunk, 1).astype(jnp.float32)
+    bc = b.reshape(bh, nc, chunk, n).astype(jnp.float32)
+    cc = c.reshape(bh, nc, chunk, n).astype(jnp.float32)
+
+    la = jnp.cumsum(lac, axis=2)                         # (BH,NC,C,1)
+    rel = la - jnp.swapaxes(la, 2, 3)                    # (BH,NC,C,C)
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+    decay = jnp.where(causal, jnp.exp(rel), 0.0)
+    scores = jnp.einsum("zgtn,zgsn->zgts", cc, bc) * decay
+    y_intra = jnp.einsum("zgts,zgsp->zgtp", scores, xc)
+
+    # carried state across chunks (the associative Merge)
+    la_last = la[:, :, -1:, :]                           # (BH,NC,1,1)
+    w = jnp.exp(la_last - la)                            # (BH,NC,C,1)
+    chunk_state = jnp.einsum("zgsn,zgsp->zgnp", bc * w, xc)  # (BH,NC,N,P)
+    chunk_decay = jnp.exp(la_last[:, :, 0, 0])           # (BH,NC)
+
+    def step(h, inp):
+        st, dec, cmat, lam = inp
+        y_cross = jnp.einsum("ztn,znp->ztp", cmat, h) * jnp.exp(lam)
+        h_new = dec[:, None, None] * h + st
+        return h_new, y_cross
+
+    h0 = jnp.zeros((bh, n, p), jnp.float32)
+    _, y_cross = jax.lax.scan(
+        step, h0,
+        (chunk_state.swapaxes(0, 1), chunk_decay.swapaxes(0, 1),
+         cc.swapaxes(0, 1), la.swapaxes(0, 1)))
+    y = y_intra + y_cross.swapaxes(0, 1)
+    return y.reshape(bh, t, p).astype(x.dtype)
+
+
+def ssd_scan_ref(x: jax.Array, log_a: jax.Array, b: jax.Array,
+                 c: jax.Array) -> jax.Array:
+    """Sequential SSD recurrence: h_t = a_t h_{t-1} + B_t ⊗ x_t;
+    y_t = C_t · h_t.  x (BH,T,P); log_a (BH,T); b,c (BH,T,N)."""
+    bh, t, p = x.shape
+    n = b.shape[-1]
+
+    def per_bh(xb, lab, bb, cb):
+        def step(h, inp):
+            xt, lat, bt, ct = inp
+            h = jnp.exp(lat) * h + jnp.outer(bt, xt)
+            y = ct @ h
+            return h, y
+        h0 = jnp.zeros((n, p), jnp.float32)
+        _, ys = jax.lax.scan(step, h0, (xb.astype(jnp.float32),
+                                        lab.astype(jnp.float32),
+                                        bb.astype(jnp.float32),
+                                        cb.astype(jnp.float32)))
+        return ys
+    y = jax.vmap(per_bh)(x, log_a, b, c)
+    return y.astype(x.dtype)

@@ -1,0 +1,95 @@
+"""Pallas TPU kernel: fused grouped aggregation (the 𝒢_{AggΔ} hot path).
+
+One pass over rows sorted by segment id computes SUM / COUNT / MIN / MAX
+per segment simultaneously — the fused multi-aggregate the recognized
+execution path of Aggify emits for grouped custom aggregates.
+
+TPU adaptation (vs a CUDA scatter-atomic formulation): atomics are not the
+TPU model.  Instead each row-block materializes a one-hot membership mask
+(rows × segments) in VMEM and reduces with broadcast/select ops on the VPU
+(8×128 lanes); partials accumulate into the output block, which stays
+resident in VMEM across the whole row-block grid (output revisiting).
+Rows are pre-sorted by segment, so the mask is band-structured and the
+working set is bounded by (BLOCK_ROWS × NUM_SEGS) — the caller tiles the
+segment range so this fits VMEM.
+
+Grid: (num_row_blocks,). Block shapes:
+  vals  (BLOCK_ROWS, 1)  f32/bf16      segs (BLOCK_ROWS, 1) i32
+  out   (4, NUM_SEGS)    rows = [sum, count, min, max]
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+NEG_INF = float("-inf")
+POS_INF = float("inf")
+
+
+def _segment_agg_kernel(vals_ref, segs_ref, valid_ref, out_ref, *,
+                        num_segments: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[0, :] = jnp.zeros((num_segments,), out_ref.dtype)        # sum
+        out_ref[1, :] = jnp.zeros((num_segments,), out_ref.dtype)        # count
+        out_ref[2, :] = jnp.full((num_segments,), POS_INF, out_ref.dtype)  # min
+        out_ref[3, :] = jnp.full((num_segments,), NEG_INF, out_ref.dtype)  # max
+
+    vals = vals_ref[...].astype(out_ref.dtype)          # (R, 1)
+    segs = segs_ref[...]                                # (R, 1) int32
+    ok = valid_ref[...] != 0                            # (R, 1)
+
+    r = vals.shape[0]
+    seg_iota = lax.broadcasted_iota(jnp.int32, (r, num_segments), 1)
+    member = (segs == seg_iota) & ok                    # (R, S) band mask
+
+    vbc = jnp.broadcast_to(vals, (r, num_segments))
+    out_ref[0, :] += jnp.sum(jnp.where(member, vbc, 0), axis=0)
+    out_ref[1, :] += jnp.sum(member.astype(out_ref.dtype), axis=0)
+    out_ref[2, :] = jnp.minimum(
+        out_ref[2, :], jnp.min(jnp.where(member, vbc, POS_INF), axis=0))
+    out_ref[3, :] = jnp.maximum(
+        out_ref[3, :], jnp.max(jnp.where(member, vbc, NEG_INF), axis=0))
+
+
+@functools.partial(jax.jit, static_argnames=("num_segments", "block_rows",
+                                             "interpret"))
+def segment_agg(vals: jax.Array, segs: jax.Array, valid: jax.Array,
+                num_segments: int, block_rows: int = 256,
+                interpret: bool = True) -> jax.Array:
+    """Returns (4, num_segments) f32: [sum, count, min, max] per segment.
+
+    ``vals`` (N,) float, ``segs`` (N,) int32 sorted ascending, ``valid``
+    (N,) bool.  N is padded to a multiple of ``block_rows``.
+    """
+    n = vals.shape[0]
+    pad = (-n) % block_rows
+    if pad:
+        vals = jnp.pad(vals, (0, pad))
+        segs = jnp.pad(segs, (0, pad))
+        valid = jnp.pad(valid, (0, pad))
+    n_p = n + pad
+    vals2 = vals.reshape(n_p, 1)
+    segs2 = segs.astype(jnp.int32).reshape(n_p, 1)
+    valid2 = valid.astype(jnp.int32).reshape(n_p, 1)
+
+    grid = (n_p // block_rows,)
+    out = pl.pallas_call(
+        functools.partial(_segment_agg_kernel, num_segments=num_segments),
+        out_shape=jax.ShapeDtypeStruct((4, num_segments), jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, 1), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, 1), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((4, num_segments), lambda i: (0, 0)),
+        interpret=interpret,
+    )(vals2, segs2, valid2)
+    return out

@@ -1,0 +1,109 @@
+"""Pallas TPU kernel: chunked SSD (state-space duality) scan — the ordered
+custom aggregate with an associative Merge, on the MXU.
+
+The Mamba-2 recurrence per head (state N × channels P):
+
+    h_t = a_t · h_{t-1} + B_t ⊗ x_t          (outer product update)
+    y_t = C_t · h_t
+
+is exactly an *ordered aggregate* in the paper's contract:
+
+    Init:        h = 0
+    Accumulate:  one timestep (the cursor-loop body)
+    Merge:       (decayᵃ, stateᵃ) ∘ (decayᵇ, stateᵇ)
+                 = (decayᵃ·decayᵇ, decayᵇ·stateᵃ + stateᵇ)   [associative]
+    Terminate:   y projections
+
+The chunked execution (this kernel) is Aggify's chunked executor on TPU:
+within a chunk the quadratic dual form runs on the MXU (three matmuls),
+across chunks the carried state h applies the Merge — sequential in the
+grid, VMEM-resident scratch.
+
+Grid: (BH, num_chunks).  Per-chunk math (chunk length C):
+    la     = cumsum(log a)                       (C,)
+    scores = (Cmat @ B^T) ⊙ M,  M[t,s] = e^{la_t − la_s}·[s ≤ t]
+    y      = scores @ x  +  e^{la} ⊙ (Cmat @ h_prev)
+    h_new  = e^{la_C} h_prev + (B ⊙ e^{la_C − la})^T @ x
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, loga_ref, b_ref, c_ref, y_ref, h_scr, *, chunk: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    x = x_ref[0].astype(jnp.float32)          # (C, P)
+    loga = loga_ref[0].astype(jnp.float32)    # (C, 1)
+    bmat = b_ref[0].astype(jnp.float32)       # (C, N)
+    cmat = c_ref[0].astype(jnp.float32)       # (C, N)
+
+    la = jnp.cumsum(loga, axis=0)             # (C, 1) inclusive
+    # intra-chunk dual form: scores[t, s] = e^{la_t - la_s} (Cmat_t · B_s), s<=t
+    rel = la - la.T                            # (C, C) = la_t - la_s
+    t_idx = lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    s_idx = lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    causal = t_idx >= s_idx
+    decay = jnp.where(causal, jnp.exp(rel), 0.0)
+    scores = jax.lax.dot_general(cmat, bmat, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    scores = scores * decay                    # (C, C)
+    y_intra = jax.lax.dot_general(scores, x, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+
+    # inter-chunk: contribution of carried state
+    h_prev = h_scr[...]                        # (N, P)
+    ch = jax.lax.dot_general(cmat, h_prev, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (C, P)
+    y_cross = jnp.exp(la) * ch
+
+    y_ref[0] = (y_intra + y_cross).astype(y_ref.dtype)
+
+    # state update (the Merge): h_new = e^{la_C} h_prev + Σ_s e^{la_C-la_s} B_s x_s^T
+    la_last = la[chunk - 1:chunk, :]           # (1, 1)
+    w = jnp.exp(la_last - la)                  # (C, 1)
+    bw = bmat * w                              # (C, N)
+    outer = jax.lax.dot_general(bw, x, (((0,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # (N, P)
+    h_scr[...] = jnp.exp(la_last[0, 0]) * h_prev + outer
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x: jax.Array, log_a: jax.Array, b: jax.Array, c: jax.Array,
+             chunk: int = 64, interpret: bool = True) -> jax.Array:
+    """x (BH, T, P); log_a (BH, T); b,c (BH, T, N) → y (BH, T, P).
+
+    BH folds batch × heads.  T must be a multiple of ``chunk`` (caller
+    pads; padded steps should carry log_a=0, x=0 so the state is benign).
+    """
+    bh, t, p = x.shape
+    n = b.shape[-1]
+    assert t % chunk == 0, f"T={t} must be a multiple of chunk={chunk}"
+    la2 = log_a.reshape(bh, t, 1)
+
+    grid = (bh, t // chunk)
+    y = pl.pallas_call(
+        functools.partial(_ssd_kernel, chunk=chunk),
+        out_shape=jax.ShapeDtypeStruct((bh, t, p), x.dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, p), lambda bh_, j: (bh_, j, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda bh_, j: (bh_, j, 0)),
+            pl.BlockSpec((1, chunk, n), lambda bh_, j: (bh_, j, 0)),
+            pl.BlockSpec((1, chunk, n), lambda bh_, j: (bh_, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, p), lambda bh_, j: (bh_, j, 0)),
+        scratch_shapes=[pltpu.VMEM((n, p), jnp.float32)],
+        interpret=interpret,
+    )(x, la2, b, c)
+    return y

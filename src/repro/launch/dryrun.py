@@ -1,0 +1,264 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import (jax locks the device count on first
+# init).  Only the dry-run sees 512 placeholder devices; tests/benches see 1.
+
+import argparse
+import json
+import time
+import traceback
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.hlo import analyze_hlo
+from repro.configs import ARCH_IDS, SHAPES, get_config, supports_shape
+from repro.launch.mesh import data_axes, make_production_mesh
+from repro.launch.sharding import (as_shardings, batch_specs, cache_specs,
+                                   opt_specs, param_specs)
+from repro.models import LM
+from repro.train.optimizer import AdamWConfig, init_opt_state
+from repro.train.train_step import make_train_step
+
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+PyTree = Any
+
+
+def build_lm(cfg, shape) -> LM:
+    # block sizes for the flash/SSD chunking (VMEM-scale working sets)
+    return LM(cfg, q_chunk=1024, kv_chunk=1024, ssd_chunk=128,
+              remat=(shape.kind == "train"), use_pallas=False)
+
+
+def build_lm_opt(cfg, shape) -> LM:
+    """§Perf variant: head padding (TP-shardable attention for 40/25-head
+    archs) + save-sublayer remat (backward skips re-running forward TP
+    collectives) — composed with the activation shard-ctx set in
+    lower_cell."""
+    return LM(cfg, q_chunk=1024, kv_chunk=1024, ssd_chunk=128,
+              remat=(shape.kind == "train"), use_pallas=False,
+              pad_heads_multiple=16, remat_policy="save_sublayer")
+
+
+def input_specs(arch_id: str, shape_name: str) -> dict[str, PyTree]:
+    """ShapeDtypeStruct stand-ins for every model input of the lowered
+    step — weak-type-correct, shardable, no device allocation."""
+    cfg = get_config(arch_id)
+    shape = SHAPES[shape_name]
+    return _specs_for_lm(build_lm(cfg, shape), cfg, shape)
+
+
+def _specs_for_lm(lm: LM, cfg, shape) -> dict[str, PyTree]:
+    key = jax.random.PRNGKey(0)
+    params = jax.eval_shape(lm.init, key)
+    out: dict[str, PyTree] = {"params": params}
+
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        batch = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+                 "labels": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+        if cfg.family == "vlm":
+            batch["img_ctx"] = jax.ShapeDtypeStruct(
+                (b, cfg.n_img_tokens, cfg.d_model), jnp.float32)
+        if cfg.family == "audio":
+            batch["frames"] = jax.ShapeDtypeStruct(
+                (b, cfg.enc_seq, cfg.d_model), jnp.float32)
+        out["batch"] = batch
+        out["opt"] = jax.eval_shape(init_opt_state, params)
+    elif shape.kind == "prefill":
+        out["tokens"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        if cfg.family == "vlm":
+            out["img_ctx"] = jax.ShapeDtypeStruct(
+                (b, cfg.n_img_tokens, cfg.d_model), jnp.float32)
+        if cfg.family == "audio":
+            out["frames"] = jax.ShapeDtypeStruct(
+                (b, cfg.enc_seq, cfg.d_model), jnp.float32)
+    else:  # decode
+        out["tokens"] = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+        out["cache"] = jax.eval_shape(
+            lambda: lm.init_cache(b, s, start_len=s - 1))
+    return out
+
+
+def _microbatches(cfg, shape, mesh) -> int:
+    """Gradient-accumulation depth: one sequence per device per microbatch
+    (keeps remat-saved activations bounded for the 90B configs)."""
+    dp = 1
+    for a in data_axes(mesh):
+        dp *= mesh.shape[a]
+    return max(1, shape.global_batch // dp)
+
+
+def lower_cell(arch_id: str, shape_name: str, multi_pod: bool,
+               lm_factory=build_lm, sharding_overrides=None,
+               variant: str = "baseline"):
+    cfg = get_config(arch_id)
+    shape = SHAPES[shape_name]
+    ok, why = supports_shape(cfg, shape)
+    if not ok:
+        return {"arch": arch_id, "shape": shape_name,
+                "multi_pod": multi_pod, "status": "SKIP", "reason": why}
+
+    if variant == "opt":
+        lm_factory = build_lm_opt
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    # DP-only for small models in the opt variant (train shapes): with
+    # weights replicated the batch shards over EVERY axis (model axis
+    # would otherwise idle) — 256/512-way DP, zero per-layer collectives.
+    dp_only = (variant == "opt" and shape.kind == "train"
+               and cfg.param_count() * 2 <= 6e9
+               and shape.global_batch % (512 if multi_pod else 256) == 0)
+    batch_axes = tuple(mesh.axis_names) if dp_only else data_axes(mesh)
+    if variant == "opt":
+        from repro.models.shard_ctx import set_ctx
+        set_ctx(mesh, batch_axes, tp=not dp_only)
+    lm = lm_factory(cfg, shape)
+    specs = _specs_for_lm(lm, cfg, shape)
+    pspec = param_specs(mesh, cfg, specs["params"], tp=not dp_only)
+    if sharding_overrides:
+        pspec = sharding_overrides(mesh, cfg, specs["params"], pspec)
+    psh = as_shardings(mesh, pspec)
+
+    with mesh:
+        if shape.kind == "train":
+            if dp_only:
+                chips = 512 if multi_pod else 256
+                mb = max(1, shape.global_batch // chips)
+            else:
+                mb = _microbatches(cfg, shape, mesh)
+            osh = as_shardings(mesh, opt_specs(mesh, cfg, specs["opt"], pspec))
+            step = make_train_step(
+                lm.loss, AdamWConfig(), microbatches=mb,
+                acc_shardings=osh["master"] if variant == "opt" else None)
+            bsh = as_shardings(mesh, batch_specs(mesh, cfg, specs["batch"],
+                                                 dp_axes=batch_axes))
+            fn = jax.jit(step, in_shardings=(psh, osh, bsh),
+                         donate_argnums=(0, 1))
+            lowered = fn.lower(specs["params"], specs["opt"], specs["batch"])
+        elif shape.kind == "prefill":
+            tsh = as_shardings(mesh, batch_specs(
+                mesh, cfg, {"tokens": specs["tokens"]}))["tokens"]
+            kwargs = {}
+            in_sh = [psh, tsh]
+            args = [specs["params"], specs["tokens"]]
+            if "img_ctx" in specs:
+                args.append(specs["img_ctx"])
+                in_sh.append(as_shardings(mesh, batch_specs(
+                    mesh, cfg, {"x": specs["img_ctx"]}))["x"])
+                fn = jax.jit(lambda p, t, i: lm.prefill(p, t, img_ctx=i),
+                             in_shardings=tuple(in_sh))
+            elif "frames" in specs:
+                args.append(specs["frames"])
+                in_sh.append(as_shardings(mesh, batch_specs(
+                    mesh, cfg, {"x": specs["frames"]}))["x"])
+                fn = jax.jit(lambda p, t, f: lm.prefill(p, t, frames=f),
+                             in_shardings=tuple(in_sh))
+            else:
+                fn = jax.jit(lm.prefill, in_shardings=tuple(in_sh))
+            lowered = fn.lower(*args)
+        else:  # decode
+            csh = as_shardings(mesh, cache_specs(mesh, cfg, specs["cache"],
+                                                 shape.global_batch))
+            tsh = NamedSharding(mesh, P(None, None)) \
+                if shape.global_batch == 1 else \
+                as_shardings(mesh, batch_specs(
+                    mesh, cfg, {"tokens": specs["tokens"]}))["tokens"]
+            fn = jax.jit(lm.decode_step, in_shardings=(psh, csh, tsh),
+                         donate_argnums=(1,))
+            lowered = fn.lower(specs["params"], specs["cache"],
+                               specs["tokens"])
+
+        t0 = time.time()
+        compiled = lowered.compile()
+        compile_s = time.time() - t0
+
+    if variant == "opt":
+        from repro.models.shard_ctx import clear_ctx
+        clear_ctx()
+
+    mem = compiled.memory_analysis()
+    print(mem)
+    ca = compiled.cost_analysis()
+    print({k: ca.get(k) for k in ("flops", "bytes accessed")})
+    hlo_text = compiled.as_text()
+    hlo = analyze_hlo(hlo_text)
+    n_chips = 512 if multi_pod else 256
+
+    # persist the per-device HLO (gzip) so the analyzer can be improved
+    # without recompiling all 80 cells
+    hlo_dir = os.environ.get("REPRO_HLO_DIR")
+    if hlo_dir:
+        import gzip
+        os.makedirs(hlo_dir, exist_ok=True)
+        tag = f"{arch_id}__{shape_name}__{'pod2' if multi_pod else 'pod1'}"
+        if variant != "baseline":
+            tag += f"__{variant}"
+        with gzip.open(os.path.join(hlo_dir, tag + ".hlo.gz"), "wt") as f:
+            f.write(hlo_text)
+
+    return {
+        "arch": arch_id, "shape": shape_name, "multi_pod": multi_pod,
+        "variant": variant,
+        "status": "OK", "chips": n_chips, "compile_s": round(compile_s, 1),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+        },
+        "cost_analysis_raw": {"flops": ca.get("flops"),
+                              "bytes_accessed": ca.get("bytes accessed")},
+        "hlo_per_device": {
+            "flops": hlo.flops,
+            "traffic_bytes": hlo.traffic_bytes,
+            "collective_bytes": hlo.collective_bytes,
+            "collective_total": hlo.collective_total,
+        },
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description="multi-pod dry-run")
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="both")
+    ap.add_argument("--variant", choices=["baseline", "opt"],
+                    default="baseline")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                tag = f"{arch}__{shape}__{'pod2' if mp else 'pod1'}"
+                if args.variant != "baseline":
+                    tag += f"__{args.variant}"
+                path = os.path.join(args.out, tag + ".json")
+                print(f"=== {tag} ===", flush=True)
+                try:
+                    rec = lower_cell(arch, shape, mp, variant=args.variant)
+                except Exception as e:
+                    traceback.print_exc()
+                    rec = {"arch": arch, "shape": shape, "multi_pod": mp,
+                           "status": "FAIL", "error": f"{type(e).__name__}: {e}"}
+                    failures += 1
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+                print(rec.get("status"), flush=True)
+    print(f"done; {failures} failures")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

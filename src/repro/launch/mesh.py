@@ -1,0 +1,42 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (not a module-level constant) so
+importing this module never touches jax device state — required by the
+dry-run, whose XLA_FLAGS must be set before any jax initialization.
+
+Single pod:  (16, 16)     axes ("data", "model")          = 256 chips
+Multi-pod:   (2, 16, 16)  axes ("pod", "data", "model")   = 512 chips
+
+"pod" composes with "data" for batch/gradient reduction (hierarchical:
+reduce-scatter over ICI within a pod, all-reduce over DCN across pods).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    devices = jax.devices()[:n]
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for the production mesh, have "
+            f"{len(devices)} — the dry-run must set "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=512 before "
+            "any jax import")
+    import numpy as np
+    dev_array = np.asarray(devices).reshape(shape)
+    return jax.sharding.Mesh(dev_array, axes)
+
+
+def data_axes(mesh) -> tuple[str, ...]:
+    """The composed data-parallel axes ("pod","data") or ("data",)."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def model_axis(mesh) -> str:
+    return "model"

@@ -1,0 +1,241 @@
+"""Sharding rules: PartitionSpec trees for params, optimizer state, batches
+and decode caches, per (arch × shape × mesh).
+
+Strategy (baseline; §Perf iterates on it):
+  * TP ("model"): attention heads (or head_dim when heads don't divide),
+    FFN hidden, vocab; MoE experts (EP) over the same axis.
+  * DP ("data" [+ "pod"]): batch dim of activations; FSDP-style sharding of
+    the non-TP weight dim (ZeRO-3) so 90B × fp32 optimizer state fits HBM.
+  * Decode caches: batch over DP; cache sequence over "model"
+    (sequence-parallel flash-decode — the aggregate Merge over ICI); for
+    long_500k (batch=1), sequence over every axis that divides.
+
+Dimension assignment is divisibility-driven: each dim has an ordered
+preference of mesh axes; the first unused axis that divides the dim size is
+assigned (``_assign``).  This keeps one rule set valid across all ten
+architectures (40-head models don't 16-way shard heads; 50280-row vocabs
+don't 16-way shard rows; the helper falls back per-leaf).
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeSpec
+
+from .mesh import data_axes
+
+PyTree = Any
+
+
+def _axis_size(mesh, axis) -> int:
+    if isinstance(axis, tuple):
+        n = 1
+        for a in axis:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[axis]
+
+
+def _assign(mesh, shape: tuple[int, ...],
+            prefs: list[tuple[int, Any]]) -> P:
+    """Assign mesh axes to dims: prefs is an ordered list of
+    (dim_index, axis_or_tuple); an axis is used at most once and only if it
+    divides the dim."""
+    spec: list[Any] = [None] * len(shape)
+    used: set[str] = set()
+    for dim, axis in prefs:
+        if dim >= len(shape) or spec[dim] is not None:
+            continue
+        axes = axis if isinstance(axis, tuple) else (axis,)
+        if any(a in used for a in axes):
+            continue
+        if any(a not in mesh.axis_names for a in axes):
+            continue
+        if shape[dim] % _axis_size(mesh, axis) == 0 and shape[dim] > 0:
+            spec[dim] = axis
+            used.update(axes)
+    return P(*spec)
+
+
+# --------------------------------------------------------------------------
+# Parameter rules (matched on tree path)
+# --------------------------------------------------------------------------
+
+
+def param_specs(mesh, cfg: ArchConfig, param_tree: PyTree,
+                fsdp: bool = True, tp: bool = True) -> PyTree:
+    """PartitionSpec tree mirroring ``param_tree`` (shapes may come from
+    jax.eval_shape — no allocation).
+
+    HARD RULE (learned from the dry-run, see EXPERIMENTS.md §Dry-run): the
+    bf16 params used in forward/backward shard over the "model" axis ONLY.
+    Sharding a weight over the same axis as the batch makes the SPMD
+    partitioner resolve the per-op conflict by REPLICATING activations
+    (observed: whisper logits 13.6 GB/device; qwen attention blocks fully
+    replicated).  ZeRO-style data-axis sharding lives on the fp32
+    optimizer state instead (``opt_specs``): its all-gather/reduce-scatter
+    happens in the purely elementwise update where no batch axis exists.
+
+    Preference order per weight: natural TP dim (heads / ff / experts /
+    vocab) over "model"; if it does not divide, the contraction (d) dim
+    over "model" (weight-gather TP).  Do NOT shard head_dim: RoPE's
+    rotate-half across a sharded Dh triggers involuntary full
+    rematerialization in the partitioner."""
+
+    if not tp:
+        # DP-only (§Perf iteration 7): for models whose bf16 weights fit
+        # replicated (≲6 GB), tensor parallelism only buys per-layer
+        # activation all-reduces (2/layer × microbatches); pure DP pays
+        # ONE grad all-reduce per step and the ZeRO-sharded optimizer
+        # keeps the fp32 state at 1/chips.  2.7B on 256 chips is DP-shaped.
+        # Everything replicated — including the embedding: with the batch
+        # sharded over the model axis too (full DP), a vocab@model table
+        # would recreate the batch/weight axis conflict.
+        return jax.tree.map(lambda _: P(), param_tree)
+
+    def rule(path: str, leaf) -> P:
+        shape = tuple(leaf.shape)
+        nd = len(shape)
+        if "embedding" in path:
+            return _assign(mesh, shape, [(nd - 2, "model"), (nd - 1, "model")])
+        if re.search(r"(attn|xattn)/w[qkv]$", path):
+            # (..., d, H, Dh): heads on model, else d on model
+            return _assign(mesh, shape, [(nd - 2, "model"), (nd - 3, "model")])
+        if re.search(r"(attn|xattn)/wo$", path):
+            return _assign(mesh, shape, [(nd - 3, "model"), (nd - 1, "model")])
+        if re.search(r"(attn|xattn)/b[qkv]$", path):
+            return _assign(mesh, shape, [(nd - 2, "model")])
+        # MoE experts: (..., E, d, ff) / (..., E, ff, d) — EP over model
+        if re.search(r"moe/w_(gate|up|down)$", path):
+            return _assign(mesh, shape, [(nd - 3, "model")])
+        if "router" in path:
+            return P()
+        # dense MLP: (..., d, ff) and (..., ff, d)
+        if re.search(r"mlp/w_(gate|up|in)$", path):
+            return _assign(mesh, shape, [(nd - 1, "model"), (nd - 2, "model")])
+        if re.search(r"mlp/w_(down|out)$", path):
+            return _assign(mesh, shape, [(nd - 2, "model"), (nd - 1, "model")])
+        # SSM: interleaved fused z|x projection (d, 2, d_inner) — the
+        # d_inner dim over model; the 2-dim slices locally
+        if re.search(r"ssm/w_zx$", path):
+            return _assign(mesh, shape, [(nd - 1, "model"), (nd - 3, "model")])
+        if re.search(r"ssm/w_(bc|dt)$", path):
+            return P()   # tiny; replicated => no backward dx all-reduce
+        if re.search(r"ssm/w_out$", path):
+            return _assign(mesh, shape, [(nd - 2, "model"), (nd - 1, "model")])
+        if re.search(r"ssm/conv_w$", path):
+            return _assign(mesh, shape, [(nd - 1, "model")])
+        # norms, biases, gates, small vectors: replicated
+        return P()
+
+    def with_path(path, leaf):
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        return rule(key, leaf)
+
+    return jax.tree_util.tree_map_with_path(with_path, param_tree)
+
+
+def _densify(mesh, spec: P, shape: tuple[int, ...]) -> P:
+    """Add data-axis (ZeRO) sharding on the largest free dividing dim —
+    used for the fp32 optimizer state, whose ops are elementwise (no batch
+    axis to conflict with).  The per-step master→bf16 cast is then exactly
+    ZeRO-3's weight all-gather; the grad resharding is its reduce-scatter."""
+    dp = data_axes(mesh)
+    dp_size = _axis_size(mesh, dp)
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    free = [(shape[i], i) for i, e in enumerate(entries)
+            if e is None and shape[i] % dp_size == 0 and shape[i] > 0]
+    if free:
+        _, idx = max(free)
+        entries[idx] = dp
+    return P(*entries)
+
+
+def opt_specs(mesh, cfg: ArchConfig, opt_tree: PyTree,
+              params_spec: PyTree) -> PyTree:
+    """fp32 master/m/v: parameter sharding + ZeRO data-axis sharding."""
+    def leaf_spec(spec, leaf):
+        return _densify(mesh, spec, tuple(leaf.shape))
+
+    dense = jax.tree.map(leaf_spec, params_spec, opt_tree["master"],
+                         is_leaf=lambda x: isinstance(x, P))
+    return {
+        "master": dense, "m": dense, "v": dense,
+        "step": P(),
+    }
+
+
+# --------------------------------------------------------------------------
+# Batch / cache rules
+# --------------------------------------------------------------------------
+
+
+def batch_specs(mesh, cfg: ArchConfig, batch_tree: PyTree,
+                dp_axes=None) -> PyTree:
+    """``dp_axes`` overrides the batch axes — DP-only small models shard
+    the batch over EVERY mesh axis (256-way DP; the model axis would
+    otherwise sit idle)."""
+    dp = tuple(dp_axes) if dp_axes is not None else data_axes(mesh)
+
+    def rule(path, leaf):
+        shape = tuple(leaf.shape)
+        # (B, S) tokens/labels or (B, S, d) frontend embeddings
+        return _assign(mesh, shape, [(0, dp), (0, "data")])
+
+    return jax.tree_util.tree_map_with_path(
+        lambda p, l: rule(p, l), batch_tree)
+
+
+def cache_specs(mesh, cfg: ArchConfig, cache_tree: PyTree,
+                batch: int) -> PyTree:
+    """Decode-cache sharding.  KV caches (L, B, S, Hkv, Dh): batch over DP
+    when it divides, cache sequence over "model" (sequence-parallel
+    decode); batch=1 long-context shards the sequence over everything
+    available.  SSM states shard heads/channels over "model"."""
+    dp = data_axes(mesh)
+    all_axes = tuple(mesh.axis_names)
+
+    def rule(path: str, leaf) -> P:
+        shape = tuple(leaf.shape)
+        nd = len(shape)
+        if path.endswith("len"):
+            return _assign(mesh, shape, [(nd - 1, dp)])
+        if re.search(r"(^|/)(k|v)$", path):
+            # (L[, G], B, S, Hkv, Dh)
+            if batch == 1:
+                return _assign(mesh, shape,
+                               [(nd - 3, all_axes), (nd - 3, ("data", "model")),
+                                (nd - 3, "model"), (nd - 3, dp)])
+            return _assign(mesh, shape, [(nd - 4, dp), (nd - 3, "model"),
+                                         (nd - 2, "model")])
+        if path.endswith("conv"):
+            # (L, B, W-1, C)
+            return _assign(mesh, shape, [(nd - 3, dp), (nd - 1, ("pod", "model")
+                                         if "pod" in mesh.axis_names
+                                         else "model")])
+        if path.endswith("h"):
+            # (L, B, H, N, P)
+            prefs = [(nd - 4, dp), (nd - 3, "model")]
+            if "pod" in mesh.axis_names:
+                prefs.append((nd - 1, "pod"))
+            return _assign(mesh, shape, prefs)
+        return P()
+
+    def with_path(path, leaf):
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        return rule(key, leaf)
+
+    return jax.tree_util.tree_map_with_path(with_path, cache_tree)
+
+
+def as_shardings(mesh, spec_tree: PyTree) -> PyTree:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,6 @@
+"""repro.models — config-driven model zoo: dense GQA, MoE, SSD (Mamba-2),
+hybrid (Hymba), cross-attn VLM, enc-dec audio.  Decode attention and the
+SSD scan implement the paper's aggregation contract."""
+from .model import LM
+
+__all__ = ["LM"]

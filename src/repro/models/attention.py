@@ -1,0 +1,203 @@
+"""GQA attention — flash (blockwise) causal/SWA prefill and
+aggregate-contract decode.
+
+The online-softmax state (m, l, acc) is a paper-contract ``Aggregate``
+(``softmax_aggregate``): prefill accumulates over KV chunks (models/flash.py)
+and sequence-parallel decode merges per-shard partials with its Merge —
+Aggify's chunked/sharded execution on the sequence axis.  The Pallas twin of
+the decode path is ``repro.kernels.decode_attn``.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.aggregate import Aggregate
+
+from .flash import flash_attention
+from .layers import F32, apply_rope, rms_norm
+
+PyTree = Any
+NEG_INF = -1e30
+
+
+def init_attention(key, d: int, n_heads: int, n_kv: int, d_head: int,
+                   qkv_bias: bool, qk_norm: bool, dtype=jnp.bfloat16) -> PyTree:
+    ks = jax.random.split(key, 4)
+    s = 1.0 / math.sqrt(d)
+    so = 1.0 / math.sqrt(n_heads * d_head)
+    p = {
+        "wq": (jax.random.normal(ks[0], (d, n_heads, d_head), F32) * s).astype(dtype),
+        "wk": (jax.random.normal(ks[1], (d, n_kv, d_head), F32) * s).astype(dtype),
+        "wv": (jax.random.normal(ks[2], (d, n_kv, d_head), F32) * s).astype(dtype),
+        "wo": (jax.random.normal(ks[3], (n_heads, d_head, d), F32) * so).astype(dtype),
+    }
+    if qkv_bias:
+        p["bq"] = jnp.zeros((n_heads, d_head), dtype)
+        p["bk"] = jnp.zeros((n_kv, d_head), dtype)
+        p["bv"] = jnp.zeros((n_kv, d_head), dtype)
+    if qk_norm:
+        p["q_norm"] = jnp.ones((d_head,), dtype)
+        p["k_norm"] = jnp.ones((d_head,), dtype)
+    return p
+
+
+def project_qkv(params, x, positions, rope_theta):
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"],
+                   preferred_element_type=F32).astype(x.dtype)
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"],
+                   preferred_element_type=F32).astype(x.dtype)
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"],
+                   preferred_element_type=F32).astype(x.dtype)
+    if "bq" in params:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    if "q_norm" in params:
+        q = rms_norm(q, params["q_norm"])
+        k = rms_norm(k, params["k_norm"])
+    if rope_theta:
+        q = apply_rope(q, positions, rope_theta)
+        k = apply_rope(k, positions, rope_theta)
+    return q, k, v
+
+
+def attention_layer(params: PyTree, x: jax.Array, positions: jax.Array, *,
+                    n_heads: int, rope_theta: float = 1e4, window: int = 0,
+                    q_chunk: int = 1024, kv_chunk: int = 1024,
+                    cross_kv: Optional[tuple] = None, causal: bool = True,
+                    ) -> tuple[jax.Array, tuple[jax.Array, jax.Array]]:
+    """Full-sequence attention (train / prefill).  Returns (y, (k, v))."""
+    if cross_kv is None:
+        q, k, v = project_qkv(params, x, positions, rope_theta)
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", x, params["wq"],
+                       preferred_element_type=F32).astype(x.dtype)
+        if "q_norm" in params:
+            q = rms_norm(q, params["q_norm"])
+        k, v = cross_kv
+        causal = False
+    out = flash_attention(q, k, v, causal, window, q_chunk, kv_chunk)
+    y = jnp.einsum("bshd,hdo->bso", out, params["wo"],
+                   preferred_element_type=F32).astype(x.dtype)
+    return y, (k, v)
+
+
+def project_cross_kv(params: PyTree, ctx: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Precompute the K/V of a cross-attention context (encoder output or
+    image embeddings)."""
+    k = jnp.einsum("bsd,dhk->bshk", ctx, params["wk"],
+                   preferred_element_type=F32).astype(ctx.dtype)
+    v = jnp.einsum("bsd,dhk->bshk", ctx, params["wv"],
+                   preferred_element_type=F32).astype(ctx.dtype)
+    if "k_norm" in params:
+        k = rms_norm(k, params["k_norm"])
+    return k, v
+
+
+# --------------------------------------------------------------------------
+# Decode — the aggregate path
+# --------------------------------------------------------------------------
+
+
+def softmax_aggregate(d_head: int) -> Aggregate:
+    """Online-softmax as the paper's Init/Accumulate/Merge/Terminate; used
+    by tests and by sequence-parallel shard merges."""
+    def init():
+        return {"m": jnp.full((), NEG_INF, F32), "l": jnp.zeros((), F32),
+                "acc": jnp.zeros((d_head,), F32)}
+
+    def accumulate(state, row):
+        m_new = jnp.maximum(state["m"], row["s"])
+        alpha = jnp.exp(state["m"] - m_new)
+        p = jnp.exp(row["s"] - m_new)
+        return {"m": m_new,
+                "l": state["l"] * alpha + p,
+                "acc": state["acc"] * alpha + p * row["v"].astype(F32)}
+
+    def merge(a, b):
+        m = jnp.maximum(a["m"], b["m"])
+        aa, ab = jnp.exp(a["m"] - m), jnp.exp(b["m"] - m)
+        return {"m": m, "l": a["l"] * aa + b["l"] * ab,
+                "acc": a["acc"] * aa + b["acc"] * ab}
+
+    def terminate(state):
+        return state["acc"] / jnp.maximum(state["l"], 1e-30)
+
+    return Aggregate("online_softmax", init, accumulate, terminate,
+                     merge=merge, identity=init)
+
+
+def _expand_kv(k: jax.Array, n_heads: int) -> jax.Array:
+    b, s, hkv, d = k.shape
+    g = n_heads // hkv
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, hkv, g, d)) \
+        .reshape(b, s, n_heads, d)
+
+
+def decode_attention_jnp(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                         kv_len: jax.Array) -> jax.Array:
+    """q (B,H,D); caches (B,S,Hkv,D); kv_len (B,) → (B,H,D).
+
+    Flash-decode in jnp (fp32 softmax); with the cache S axis sharded, the
+    partitioner emits the partial-softmax combine over ICI — the aggregate
+    Merge.  Pallas twin: kernels/decode_attn.py."""
+    b, h, d = q.shape
+    s = k_cache.shape[1]
+    hkv = k_cache.shape[2]
+    g = h // hkv
+    qg = q.reshape(b, hkv, g, d)
+    logits = jnp.einsum("bhgd,bshd->bhgs", qg, k_cache,
+                        preferred_element_type=F32) / math.sqrt(d)
+    ok = jnp.arange(s)[None, None, None, :] < kv_len[:, None, None, None]
+    logits = jnp.where(ok, logits, NEG_INF)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    p = jnp.exp(logits - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    w = (p / jnp.maximum(l, 1e-30)).astype(v_cache.dtype)
+    out = jnp.einsum("bhgs,bshd->bhgd", w, v_cache,
+                     preferred_element_type=F32)
+    return out.reshape(b, h, d).astype(q.dtype)
+
+
+def decode_step_attention(params: PyTree, x: jax.Array, cache: PyTree, *,
+                          n_heads: int, rope_theta: float = 1e4,
+                          window: int = 0) -> tuple[jax.Array, PyTree]:
+    """One-token decode.  x (B,1,d).  cache {"k","v" (B,S,Hkv,D),
+    "len" (B,)} — S == window for SWA archs (ring buffer, absolute-RoPE
+    keys stored)."""
+    pos = cache["len"][:, None]
+    q, k, v = project_qkv(params, x, pos, rope_theta)
+    cap = cache["k"].shape[1]
+    slot = cache["len"] % cap if window else jnp.minimum(cache["len"], cap - 1)
+    kc = _scatter_rows(cache["k"], slot, k)
+    vc = _scatter_rows(cache["v"], slot, v)
+    new_len = cache["len"] + 1
+    eff = jnp.minimum(new_len, cap)
+    out = decode_attention_jnp(q[:, 0], kc, vc, eff)
+    y = jnp.einsum("bhd,hdo->bo", out, params["wo"],
+                   preferred_element_type=F32).astype(x.dtype)
+    return y[:, None, :], {"k": kc, "v": vc, "len": new_len}
+
+
+def decode_cross_attention(params: PyTree, x: jax.Array,
+                           cross_cache: PyTree) -> jax.Array:
+    """Cross-attention during decode: static encoder KV, no cache update."""
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"],
+                   preferred_element_type=F32).astype(x.dtype)
+    if "q_norm" in params:
+        q = rms_norm(q, params["q_norm"])
+    out = decode_attention_jnp(q[:, 0], cross_cache["k"], cross_cache["v"],
+                               cross_cache["len"])
+    y = jnp.einsum("bhd,hdo->bo", out, params["wo"],
+                   preferred_element_type=F32).astype(x.dtype)
+    return y[:, None, :]
+
+
+def _scatter_rows(cache: jax.Array, slot: jax.Array, new: jax.Array) -> jax.Array:
+    """cache (B,S,H,D); slot (B,); new (B,1,H,D)."""
+    s = cache.shape[1]
+    onehot = jax.nn.one_hot(slot, s, dtype=cache.dtype)          # (B,S)
+    return cache * (1 - onehot)[:, :, None, None] + \
+        onehot[:, :, None, None] * new

@@ -1,0 +1,244 @@
+"""Per-family transformer blocks (full-sequence + decode variants), built
+from the attention/ssm/moe sublayers.  All blocks are pure functions of
+(stacked-layer) param dicts — scanned over layers by models/model.py."""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from jax.ad_checkpoint import checkpoint_name
+
+from repro.configs.base import ArchConfig
+
+from .attention import (attention_layer, decode_cross_attention,
+                        decode_step_attention, init_attention,
+                        project_cross_kv)
+from .layers import (F32, gated_mlp, gelu_mlp, init_embed, init_gated_mlp,
+                     init_gelu_mlp, init_rms_norm, layer_norm, rms_norm)
+from .moe import init_moe, moe_layer
+from .ssm import decode_step_ssm, init_ssm, init_ssm_cache, ssm_layer
+
+PyTree = Any
+
+
+def _norm(cfg: ArchConfig, params, x, which: str):
+    if cfg.norm == "ln":
+        return layer_norm(x, params[which]["scale"], params[which]["bias"])
+    return rms_norm(x, params[which])
+
+
+def init_norm(cfg: ArchConfig, dtype=jnp.bfloat16):
+    if cfg.norm == "ln":
+        return {"scale": jnp.ones((cfg.d_model,), dtype),
+                "bias": jnp.zeros((cfg.d_model,), dtype)}
+    return init_rms_norm(cfg.d_model, dtype)
+
+
+# --------------------------------------------------------------------------
+# Block init
+# --------------------------------------------------------------------------
+
+
+def init_block(key, cfg: ArchConfig, kind: str, dtype=jnp.bfloat16) -> PyTree:
+    ks = jax.random.split(key, 4)
+    d = cfg.d_model
+    p: dict[str, Any] = {}
+    if kind in ("dense", "moe", "hybrid", "enc", "dec", "cross"):
+        p["norm1"] = init_norm(cfg, dtype)
+    if kind in ("dense", "moe", "hybrid", "enc", "dec", "cross"):
+        p["norm2"] = init_norm(cfg, dtype)
+    if kind == "dense" or kind == "enc":
+        p["attn"] = init_attention(ks[0], d, cfg.n_heads, cfg.n_kv_heads,
+                                   cfg.head_dim, cfg.qkv_bias, cfg.qk_norm,
+                                   dtype)
+        p["mlp"] = (init_gelu_mlp(ks[1], d, cfg.d_ff, dtype)
+                    if cfg.norm == "ln" else
+                    init_gated_mlp(ks[1], d, cfg.d_ff, dtype))
+    elif kind == "moe":
+        p["attn"] = init_attention(ks[0], d, cfg.n_heads, cfg.n_kv_heads,
+                                   cfg.head_dim, cfg.qkv_bias, cfg.qk_norm,
+                                   dtype)
+        p["moe"] = init_moe(ks[1], d, cfg.d_ff, cfg.n_experts, dtype)
+    elif kind == "ssm":
+        p["norm1"] = init_norm(cfg, dtype)
+        p["ssm"] = init_ssm(ks[0], d, state=cfg.ssm_state,
+                            headdim=cfg.ssm_headdim, expand=cfg.ssm_expand,
+                            conv_width=cfg.conv_width, dtype=dtype)
+    elif kind == "hybrid":
+        p["attn"] = init_attention(ks[0], d, cfg.n_heads, cfg.n_kv_heads,
+                                   cfg.head_dim, cfg.qkv_bias, cfg.qk_norm,
+                                   dtype)
+        p["ssm"] = init_ssm(ks[1], d, state=cfg.ssm_state,
+                            headdim=cfg.ssm_headdim, expand=cfg.ssm_expand,
+                            conv_width=cfg.conv_width, dtype=dtype)
+        p["mlp"] = init_gated_mlp(ks[2], d, cfg.d_ff, dtype)
+    elif kind == "cross":
+        p["attn"] = init_attention(ks[0], d, cfg.n_heads, cfg.n_kv_heads,
+                                   cfg.head_dim, cfg.qkv_bias, cfg.qk_norm,
+                                   dtype)
+        p["mlp"] = (init_gelu_mlp(ks[1], d, cfg.d_ff, dtype)
+                    if cfg.norm == "ln" else
+                    init_gated_mlp(ks[1], d, cfg.d_ff, dtype))
+        p["gate"] = jnp.zeros((), F32)   # tanh-gated cross-attn (llama-vision)
+    elif kind == "dec":
+        p["attn"] = init_attention(ks[0], d, cfg.n_heads, cfg.n_kv_heads,
+                                   cfg.head_dim, cfg.qkv_bias, cfg.qk_norm,
+                                   dtype)
+        p["xattn"] = init_attention(ks[1], d, cfg.n_heads, cfg.n_kv_heads,
+                                    cfg.head_dim, cfg.qkv_bias, cfg.qk_norm,
+                                    dtype)
+        p["norm3"] = init_norm(cfg, dtype)
+        p["mlp"] = init_gelu_mlp(ks[2], d, cfg.d_ff, dtype)
+    else:
+        raise ValueError(kind)
+    return p
+
+
+# --------------------------------------------------------------------------
+# Full-sequence (train / prefill) blocks.  Each returns (x, cache_entry).
+# --------------------------------------------------------------------------
+
+
+def fwd_dense(params, x, positions, cfg: ArchConfig, *, q_chunk, kv_chunk,
+              causal=True):
+    h, kv = attention_layer(params["attn"], _norm(cfg, params, x, "norm1"),
+                            positions, n_heads=cfg.n_heads,
+                            rope_theta=cfg.rope_theta,
+                            window=cfg.sliding_window,
+                            q_chunk=q_chunk, kv_chunk=kv_chunk)
+    x = x + checkpoint_name(h, "sublayer_out")
+    mlp = gelu_mlp if cfg.norm == "ln" else gated_mlp
+    x = x + checkpoint_name(mlp(params["mlp"], _norm(cfg, params, x, "norm2")), "sublayer_out")
+    return x, kv
+
+
+def fwd_moe(params, x, positions, cfg: ArchConfig, *, q_chunk, kv_chunk):
+    h, kv = attention_layer(params["attn"], _norm(cfg, params, x, "norm1"),
+                            positions, n_heads=cfg.n_heads,
+                            rope_theta=cfg.rope_theta,
+                            window=cfg.sliding_window,
+                            q_chunk=q_chunk, kv_chunk=kv_chunk)
+    x = x + checkpoint_name(h, "sublayer_out")
+    y, aux = moe_layer(params["moe"], _norm(cfg, params, x, "norm2"),
+                       n_experts=cfg.n_experts, top_k=cfg.top_k)
+    return x + checkpoint_name(y, "sublayer_out"), (kv, aux)
+
+
+def fwd_ssm(params, x, cfg: ArchConfig, *, ssd_chunk, use_pallas=None):
+    h = ssm_layer(params["ssm"], _norm(cfg, params, x, "norm1"),
+                  state=cfg.ssm_state, headdim=cfg.ssm_headdim,
+                  expand=cfg.ssm_expand, chunk=ssd_chunk,
+                  use_pallas=use_pallas)
+    return x + checkpoint_name(h, "sublayer_out")
+
+
+def fwd_hybrid(params, x, positions, cfg: ArchConfig, *, q_chunk, kv_chunk,
+               ssd_chunk, use_pallas=None):
+    xn = _norm(cfg, params, x, "norm1")
+    ha, kv = attention_layer(params["attn"], xn, positions,
+                             n_heads=cfg.n_heads, rope_theta=cfg.rope_theta,
+                             window=cfg.sliding_window,
+                             q_chunk=q_chunk, kv_chunk=kv_chunk)
+    hs = ssm_layer(params["ssm"], xn, state=cfg.ssm_state,
+                   headdim=cfg.ssm_headdim, expand=cfg.ssm_expand,
+                   chunk=ssd_chunk, use_pallas=use_pallas)
+    x = x + checkpoint_name(0.5 * (ha + hs), "sublayer_out")
+    x = x + checkpoint_name(gated_mlp(params["mlp"], _norm(cfg, params, x, "norm2")), "sublayer_out")
+    return x, kv
+
+
+def fwd_cross(params, x, img_kv, cfg: ArchConfig, *, q_chunk, kv_chunk):
+    h, _ = attention_layer(params["attn"], _norm(cfg, params, x, "norm1"),
+                           positions=None, n_heads=cfg.n_heads,
+                           rope_theta=0.0, q_chunk=q_chunk,
+                           kv_chunk=kv_chunk, cross_kv=img_kv)
+    x = x + jnp.tanh(params["gate"]).astype(x.dtype) * h
+    mlp = gelu_mlp if cfg.norm == "ln" else gated_mlp
+    x = x + mlp(params["mlp"], _norm(cfg, params, x, "norm2"))
+    return x
+
+
+def fwd_dec(params, x, positions, enc_kv, cfg: ArchConfig, *, q_chunk,
+            kv_chunk):
+    h, kv = attention_layer(params["attn"], _norm(cfg, params, x, "norm1"),
+                            positions, n_heads=cfg.n_heads,
+                            rope_theta=cfg.rope_theta,
+                            q_chunk=q_chunk, kv_chunk=kv_chunk)
+    x = x + h
+    h, _ = attention_layer(params["xattn"], _norm(cfg, params, x, "norm2"),
+                           positions=None, n_heads=cfg.n_heads,
+                           rope_theta=0.0, q_chunk=q_chunk,
+                           kv_chunk=kv_chunk, cross_kv=enc_kv)
+    x = x + h
+    x = x + gelu_mlp(params["mlp"], _norm(cfg, params, x, "norm3"))
+    return x, kv
+
+
+# --------------------------------------------------------------------------
+# Decode blocks (one token).  Each returns (x, new_cache_entry).
+# --------------------------------------------------------------------------
+
+
+def dec_dense(params, x, cache, cfg: ArchConfig):
+    h, new_cache = decode_step_attention(
+        params["attn"], _norm(cfg, params, x, "norm1"), cache,
+        n_heads=cfg.n_heads, rope_theta=cfg.rope_theta,
+        window=cfg.sliding_window)
+    x = x + h
+    mlp = gelu_mlp if cfg.norm == "ln" else gated_mlp
+    x = x + mlp(params["mlp"], _norm(cfg, params, x, "norm2"))
+    return x, new_cache
+
+
+def dec_moe(params, x, cache, cfg: ArchConfig):
+    h, new_cache = decode_step_attention(
+        params["attn"], _norm(cfg, params, x, "norm1"), cache,
+        n_heads=cfg.n_heads, rope_theta=cfg.rope_theta,
+        window=cfg.sliding_window)
+    x = x + h
+    y, _ = moe_layer(params["moe"], _norm(cfg, params, x, "norm2"),
+                     n_experts=cfg.n_experts, top_k=cfg.top_k)
+    return x + y, new_cache
+
+
+def dec_ssm(params, x, cache, cfg: ArchConfig):
+    h, new_cache = decode_step_ssm(
+        params["ssm"], _norm(cfg, params, x, "norm1"), cache,
+        state=cfg.ssm_state, headdim=cfg.ssm_headdim, expand=cfg.ssm_expand)
+    return x + h, new_cache
+
+
+def dec_hybrid(params, x, cache, cfg: ArchConfig):
+    xn = _norm(cfg, params, x, "norm1")
+    ha, attn_cache = decode_step_attention(
+        params["attn"], xn, cache["attn"], n_heads=cfg.n_heads,
+        rope_theta=cfg.rope_theta, window=cfg.sliding_window)
+    hs, ssm_cache = decode_step_ssm(
+        params["ssm"], xn, cache["ssm"], state=cfg.ssm_state,
+        headdim=cfg.ssm_headdim, expand=cfg.ssm_expand)
+    x = x + 0.5 * (ha + hs)
+    x = x + gated_mlp(params["mlp"], _norm(cfg, params, x, "norm2"))
+    return x, {"attn": attn_cache, "ssm": ssm_cache}
+
+
+def dec_cross(params, x, img_cache, cfg: ArchConfig):
+    h = decode_cross_attention(params["attn"],
+                               _norm(cfg, params, x, "norm1"), img_cache)
+    x = x + jnp.tanh(params["gate"]).astype(x.dtype) * h
+    mlp = gelu_mlp if cfg.norm == "ln" else gated_mlp
+    x = x + mlp(params["mlp"], _norm(cfg, params, x, "norm2"))
+    return x
+
+
+def dec_dec(params, x, cache, enc_cache, cfg: ArchConfig):
+    h, new_cache = decode_step_attention(
+        params["attn"], _norm(cfg, params, x, "norm1"), cache,
+        n_heads=cfg.n_heads, rope_theta=cfg.rope_theta)
+    x = x + h
+    h = decode_cross_attention(params["xattn"],
+                               _norm(cfg, params, x, "norm2"), enc_cache)
+    x = x + h
+    x = x + gelu_mlp(params["mlp"], _norm(cfg, params, x, "norm3"))
+    return x, new_cache

@@ -1,0 +1,195 @@
+"""Blockwise (flash-style) attention in pure JAX with a custom VJP.
+
+Forward: online-softmax accumulation over KV chunks (the Aggregate of the
+paper's contract, on the sequence axis).  Saves only (out, m, l) per
+position — O(S·D) residuals instead of O(S²) logits.
+
+Backward: the standard two-pass recompute —
+  pass A: per q-block, rescan KV to rebuild p and accumulate dq;
+  pass B: per kv-block, rescan Q to accumulate dk, dv.
+
+GQA-aware: q (B,S,H,D) groups over kv (B,S,Hkv,D) without materializing the
+H-expanded KV.  Sliding-window masking composes with the causal mask.
+
+This is the TRAIN/PREFILL execution plan that the dry-run lowers; on real
+TPUs the inner block math maps 1:1 onto an MXU kernel (and the decode-side
+twin IS a Pallas kernel: kernels/decode_attn.py).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+NEG_INF = -1e30
+
+
+def _block_mask(q_pos, kv_pos, causal: bool, window: int, s_kv: int):
+    mask = (kv_pos < s_kv)[None, :]
+    if causal:
+        mask &= q_pos[:, None] >= kv_pos[None, :]
+        if window:
+            mask &= (q_pos[:, None] - kv_pos[None, :]) < window
+    return mask
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def flash_attention(q, k, v, causal: bool = True, window: int = 0,
+                    q_chunk: int = 1024, kv_chunk: int = 1024):
+    """q (B,S,H,D); k,v (B,Skv,Hkv,D) → out (B,S,H,D)."""
+    out, _ = _flash_fwd(q, k, v, causal, window, q_chunk, kv_chunk)
+    return out
+
+
+def _pad_blocks(x, chunk, axis=1):
+    s = x.shape[axis]
+    n = -(-s // chunk)
+    pad = n * chunk - s
+    if pad:
+        cfg = [(0, 0)] * x.ndim
+        cfg[axis] = (0, pad)
+        x = jnp.pad(x, cfg)
+    return x, n
+
+
+def _flash_fwd(q, k, v, causal, window, q_chunk, kv_chunk):
+    b, s, h, d = q.shape
+    s_kv, hkv = k.shape[1], k.shape[2]
+    g = h // hkv
+    scale = 1.0 / math.sqrt(d)
+    q_chunk = min(q_chunk, s)
+    kv_chunk = min(kv_chunk, s_kv)
+
+    qp, nq = _pad_blocks(q, q_chunk)
+    kp, nkv = _pad_blocks(k, kv_chunk)
+    vp, _ = _pad_blocks(v, kv_chunk)
+
+    qb = qp.reshape(b, nq, q_chunk, hkv, g, d).transpose(1, 0, 3, 4, 2, 5)
+    kb = kp.reshape(b, nkv, kv_chunk, hkv, d).transpose(1, 0, 3, 2, 4)
+    vb = vp.reshape(b, nkv, kv_chunk, hkv, d).transpose(1, 0, 3, 2, 4)
+    # qb (nq, B, Hkv, G, qc, D); kb/vb (nkv, B, Hkv, kc, D)
+
+    q_pos = jnp.arange(nq * q_chunk).reshape(nq, q_chunk)
+    kv_pos = jnp.arange(nkv * kv_chunk).reshape(nkv, kv_chunk)
+
+    def q_block(qi, q_posi):
+        def kv_step(carry, inp):
+            m, l, acc = carry
+            ki, vi, kv_posi = inp
+            logits = jnp.einsum("bhgqd,bhkd->bhgqk", qi, ki,
+                                preferred_element_type=F32) * scale
+            mask = _block_mask(q_posi, kv_posi, causal, window, s_kv)
+            logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(logits, axis=-1))
+            p = jnp.exp(logits - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bhgqk,bhkd->bhgqd", p.astype(vi.dtype), vi,
+                            preferred_element_type=F32)
+            return (m_new, l_new, acc * alpha[..., None] + pv), None
+
+        m0 = jnp.full((b, hkv, g, q_chunk), NEG_INF, F32)
+        l0 = jnp.zeros((b, hkv, g, q_chunk), F32)
+        a0 = jnp.zeros((b, hkv, g, q_chunk, d), F32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), (kb, vb, kv_pos))
+        o = acc / jnp.maximum(l, 1e-30)[..., None]
+        return o.astype(q.dtype), m + jnp.log(jnp.maximum(l, 1e-30))
+
+    ob, lse_b = jax.lax.map(lambda args: q_block(*args), (qb, q_pos))
+    out = ob.transpose(1, 0, 4, 2, 3, 5).reshape(b, nq * q_chunk, h, d)[:, :s]
+    # lse (nq, B, Hkv, G, qc) — saved for backward
+    return out, (q, k, v, out, lse_b)
+
+
+def _flash_bwd(causal, window, q_chunk, kv_chunk, res, dout):
+    q, k, v, out, lse_b = res
+    b, s, h, d = q.shape
+    s_kv, hkv = k.shape[1], k.shape[2]
+    g = h // hkv
+    scale = 1.0 / math.sqrt(d)
+    q_chunk = min(q_chunk, s)
+    kv_chunk = min(kv_chunk, s_kv)
+
+    qp, nq = _pad_blocks(q, q_chunk)
+    kp, nkv = _pad_blocks(k, kv_chunk)
+    vp, _ = _pad_blocks(v, kv_chunk)
+    dop, _ = _pad_blocks(dout, q_chunk)
+    outp, _ = _pad_blocks(out, q_chunk)
+
+    qb = qp.reshape(b, nq, q_chunk, hkv, g, d).transpose(1, 0, 3, 4, 2, 5)
+    kb = kp.reshape(b, nkv, kv_chunk, hkv, d).transpose(1, 0, 3, 2, 4)
+    vb = vp.reshape(b, nkv, kv_chunk, hkv, d).transpose(1, 0, 3, 2, 4)
+    dob = dop.reshape(b, nq, q_chunk, hkv, g, d).transpose(1, 0, 3, 4, 2, 5)
+    outb = outp.reshape(b, nq, q_chunk, hkv, g, d).transpose(1, 0, 3, 4, 2, 5)
+
+    q_pos = jnp.arange(nq * q_chunk).reshape(nq, q_chunk)
+    kv_pos = jnp.arange(nkv * kv_chunk).reshape(nkv, kv_chunk)
+
+    # D_i = rowsum(dout * out)  (per query position)
+    delta = jnp.sum(dob.astype(F32) * outb.astype(F32), axis=-1)  # (nq,B,Hkv,G,qc)
+
+    def p_block(qi, ki, lse, q_posi, kv_posi):
+        logits = jnp.einsum("bhgqd,bhkd->bhgqk", qi, ki,
+                            preferred_element_type=F32) * scale
+        mask = _block_mask(q_posi, kv_posi, causal, window, s_kv)
+        logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+        return jnp.exp(logits - lse[..., None])          # (B,Hkv,G,qc,kc)
+
+    # ---- pass A: dq -------------------------------------------------------
+    def dq_block(args):
+        qi, doi, lse, dlt, q_posi = args
+
+        def kv_step(dq_acc, inp):
+            ki, vi, kv_posi = inp
+            p = p_block(qi, ki, lse, q_posi, kv_posi)
+            dp = jnp.einsum("bhgqd,bhkd->bhgqk", doi.astype(F32),
+                            vi.astype(F32), preferred_element_type=F32)
+            ds = p * (dp - dlt[..., None]) * scale
+            dq_acc += jnp.einsum("bhgqk,bhkd->bhgqd", ds, ki.astype(F32),
+                                 preferred_element_type=F32)
+            return dq_acc, None
+
+        dq0 = jnp.zeros((b, hkv, g, q_chunk, d), F32)
+        dq, _ = jax.lax.scan(kv_step, dq0, (kb, vb, kv_pos))
+        return dq
+
+    dqb = jax.lax.map(dq_block, (qb, dob, lse_b, delta, q_pos))
+    dq = dqb.transpose(1, 0, 4, 2, 3, 5).reshape(b, nq * q_chunk, h, d)[:, :s]
+
+    # ---- pass B: dk, dv ---------------------------------------------------
+    def dkv_block(args):
+        ki, vi, kv_posi = args
+
+        def q_step(carry, inp):
+            dk_acc, dv_acc = carry
+            qi, doi, lse, dlt, q_posi = inp
+            p = p_block(qi, ki, lse, q_posi, kv_posi)
+            dv_acc += jnp.einsum("bhgqk,bhgqd->bhkd", p, doi.astype(F32),
+                                 preferred_element_type=F32)
+            dp = jnp.einsum("bhgqd,bhkd->bhgqk", doi.astype(F32),
+                            vi.astype(F32), preferred_element_type=F32)
+            ds = p * (dp - dlt[..., None]) * scale
+            dk_acc += jnp.einsum("bhgqk,bhgqd->bhkd", ds, qi.astype(F32),
+                                 preferred_element_type=F32)
+            return (dk_acc, dv_acc), None
+
+        z = jnp.zeros((b, hkv, kv_chunk, d), F32)
+        (dk, dv), _ = jax.lax.scan(q_step, (z, z),
+                                   (qb, dob, lse_b, delta, q_pos))
+        return dk, dv
+
+    dkb, dvb = jax.lax.map(dkv_block, (kb, vb, kv_pos))
+    dk = dkb.transpose(1, 0, 3, 2, 4).reshape(b, nkv * kv_chunk, hkv, d)[:, :s_kv]
+    dv = dvb.transpose(1, 0, 3, 2, 4).reshape(b, nkv * kv_chunk, hkv, d)[:, :s_kv]
+
+    return (dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype))
+
+
+flash_attention.defvjp(
+    lambda q, k, v, causal, window, qc, kc: _flash_fwd(q, k, v, causal,
+                                                       window, qc, kc),
+    _flash_bwd)

@@ -1,0 +1,129 @@
+"""Foundational model layers as pure functions over parameter pytrees.
+
+Conventions:
+  * params are nested dicts of jnp arrays (bf16 storage by default);
+  * matmuls accumulate in fp32 (``preferred_element_type``);
+  * every layer ships an ``init_*`` returning concrete arrays — the dry-run
+    obtains shapes via ``jax.eval_shape`` so no memory is allocated.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+F32 = jnp.float32
+
+
+def dense(x: jax.Array, w: jax.Array, b: Optional[jax.Array] = None) -> jax.Array:
+    y = jnp.einsum("...d,df->...f", x, w, preferred_element_type=F32)
+    if b is not None:
+        y = y + b
+    return y.astype(x.dtype)
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    x32 = x.astype(F32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps) * scale.astype(F32)).astype(x.dtype)
+
+
+def init_rms_norm(d: int, dtype=jnp.bfloat16) -> jax.Array:
+    return jnp.ones((d,), dtype)
+
+
+def layer_norm(x, scale, bias, eps: float = 1e-5):
+    x32 = x.astype(F32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(F32) + bias.astype(F32)).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Rotary position embeddings
+# --------------------------------------------------------------------------
+
+
+def rope_frequencies(d_head: int, theta: float = 1e4) -> jax.Array:
+    half = d_head // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=F32) / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array,
+               theta: float = 1e4) -> jax.Array:
+    """x (..., S, H, D); positions (..., S) int32."""
+    d = x.shape[-1]
+    freqs = rope_frequencies(d, theta)                      # (D/2,)
+    ang = positions[..., None].astype(F32) * freqs          # (..., S, D/2)
+    cos = jnp.cos(ang)[..., None, :]                        # (..., S, 1, D/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(F32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# MLP (gated SiLU — llama family) and GeLU (whisper)
+# --------------------------------------------------------------------------
+
+
+def gated_mlp(params: PyTree, x: jax.Array) -> jax.Array:
+    h = dense(x, params["w_gate"])
+    g = jax.nn.silu(h.astype(F32)).astype(x.dtype)
+    u = dense(x, params["w_up"])
+    return dense(g * u, params["w_down"])
+
+
+def init_gated_mlp(key, d: int, ff: int, dtype=jnp.bfloat16) -> PyTree:
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in = 1.0 / math.sqrt(d)
+    s_ff = 1.0 / math.sqrt(ff)
+    return {
+        "w_gate": (jax.random.normal(k1, (d, ff), F32) * s_in).astype(dtype),
+        "w_up": (jax.random.normal(k2, (d, ff), F32) * s_in).astype(dtype),
+        "w_down": (jax.random.normal(k3, (ff, d), F32) * s_ff).astype(dtype),
+    }
+
+
+def gelu_mlp(params: PyTree, x: jax.Array) -> jax.Array:
+    h = dense(x, params["w_in"], params.get("b_in"))
+    g = jax.nn.gelu(h.astype(F32)).astype(x.dtype)
+    return dense(g, params["w_out"], params.get("b_out"))
+
+
+def init_gelu_mlp(key, d: int, ff: int, dtype=jnp.bfloat16) -> PyTree:
+    k1, k2 = jax.random.split(key)
+    return {
+        "w_in": (jax.random.normal(k1, (d, ff), F32) / math.sqrt(d)).astype(dtype),
+        "b_in": jnp.zeros((ff,), dtype),
+        "w_out": (jax.random.normal(k2, (ff, d), F32) / math.sqrt(ff)).astype(dtype),
+        "b_out": jnp.zeros((d,), dtype),
+    }
+
+
+# --------------------------------------------------------------------------
+# Embedding / unembedding
+# --------------------------------------------------------------------------
+
+
+def embed(params: PyTree, tokens: jax.Array) -> jax.Array:
+    return jnp.take(params["embedding"], tokens, axis=0)
+
+
+def unembed(params: PyTree, x: jax.Array) -> jax.Array:
+    """Returns fp32 logits."""
+    w = params.get("unembedding", params["embedding"])
+    return jnp.einsum("...d,vd->...v", x, w, preferred_element_type=F32)
+
+
+def init_embed(key, vocab: int, d: int, tie: bool,
+               dtype=jnp.bfloat16) -> PyTree:
+    k1, k2 = jax.random.split(key)
+    p = {"embedding": (jax.random.normal(k1, (vocab, d), F32) * 0.01).astype(dtype)}
+    if not tie:
+        p["unembedding"] = (jax.random.normal(k2, (vocab, d), F32) * 0.01).astype(dtype)
+    return p

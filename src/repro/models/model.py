@@ -1,0 +1,473 @@
+"""The unified LM: config-driven assembly of the per-family blocks, with
+scan-over-layers (stacked params), per-layer remat, train/prefill/decode
+entry points, and modality-frontend stubs (``[audio]``/``[vlm]`` configs
+receive precomputed frame/patch embeddings per the assignment)."""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ArchConfig
+
+from . import blocks as B
+from .attention import project_cross_kv
+from .layers import F32, embed, init_embed, layer_norm, rms_norm, unembed
+
+PyTree = Any
+
+
+def _sincos_positions(s: int, d: int, offset=0) -> jax.Array:
+    pos = (jnp.arange(s) + offset)[:, None].astype(F32)
+    half = d // 2
+    freq = jnp.exp(-jnp.log(10000.0) * jnp.arange(half, dtype=F32) / half)
+    ang = pos * freq[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+@dataclass
+class LM:
+    cfg: ArchConfig
+    q_chunk: int = 1024
+    kv_chunk: int = 1024
+    ssd_chunk: int = 64
+    remat: bool = True
+    use_pallas: Optional[bool] = None
+    moe_aux_coef: float = 0.01
+    dtype: Any = jnp.bfloat16
+    vocab_pad_multiple: int = 128   # pad vocab so TP can shard it (Megatron
+                                    # convention); padded logits are masked
+                                    # to -inf in loss/decode.
+    pad_heads_multiple: int = 0     # pad attention heads so TP can shard
+                                    # them (zero-weight pad heads — exact
+                                    # function preservation; §Perf).
+    remat_policy: str = "full"      # full | save_sublayer.  save_sublayer
+                                    # keeps each sublayer's post-all-reduce
+                                    # output: backward skips re-running the
+                                    # forward TP collectives (≈1/3 of the
+                                    # per-layer AR traffic) for ~2 residual-
+                                    # stream activations per layer of HBM.
+
+    def __post_init__(self):
+        import dataclasses as _dc
+        self.logical_cfg = self.cfg
+        self._head_pad = None
+        m = self.pad_heads_multiple
+        cfg = self.cfg
+        if m and cfg.n_heads and cfg.n_heads % m:
+            g = cfg.n_heads // max(cfg.n_kv_heads, 1)
+            hp = cfg.n_heads
+            while hp % m or hp % g:
+                hp += 1
+            self._head_pad = (cfg.n_heads, cfg.n_kv_heads)
+            self.cfg = _dc.replace(cfg, n_heads=hp, n_kv_heads=hp // g)
+
+    @property
+    def vocab_padded(self) -> int:
+        m = self.vocab_pad_multiple
+        return -(-self.cfg.vocab // m) * m
+
+    def _mask_pad_logits(self, logits: jax.Array) -> jax.Array:
+        v = self.cfg.vocab
+        if self.vocab_padded == v:
+            return logits
+        keep = jnp.arange(self.vocab_padded) < v
+        return jnp.where(keep, logits, -1e30)
+
+    # ---------------------------------------------------------------------
+    # init
+    # ---------------------------------------------------------------------
+
+    def _block_kind(self) -> str:
+        return {"dense": "dense", "moe": "moe", "ssm": "ssm",
+                "hybrid": "hybrid"}.get(self.cfg.family, "")
+
+    def init(self, key) -> PyTree:
+        cfg = self.cfg
+        k_emb, k_blocks, k_final = jax.random.split(key, 3)
+        params: dict[str, Any] = {
+            "embed": init_embed(k_emb, self.vocab_padded, cfg.d_model,
+                                cfg.tie_embeddings, self.dtype),
+            "final_norm": B.init_norm(cfg, self.dtype),
+        }
+        if cfg.family == "vlm":
+            n_groups = cfg.n_layers // cfg.cross_attn_every
+            n_self = cfg.cross_attn_every - 1
+            kg = jax.random.split(k_blocks, n_groups)
+
+            def group(k):
+                k1, k2 = jax.random.split(k)
+                selfs = jax.vmap(lambda kk: B.init_block(kk, cfg, "dense",
+                                                         self.dtype))(
+                    jax.random.split(k1, n_self))
+                cross = B.init_block(k2, cfg, "cross", self.dtype)
+                return {"selfs": selfs, "cross": cross}
+
+            params["groups"] = jax.vmap(group)(kg)
+        elif cfg.family == "audio":
+            ke, kd = jax.random.split(k_blocks)
+            params["enc_blocks"] = jax.vmap(
+                lambda kk: B.init_block(kk, cfg, "enc", self.dtype))(
+                jax.random.split(ke, cfg.enc_layers))
+            params["dec_blocks"] = jax.vmap(
+                lambda kk: B.init_block(kk, cfg, "dec", self.dtype))(
+                jax.random.split(kd, cfg.n_layers))
+            params["enc_final_norm"] = B.init_norm(cfg, self.dtype)
+        else:
+            kind = self._block_kind()
+            params["blocks"] = jax.vmap(
+                lambda kk: B.init_block(kk, cfg, kind, self.dtype))(
+                jax.random.split(k_blocks, cfg.n_layers))
+        if self._head_pad:
+            params = self._zero_pad_heads(params)
+        return params
+
+    def _zero_pad_heads(self, params: PyTree) -> PyTree:
+        """Zero the padded head slices so the padded model computes the
+        EXACT same function: wq/bq pad columns → q ≡ 0 in pad heads; wo
+        pad rows → their output contribution ≡ 0."""
+        h0, kv0 = self._head_pad
+
+        def zero_from(arr, axis, start):
+            n = arr.shape[axis]
+            if start >= n:
+                return arr
+            keep = (jnp.arange(n) < start)
+            shape = [1] * arr.ndim
+            shape[axis] = n
+            return arr * keep.reshape(shape).astype(arr.dtype)
+
+        def visit(path, leaf):
+            key = str(getattr(path[-1], "key", ""))
+            if key in ("wq", "bq"):
+                return zero_from(leaf, leaf.ndim - 2, h0)
+            if key in ("wk", "wv", "bk", "bv"):
+                return zero_from(leaf, leaf.ndim - 2, kv0)
+            if key == "wo":
+                return zero_from(leaf, leaf.ndim - 3, h0)
+            return leaf
+
+        return jax.tree_util.tree_map_with_path(visit, params)
+
+    # ---------------------------------------------------------------------
+    # forward (train / prefill body)
+    # ---------------------------------------------------------------------
+
+    def _maybe_remat(self, fn):
+        if not self.remat:
+            return fn
+        if self.remat_policy == "save_sublayer":
+            policy = jax.checkpoint_policies.save_only_these_names(
+                "sublayer_out")
+            return jax.checkpoint(fn, policy=policy)
+        return jax.checkpoint(fn)
+
+    def forward(self, params: PyTree, tokens: jax.Array, *,
+                img_ctx: Optional[jax.Array] = None,
+                frames: Optional[jax.Array] = None,
+                collect_cache: bool = False):
+        """tokens (B,S) → (logits (B,S,V) f32, aux, caches|None)."""
+        cfg = self.cfg
+        x = embed(params["embed"], tokens).astype(self.dtype)
+        b, s = tokens.shape
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        if cfg.rope_theta == 0.0:  # absolute sinusoidal (whisper)
+            x = x + _sincos_positions(s, cfg.d_model).astype(x.dtype)[None]
+        aux = jnp.zeros((), F32)
+        caches = None
+
+        if cfg.family == "vlm":
+            x = self._vlm_stack(params, x, positions, img_ctx)
+        elif cfg.family == "audio":
+            enc_out = self._audio_encoder(params, frames)
+            x, caches = self._audio_decoder(params, x, positions, enc_out,
+                                            collect_cache)
+        else:
+            x, aux, caches = self._uniform_stack(params, x, positions,
+                                                 collect_cache)
+
+        x = (layer_norm(x, params["final_norm"]["scale"],
+                        params["final_norm"]["bias"])
+             if cfg.norm == "ln" else rms_norm(x, params["final_norm"]))
+        logits = unembed(params["embed"], x)
+        return logits, aux, caches
+
+    def _uniform_stack(self, params, x, positions, collect_cache):
+        cfg = self.cfg
+        kind = self._block_kind()
+
+        def body(carry, layer_params):
+            x, aux = carry
+            if kind == "dense":
+                x, kv = B.fwd_dense(layer_params, x, positions, cfg,
+                                    q_chunk=self.q_chunk,
+                                    kv_chunk=self.kv_chunk)
+                out = kv if collect_cache else None
+            elif kind == "moe":
+                x, (kv, a) = B.fwd_moe(layer_params, x, positions, cfg,
+                                       q_chunk=self.q_chunk,
+                                       kv_chunk=self.kv_chunk)
+                aux = aux + a
+                out = kv if collect_cache else None
+            elif kind == "ssm":
+                x = B.fwd_ssm(layer_params, x, cfg, ssd_chunk=self.ssd_chunk,
+                              use_pallas=self.use_pallas)
+                out = None
+            else:  # hybrid
+                x, kv = B.fwd_hybrid(layer_params, x, positions, cfg,
+                                     q_chunk=self.q_chunk,
+                                     kv_chunk=self.kv_chunk,
+                                     ssd_chunk=self.ssd_chunk,
+                                     use_pallas=self.use_pallas)
+                out = kv if collect_cache else None
+            return (x, aux), out
+
+        (x, aux), caches = lax.scan(self._maybe_remat(body),
+                                    (x, jnp.zeros((), F32)),
+                                    params["blocks"])
+        return x, aux, caches
+
+    def _vlm_stack(self, params, x, positions, img_ctx):
+        cfg = self.cfg
+
+        def group(x, gp):
+            def self_body(x, lp):
+                x, _ = B.fwd_dense(lp, x, positions, cfg,
+                                   q_chunk=self.q_chunk,
+                                   kv_chunk=self.kv_chunk)
+                return x, None
+            x, _ = lax.scan(self._maybe_remat(self_body), x, gp["selfs"])
+            img_kv = project_cross_kv(gp["cross"]["attn"],
+                                      img_ctx.astype(x.dtype))
+            x = B.fwd_cross(gp["cross"], x, img_kv, cfg,
+                            q_chunk=self.q_chunk, kv_chunk=self.kv_chunk)
+            return x, None
+
+        x, _ = lax.scan(self._maybe_remat(group), x, params["groups"])
+        return x
+
+    def _audio_encoder(self, params, frames):
+        cfg = self.cfg
+        x = frames.astype(self.dtype)
+        x = x + _sincos_positions(x.shape[1], cfg.d_model).astype(x.dtype)[None]
+        b, s, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+
+        def body(x, lp):
+            h, _ = B.attention_layer(
+                lp["attn"], B._norm(cfg, lp, x, "norm1"), positions,
+                n_heads=cfg.n_heads, rope_theta=0.0, q_chunk=self.q_chunk,
+                kv_chunk=self.kv_chunk, causal=False)
+            x = x + h
+            x = x + B.gelu_mlp(lp["mlp"], B._norm(cfg, lp, x, "norm2"))
+            return x, None
+
+        x, _ = lax.scan(self._maybe_remat(body), x, params["enc_blocks"])
+        return (layer_norm(x, params["enc_final_norm"]["scale"],
+                           params["enc_final_norm"]["bias"])
+                if cfg.norm == "ln"
+                else rms_norm(x, params["enc_final_norm"]))
+
+    def _audio_decoder(self, params, x, positions, enc_out, collect_cache):
+        cfg = self.cfg
+
+        def body(x, lp):
+            enc_kv = project_cross_kv(lp["xattn"], enc_out)
+            x, kv = B.fwd_dec(lp, x, positions, enc_kv, cfg,
+                              q_chunk=self.q_chunk, kv_chunk=self.kv_chunk)
+            return x, kv if collect_cache else None
+
+        x, caches = lax.scan(self._maybe_remat(body), x,
+                             params["dec_blocks"])
+        return x, caches
+
+    # ---------------------------------------------------------------------
+    # loss / train objective
+    # ---------------------------------------------------------------------
+
+    def loss(self, params: PyTree, batch: PyTree) -> jax.Array:
+        logits, aux, _ = self.forward(
+            params, batch["tokens"],
+            img_ctx=batch.get("img_ctx"), frames=batch.get("frames"))
+        logits = self._mask_pad_logits(logits)
+        labels = batch["labels"]
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+        mask = (labels >= 0).astype(F32)
+        ce = -jnp.sum(ll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+        return ce + self.moe_aux_coef * aux
+
+    # ---------------------------------------------------------------------
+    # decode
+    # ---------------------------------------------------------------------
+
+    def init_cache(self, batch: int, cache_len: int, *,
+                   img_ctx: Optional[jax.Array] = None,
+                   enc_out: Optional[jax.Array] = None,
+                   params: Optional[PyTree] = None,
+                   start_len=None) -> PyTree:
+        """Empty (or pre-aged) caches.  ``start_len`` (B,) models 'a cache
+        of seq_len' for the decode dry-run shapes.  SWA archs allocate a
+        ring buffer of size window."""
+        cfg = self.cfg
+        kv, dh = cfg.n_kv_heads, cfg.head_dim
+        cap = min(cache_len, cfg.sliding_window) if cfg.sliding_window \
+            else cache_len
+        ln = (jnp.zeros((batch,), jnp.int32) if start_len is None
+              else jnp.broadcast_to(jnp.asarray(start_len, jnp.int32),
+                                    (batch,)))
+
+        def attn_cache(n_layers):
+            return {"k": jnp.zeros((n_layers, batch, cap, kv, dh), self.dtype),
+                    "v": jnp.zeros((n_layers, batch, cap, kv, dh), self.dtype),
+                    "len": jnp.broadcast_to(ln[None], (n_layers, batch))}
+
+        def ssm_cache(n_layers):
+            d_inner = cfg.ssm_expand * cfg.d_model
+            nh = d_inner // cfg.ssm_headdim
+            return {"conv": jnp.zeros((n_layers, batch, cfg.conv_width - 1,
+                                       d_inner + 2 * cfg.ssm_state), self.dtype),
+                    "h": jnp.zeros((n_layers, batch, nh, cfg.ssm_state,
+                                    cfg.ssm_headdim), F32)}
+
+        if cfg.family in ("dense", "moe"):
+            return {"layers": attn_cache(cfg.n_layers)}
+        if cfg.family == "ssm":
+            return {"layers": ssm_cache(cfg.n_layers)}
+        if cfg.family == "hybrid":
+            return {"layers": {"attn": attn_cache(cfg.n_layers),
+                               "ssm": ssm_cache(cfg.n_layers)}}
+        if cfg.family == "vlm":
+            n_groups = cfg.n_layers // cfg.cross_attn_every
+            n_self = cfg.cross_attn_every - 1
+            img_cache = None
+            if img_ctx is not None and params is not None:
+                def per_group(gp):
+                    k, v = project_cross_kv(gp["cross"]["attn"],
+                                            img_ctx.astype(self.dtype))
+                    return {"k": k, "v": v,
+                            "len": jnp.full((batch,), img_ctx.shape[1],
+                                            jnp.int32)}
+                img_cache = jax.vmap(per_group)(params["groups"])
+            else:
+                n_img = cfg.n_img_tokens
+                img_cache = {"k": jnp.zeros((n_groups, batch, n_img, kv, dh),
+                                            self.dtype),
+                             "v": jnp.zeros((n_groups, batch, n_img, kv, dh),
+                                            self.dtype),
+                             "len": jnp.full((n_groups, batch), n_img,
+                                             jnp.int32)}
+            selfs = {"k": jnp.zeros((n_groups, n_self, batch, cap, kv, dh),
+                                    self.dtype),
+                     "v": jnp.zeros((n_groups, n_self, batch, cap, kv, dh),
+                                    self.dtype),
+                     "len": jnp.broadcast_to(ln[None, None],
+                                             (n_groups, n_self, batch))}
+            return {"selfs": selfs, "img": img_cache}
+        if cfg.family == "audio":
+            if enc_out is not None and params is not None:
+                def per_layer(lp):
+                    k, v = project_cross_kv(lp["xattn"], enc_out)
+                    return {"k": k, "v": v,
+                            "len": jnp.full((batch,), enc_out.shape[1],
+                                            jnp.int32)}
+                enc_cache = jax.vmap(per_layer)(params["dec_blocks"])
+            else:
+                enc_cache = {"k": jnp.zeros((cfg.n_layers, batch, cfg.enc_seq,
+                                             kv, dh), self.dtype),
+                             "v": jnp.zeros((cfg.n_layers, batch, cfg.enc_seq,
+                                             kv, dh), self.dtype),
+                             "len": jnp.full((cfg.n_layers, batch),
+                                             cfg.enc_seq, jnp.int32)}
+            return {"layers": attn_cache(cfg.n_layers), "enc": enc_cache}
+        raise ValueError(cfg.family)
+
+    def decode_step(self, params: PyTree, cache: PyTree,
+                    tokens: jax.Array) -> tuple[jax.Array, PyTree]:
+        """tokens (B,1) → (logits (B,V) f32, new cache)."""
+        cfg = self.cfg
+        x = embed(params["embed"], tokens).astype(self.dtype)
+        if cfg.rope_theta == 0.0:
+            if cfg.family == "audio":
+                pos0 = cache["layers"]["len"][0]
+            else:
+                pos0 = cache["layers"]["len"][0]
+            x = x + jax.vmap(
+                lambda p: _sincos_positions(1, cfg.d_model, p)[0])(
+                pos0).astype(x.dtype)[:, None]
+
+        if cfg.family in ("dense", "moe"):
+            fn = B.dec_dense if cfg.family == "dense" else B.dec_moe
+
+            def body(x, inp):
+                lp, lc = inp
+                x, nc = fn(lp, x, lc, cfg)
+                return x, nc
+
+            x, new_layers = lax.scan(body, x,
+                                     (params["blocks"], cache["layers"]))
+            new_cache = {"layers": new_layers}
+        elif cfg.family == "ssm":
+            def body(x, inp):
+                lp, lc = inp
+                x, nc = B.dec_ssm(lp, x, lc, cfg)
+                return x, nc
+            x, new_layers = lax.scan(body, x,
+                                     (params["blocks"], cache["layers"]))
+            new_cache = {"layers": new_layers}
+        elif cfg.family == "hybrid":
+            def body(x, inp):
+                lp, lc = inp
+                x, nc = B.dec_hybrid(lp, x, lc, cfg)
+                return x, nc
+            x, new_layers = lax.scan(body, x,
+                                     (params["blocks"], cache["layers"]))
+            new_cache = {"layers": new_layers}
+        elif cfg.family == "vlm":
+            def group(x, inp):
+                gp, sc, ic = inp
+
+                def self_body(x, inp2):
+                    lp, lc = inp2
+                    x, nc = B.dec_dense(lp, x, lc, cfg)
+                    return x, nc
+
+                x, new_sc = lax.scan(self_body, x, (gp["selfs"], sc))
+                x = B.dec_cross(gp["cross"], x, ic, cfg)
+                return x, new_sc
+
+            x, new_selfs = lax.scan(group, x,
+                                    (params["groups"], cache["selfs"],
+                                     cache["img"]))
+            new_cache = {"selfs": new_selfs, "img": cache["img"]}
+        elif cfg.family == "audio":
+            def body(x, inp):
+                lp, lc, ec = inp
+                x, nc = B.dec_dec(lp, x, lc, ec, cfg)
+                return x, nc
+            x, new_layers = lax.scan(body, x,
+                                     (params["dec_blocks"], cache["layers"],
+                                      cache["enc"]))
+            new_cache = {"layers": new_layers, "enc": cache["enc"]}
+        else:
+            raise ValueError(cfg.family)
+
+        x = (layer_norm(x, params["final_norm"]["scale"],
+                        params["final_norm"]["bias"])
+             if cfg.norm == "ln" else rms_norm(x, params["final_norm"]))
+        logits = self._mask_pad_logits(unembed(params["embed"], x))[:, 0]
+        return logits, new_cache
+
+    def prefill(self, params: PyTree, tokens: jax.Array, *,
+                img_ctx=None, frames=None):
+        """Prefill: full forward; returns (last-position logits, nothing-
+        cached marker).  Cache assembly from prefill outputs is family-
+        specific and exercised by the serving example; the dry-run lowers
+        this step for the prefill_32k shape."""
+        logits, aux, _ = self.forward(params, tokens, img_ctx=img_ctx,
+                                      frames=frames, collect_cache=False)
+        return logits[:, -1], aux

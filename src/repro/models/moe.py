@@ -1,0 +1,106 @@
+"""Mixture-of-Experts FFN — expert dispatch/combine as *grouped
+aggregation* (the paper's 𝒢_{AggΔ} over the expert key), shardable over the
+``model`` axis (EP).
+
+Sort-based capacity dispatch (static shapes):
+  1. router scores → top-k experts per token;
+  2. (token, expert) assignments sorted by expert — exactly the
+     sort-before-segment step of the grouped executor;
+  3. rank-within-expert positions scatter tokens into an (E, C) grid
+     (capacity C, overflow dropped — standard GShard/Switch semantics);
+  4. per-expert FFN batched einsum over (E, C, d) with E sharded (EP);
+  5. combine = weighted segment-sum back to token order.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .layers import F32
+
+PyTree = Any
+
+
+def init_moe(key, d: int, ff: int, n_experts: int,
+             dtype=jnp.bfloat16) -> PyTree:
+    ks = jax.random.split(key, 4)
+    s_in = 1.0 / math.sqrt(d)
+    s_ff = 1.0 / math.sqrt(ff)
+    return {
+        "router": (jax.random.normal(ks[0], (d, n_experts), F32) * s_in).astype(F32),
+        "w_gate": (jax.random.normal(ks[1], (n_experts, d, ff), F32) * s_in).astype(dtype),
+        "w_up": (jax.random.normal(ks[2], (n_experts, d, ff), F32) * s_in).astype(dtype),
+        "w_down": (jax.random.normal(ks[3], (n_experts, ff, d), F32) * s_ff).astype(dtype),
+    }
+
+
+def moe_layer(params: PyTree, x: jax.Array, *, n_experts: int, top_k: int,
+              capacity_factor: float = 1.25) -> tuple[jax.Array, jax.Array]:
+    """x (B,S,d) → (y (B,S,d), aux_loss scalar)."""
+    b, s, d = x.shape
+    t = b * s
+    xt = x.reshape(t, d)
+
+    logits = jnp.einsum("td,de->te", xt.astype(F32), params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)                      # (T,E)
+    gate_vals, gate_idx = jax.lax.top_k(probs, top_k)            # (T,k)
+    if top_k > 1:
+        gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # load-balancing auxiliary loss (Switch-style)
+    me = jnp.mean(probs, axis=0)                                 # (E,)
+    ce = jnp.mean(jax.nn.one_hot(gate_idx[:, 0], n_experts, dtype=F32), axis=0)
+    aux = n_experts * jnp.sum(me * ce)
+
+    # ---- grouped-aggregation dispatch (sort by expert) --------------------
+    a = t * top_k
+    flat_expert = gate_idx.reshape(a)                            # (A,)
+    flat_token = jnp.repeat(jnp.arange(t), top_k)
+    flat_gate = gate_vals.reshape(a)
+
+    order = jnp.argsort(flat_expert)
+    se, stok, sg = (jnp.take(flat_expert, order), jnp.take(flat_token, order),
+                    jnp.take(flat_gate, order))
+
+    # rank within expert group
+    same = jnp.concatenate([jnp.array([False]), se[1:] == se[:-1]])
+    seg_start = jnp.where(~same, jnp.arange(a), 0)
+    start_of = jax.ops.segment_max(seg_start, se, num_segments=n_experts)
+    rank = jnp.arange(a) - jnp.take(start_of, se)
+
+    capacity = max(1, int(capacity_factor * a / n_experts))
+    keep = rank < capacity
+    slot = se * capacity + rank                                  # (A,)
+    slot = jnp.where(keep, slot, n_experts * capacity)           # overflow bin
+
+    # scatter token ids / gates into the (E*C [+1]) grid
+    grid_tok = jnp.full((n_experts * capacity + 1,), t, jnp.int32) \
+        .at[slot].set(stok.astype(jnp.int32), mode="drop")
+    grid_gate = jnp.zeros((n_experts * capacity + 1,), F32) \
+        .at[slot].set(sg, mode="drop")
+    grid_tok = grid_tok[:-1].reshape(n_experts, capacity)
+    grid_gate = grid_gate[:-1].reshape(n_experts, capacity)
+    grid_ok = grid_tok < t
+
+    # gather tokens: (E, C, d) — E sharded over "model" (EP)
+    xe = jnp.take(xt, jnp.clip(grid_tok, 0, t - 1), axis=0)
+    xe = jnp.where(grid_ok[..., None], xe, 0)
+
+    # per-expert gated FFN (batched over E)
+    h = jnp.einsum("ecd,edf->ecf", xe, params["w_gate"],
+                   preferred_element_type=F32)
+    u = jnp.einsum("ecd,edf->ecf", xe, params["w_up"],
+                   preferred_element_type=F32)
+    act = (jax.nn.silu(h) * u).astype(x.dtype)
+    ye = jnp.einsum("ecf,efd->ecd", act, params["w_down"],
+                    preferred_element_type=F32)                  # (E,C,d) f32
+
+    # ---- combine: weighted segment-sum back to tokens ----------------------
+    ye = ye * grid_gate[..., None]
+    flat_out_tok = jnp.where(grid_ok, grid_tok, t).reshape(-1)
+    y = jax.ops.segment_sum(ye.reshape(-1, d), flat_out_tok,
+                            num_segments=t + 1)[:t]
+    return y.reshape(b, s, d).astype(x.dtype), aux

@@ -1,0 +1,62 @@
+"""Activation-sharding context: lets model code place
+``with_sharding_constraint`` anchors without owning a mesh.
+
+The launcher (dryrun/train) sets the context before tracing; unset, every
+constraint is a no-op, so tests and single-device runs are unaffected.
+Axis aliases: "dp" → the composed data axes (("pod","data") or ("data",)),
+"tp" → "model".
+"""
+from __future__ import annotations
+
+from contextlib import contextmanager
+from typing import Any, Optional
+
+import jax
+
+_CTX: dict[str, Any] = {"mesh": None, "dp": None, "tp": True}
+
+
+def set_ctx(mesh, dp_axes, tp: bool = True) -> None:
+    _CTX["mesh"] = mesh
+    _CTX["dp"] = tuple(dp_axes)
+    _CTX["tp"] = tp
+
+
+def clear_ctx() -> None:
+    _CTX["mesh"] = None
+    _CTX["dp"] = None
+    _CTX["tp"] = True
+
+
+@contextmanager
+def ctx(mesh, dp_axes, tp: bool = True):
+    set_ctx(mesh, dp_axes, tp)
+    try:
+        yield
+    finally:
+        clear_ctx()
+
+
+def constrain(x: jax.Array, *dims: Optional[str]) -> jax.Array:
+    """dims: one of "dp", "tp", None per array dim (may be shorter than
+    x.ndim; missing dims are unconstrained).  Divisibility-checked: a dim
+    that doesn't divide is left unconstrained."""
+    mesh = _CTX["mesh"]
+    if mesh is None:
+        return x
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    entries = []
+    for i, d in enumerate(dims):
+        if d is None or (d == "tp" and not _CTX["tp"]):
+            entries.append(None)
+            continue
+        axes = _CTX["dp"] if d == "dp" else ("model",)
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        if x.shape[i] % size == 0 and x.shape[i] > 0:
+            entries.append(tuple(axes) if len(axes) > 1 else axes[0])
+        else:
+            entries.append(None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*entries)))

@@ -1,0 +1,248 @@
+"""Mamba-2 (SSD) layer — the paper's *ordered aggregate with associative
+Merge*, executed chunked (kernels/ssd_scan.py is the Pallas twin of the
+jnp chunked path here).
+
+Layer structure (Mamba-2):
+    in_proj -> [z | x | B | C | dt]      (single fused projection)
+    conv1d(x)  (causal depthwise, width 4)
+    SSD scan over heads: h_t = exp(-softplus(dt_t)·A) h_{t-1} + dt·B_t⊗x_t
+    y = C_t·h_t + D·x_t ;  out = out_proj( y * silu(z) )
+
+Decode keeps (conv window, SSD state) as the cache — O(1) per token, the
+reason this family RUNS the long_500k shape.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+
+from .layers import F32, rms_norm
+from .shard_ctx import constrain
+
+PyTree = Any
+
+
+def _ssd_chunked_4d(xh: jax.Array, log_decay: jax.Array, bmat: jax.Array,
+                    cmat: jax.Array, chunk: int) -> jax.Array:
+    """Chunked SSD keeping (B, S, H, P) layout — B/C projections shared
+    across heads (Mamba-2's MQA-style sharing), heads shardable over the
+    TP axis.  Folding (B·H) into one dim (the kernel layout) interleaves
+    the batch-sharded and head axes and forces the partitioner to reshard
+    every SSD tensor (observed: 2.2 TB/device of all-gathers on hymba
+    train).  Math identical to kernels/ssd_scan.py.
+
+    xh (B,S,H,P) — dt-folded input; log_decay (B,S,H); bmat/cmat (B,S,N).
+    """
+    b_sz, s_len, n_heads, p = xh.shape
+    n = bmat.shape[-1]
+    pad = (-s_len) % chunk
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        log_decay = jnp.pad(log_decay, ((0, 0), (0, pad), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0)))
+    t = s_len + pad
+    nc = t // chunk
+
+    xc = xh.reshape(b_sz, nc, chunk, n_heads, p).astype(F32)
+    xc = constrain(xc, "dp", None, None, "tp", None)
+    lac = log_decay.reshape(b_sz, nc, chunk, n_heads).astype(F32)
+    bc = bmat.reshape(b_sz, nc, chunk, n).astype(F32)
+    cc = cmat.reshape(b_sz, nc, chunk, n).astype(F32)
+
+    la = jnp.cumsum(lac, axis=2)                      # (B,NC,C,H)
+    scores = jnp.einsum("bgtn,bgsn->bgts", cc, bc)    # shared across heads
+    rel = la[:, :, :, None, :] - la[:, :, None, :, :]  # (B,NC,C,C,H)
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))[None, None, :, :, None]
+    decay = jnp.where(causal, jnp.exp(rel), 0.0)
+    y_intra = jnp.einsum("bgtsh,bgshp->bgthp",
+                         scores[:, :, :, :, None] * decay, xc)
+
+    la_last = la[:, :, -1:, :]                        # (B,NC,1,H)
+    w = jnp.exp(la_last - la)                         # (B,NC,C,H)
+    chunk_state = jnp.einsum("bgcn,bgch,bgchp->bghnp", bc, w, xc)
+    chunk_decay = jnp.exp(la_last[:, :, 0, :])        # (B,NC,H)
+
+    def step(h, inp):
+        st, dec, cg, lag = inp
+        # h (B,H,N,P); cg (B,C,N); lag (B,C,H)
+        y_cross = jnp.einsum("bcn,bhnp->bchp", cg, h) * jnp.exp(lag)[..., None]
+        h_new = dec[:, :, None, None] * h + st
+        return h_new, y_cross
+
+    h0 = constrain(jnp.zeros((b_sz, n_heads, n, p), F32),
+                   "dp", "tp", None, None)
+    _, y_cross = jax.lax.scan(
+        step, h0,
+        (chunk_state.swapaxes(0, 1), chunk_decay.swapaxes(0, 1),
+         cc.swapaxes(0, 1), la.swapaxes(0, 1)))
+    y = y_intra + y_cross.swapaxes(0, 1)              # (B,NC,C,H,P)
+    y = y.reshape(b_sz, t, n_heads, p)[:, :s_len]
+    return y
+
+
+def init_ssm(key, d: int, *, state: int, headdim: int, expand: int,
+             conv_width: int, dtype=jnp.bfloat16) -> PyTree:
+    """SHARD-ALIGNED projection layout (§Perf iteration 2): z/x/B/C/dt are
+    separate weights rather than one fused in_proj.  Slicing a fused
+    (d, 2·d_inner+2N+H) projection whose output dim is TP-sharded cuts
+    across shard boundaries (boundaries at d_inner etc. are not multiples
+    of d_in_proj/16) and forced the partitioner to reshard every SSD input
+    (observed: ~230 GB/device of collective-permute+all-reduce per train
+    step on mamba2).  Separate weights shard each output dim cleanly; the
+    math (a single matmul vs five) is identical up to concatenation."""
+    d_inner = expand * d
+    n_heads = d_inner // headdim
+    ks = jax.random.split(key, 6)  # (indices stable for seeded tests)
+    s = 1.0 / math.sqrt(d)
+    return {
+        # z|x fused INTERLEAVED as (d, 2, d_inner): both halves share
+        # the d_inner@model shard layout, so the z/x split is a local
+        # slice of an UNSHARDED dim (a flat (d, 2·d_inner) fusion parks z
+        # on shards 0..7 and x on 8..15 — observed 77 GB/device of
+        # collective-permute).  One backward dx all-reduce for both.
+        # w_bc / w_dt are tiny and REPLICATED: no backward dx all-reduce.
+        "w_zx": (jax.random.normal(ks[0], (d, 2, d_inner), F32) * s).astype(dtype),
+        "w_bc": (jax.random.normal(ks[2], (d, 2 * state), F32) * s).astype(dtype),
+        "w_dt": (jax.random.normal(ks[3], (d, n_heads), F32) * s).astype(dtype),
+        "conv_w": (jax.random.normal(ks[4], (conv_width, d_inner + 2 * state),
+                                     F32) * 0.2).astype(dtype),
+        "conv_b": jnp.zeros((d_inner + 2 * state,), dtype),
+        "a_log": jnp.zeros((n_heads,), F32),          # A = -exp(a_log)
+        "dt_bias": jnp.zeros((n_heads,), F32),
+        "d_skip": jnp.ones((n_heads,), F32),
+        "norm": jnp.ones((d_inner,), dtype),
+        "w_out": (jax.random.normal(ks[5], (d_inner, d), F32)
+                  / math.sqrt(d_inner)).astype(dtype),
+    }
+
+
+def _project_in(params, x_in):
+    zx = jnp.einsum("bsd,dkf->bskf", x_in, params["w_zx"],
+                    preferred_element_type=F32).astype(x_in.dtype)
+    z, x = zx[..., 0, :], zx[..., 1, :]   # slice of the UNSHARDED dim
+    bc = jnp.einsum("bsd,df->bsf", x_in, params["w_bc"],
+                    preferred_element_type=F32).astype(x_in.dtype)
+    dt = jnp.einsum("bsd,df->bsf", x_in, params["w_dt"],
+                    preferred_element_type=F32)
+    return z, x, bc, dt
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv over time: xbc (B,S,C); w (W,C)."""
+    width = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (width - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xbc, dtype=F32)
+    for i in range(width):
+        out = out + pad[:, i:i + xbc.shape[1], :].astype(F32) * w[i].astype(F32)
+    return jax.nn.silu(out + b.astype(F32)).astype(xbc.dtype)
+
+
+def ssm_layer(params: PyTree, x_in: jax.Array, *, state: int, headdim: int,
+              expand: int, chunk: int = 64,
+              use_pallas: bool | None = None) -> jax.Array:
+    """Full-sequence SSD (train / prefill).  x_in (B,S,d)."""
+    b_sz, s_len, d = x_in.shape
+    d_inner = expand * d
+    n_heads = d_inner // headdim
+
+    z, x, bc, dt = _project_in(params, x_in)
+
+    # depthwise causal conv applied per tensor (shard-aligned; depthwise
+    # conv commutes with the concat the reference formulation uses)
+    x = _causal_conv(x, params["conv_w"][:, :d_inner],
+                     params["conv_b"][:d_inner])
+    bc = _causal_conv(bc, params["conv_w"][:, d_inner:],
+                      params["conv_b"][d_inner:])
+    bmat, cmat = bc[..., :state], bc[..., state:]
+
+    dt = jax.nn.softplus(dt.astype(F32) + params["dt_bias"])     # (B,S,H)
+    a = -jnp.exp(params["a_log"])                                # (H,)
+    log_decay = dt * a                                           # (B,S,H) ≤ 0
+
+    xh = x.reshape(b_sz, s_len, n_heads, headdim)
+    # fold dt into the input contribution (standard SSD discretization)
+    xh_dt = (xh.astype(F32) * dt[..., None]).astype(x.dtype)
+
+    if kops.want_pallas(use_pallas):
+        # kernel layout: fold (B·H) into the grid dim
+        xs = xh_dt.transpose(0, 2, 1, 3).reshape(b_sz * n_heads, s_len,
+                                                 headdim)
+        las = log_decay.transpose(0, 2, 1).reshape(b_sz * n_heads, s_len)
+        bb = jnp.broadcast_to(bmat[:, None], (b_sz, n_heads, s_len, state)) \
+            .reshape(b_sz * n_heads, s_len, state)
+        ccb = jnp.broadcast_to(cmat[:, None], (b_sz, n_heads, s_len, state)) \
+            .reshape(b_sz * n_heads, s_len, state)
+        pad = (-s_len) % chunk
+        if pad:
+            xs = jnp.pad(xs, ((0, 0), (0, pad), (0, 0)))
+            las = jnp.pad(las, ((0, 0), (0, pad)))
+            bb = jnp.pad(bb, ((0, 0), (0, pad), (0, 0)))
+            ccb = jnp.pad(ccb, ((0, 0), (0, pad), (0, 0)))
+        y = kops.ssd_scan(xs, las, bb, ccb, chunk=chunk,
+                          use_pallas=use_pallas)
+        y = y[:, :s_len].reshape(b_sz, n_heads, s_len, headdim) \
+            .transpose(0, 2, 1, 3)
+    else:
+        # SPMD layout: keep (B, S, H, P) — heads shard over TP, batch
+        # over DP; B/C stay shared across heads (no H-fold broadcast)
+        y = _ssd_chunked_4d(xh_dt, log_decay, bmat, cmat, chunk)
+    y = y + xh.astype(F32) * params["d_skip"][None, None, :, None]
+    y = y.reshape(b_sz, s_len, d_inner).astype(x_in.dtype)
+
+    y = rms_norm(y * jax.nn.silu(z.astype(F32)).astype(y.dtype), params["norm"])
+    return jnp.einsum("bsf,fd->bsd", y, params["w_out"],
+                      preferred_element_type=F32).astype(x_in.dtype)
+
+
+def init_ssm_cache(batch: int, d: int, *, state: int, headdim: int,
+                   expand: int, conv_width: int, dtype=jnp.bfloat16) -> PyTree:
+    d_inner = expand * d
+    n_heads = d_inner // headdim
+    return {
+        "conv": jnp.zeros((batch, conv_width - 1, d_inner + 2 * state), dtype),
+        "h": jnp.zeros((batch, n_heads, state, headdim), F32),
+    }
+
+
+def decode_step_ssm(params: PyTree, x_in: jax.Array, cache: PyTree, *,
+                    state: int, headdim: int, expand: int
+                    ) -> tuple[jax.Array, PyTree]:
+    """One-token decode.  x_in (B,1,d)."""
+    b_sz, _, d = x_in.shape
+    d_inner = expand * d
+    n_heads = d_inner // headdim
+
+    z, x, bc, dt = _project_in(params, x_in)
+    xbc_new = jnp.concatenate([x, bc], axis=-1)                 # (B,1,C)
+
+    # conv window update
+    win = jnp.concatenate([cache["conv"], xbc_new], axis=1)     # (B,W,C)
+    w = params["conv_w"]
+    conv_out = jnp.sum(win.astype(F32) * w.astype(F32)[None], axis=1) \
+        + params["conv_b"].astype(F32)                           # (B,C)
+    xbc = jax.nn.silu(conv_out).astype(x_in.dtype)
+    x1, b1, c1 = (xbc[:, :d_inner], xbc[:, d_inner:d_inner + state],
+                  xbc[:, d_inner + state:])
+
+    dt1 = jax.nn.softplus(dt[:, 0].astype(F32) + params["dt_bias"])  # (B,H)
+    a = -jnp.exp(params["a_log"])
+    decay = jnp.exp(dt1 * a)                                     # (B,H)
+
+    xh = x1.reshape(b_sz, n_heads, headdim).astype(F32)
+    upd = jnp.einsum("bn,bhp->bhnp", b1.astype(F32), xh * dt1[..., None])
+    h = cache["h"] * decay[..., None, None] + upd
+    y = jnp.einsum("bn,bhnp->bhp", c1.astype(F32), h)
+    y = y + xh * params["d_skip"][None, :, None]
+    y = y.reshape(b_sz, d_inner)
+
+    y = rms_norm((y * jax.nn.silu(z[:, 0].astype(F32))).astype(x_in.dtype),
+                 params["norm"])
+    out = jnp.einsum("bf,fd->bd", y, params["w_out"],
+                     preferred_element_type=F32).astype(x_in.dtype)
+    return out[:, None, :], {"conv": win[:, 1:], "h": h}

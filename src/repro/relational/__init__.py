@@ -1,0 +1,10 @@
+"""repro.relational — columnar tables, logical plans, and the JAX query
+engine (the substrate the paper's cursor loops iterate over)."""
+from .engine import execute
+from .plan import (AggCall, Filter, GroupAgg, IterSpace, Join, Limit,
+                   OrderBy, Plan, Project, Scan, push_filter, strip_order)
+from .table import Table, concat
+
+__all__ = ["execute", "AggCall", "Filter", "GroupAgg", "IterSpace", "Join",
+           "Limit", "OrderBy", "Plan", "Project", "Scan", "push_filter",
+           "strip_order", "Table", "concat"]

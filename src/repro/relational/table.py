@@ -1,0 +1,140 @@
+"""Columnar Table: structure-of-arrays with a validity mask.
+
+XLA requires static shapes, so variable-cardinality relational results are
+represented as fixed-capacity columns plus a boolean ``valid`` mask (invalid
+rows are compacted to the tail by ``compress``).  This is the TPU-native
+stand-in for a row-store result set; a cursor's "temp table" is simply a
+materialized (concrete, block_until_ready) Table.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Iterable, Mapping, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclass
+class Table:
+    columns: Dict[str, jax.Array]
+    valid: Optional[jax.Array] = None  # bool (capacity,) ; None => all valid
+
+    # -- pytree ---------------------------------------------------------------
+    def tree_flatten(self):
+        names = tuple(sorted(self.columns))
+        children = tuple(self.columns[n] for n in names) + (self.valid,)
+        return children, names
+
+    @classmethod
+    def tree_unflatten(cls, names, children):
+        cols = dict(zip(names, children[:-1]))
+        return cls(cols, children[-1])
+
+    # -- construction ---------------------------------------------------------
+    @staticmethod
+    def from_columns(**cols) -> "Table":
+        cols = {k: jnp.asarray(v) for k, v in cols.items()}
+        return Table(cols)
+
+    # -- basic properties -----------------------------------------------------
+    @property
+    def capacity(self) -> int:
+        return next(iter(self.columns.values())).shape[0]
+
+    @property
+    def column_names(self) -> tuple[str, ...]:
+        return tuple(self.columns)
+
+    def mask(self) -> jax.Array:
+        if self.valid is None:
+            return jnp.ones(self.capacity, dtype=bool)
+        return self.valid
+
+    def count(self) -> jax.Array:
+        return jnp.sum(self.mask().astype(jnp.int32))
+
+    # -- row ops ---------------------------------------------------------------
+    def filter(self, mask: jax.Array) -> "Table":
+        return Table(dict(self.columns), self.mask() & mask)
+
+    def project(self, names: Iterable[str]) -> "Table":
+        return Table({n: self.columns[n] for n in names}, self.valid)
+
+    def with_column(self, name: str, values: jax.Array) -> "Table":
+        cols = dict(self.columns)
+        cols[name] = values
+        return Table(cols, self.valid)
+
+    def rename(self, mapping: Mapping[str, str]) -> "Table":
+        cols = {mapping.get(k, k): v for k, v in self.columns.items()}
+        return Table(cols, self.valid)
+
+    def take(self, idx: jax.Array, idx_valid: Optional[jax.Array] = None) -> "Table":
+        cols = {k: jnp.take(v, idx, axis=0, mode="clip")
+                for k, v in self.columns.items()}
+        base = jnp.take(self.mask(), idx, mode="clip")
+        v = base if idx_valid is None else base & idx_valid
+        return Table(cols, v)
+
+    def compress(self) -> "Table":
+        """Stable-compact valid rows to the front (fixed capacity)."""
+        m = self.mask()
+        order = jnp.argsort(~m, stable=True)
+        t = self.take(order)
+        n = jnp.sum(m.astype(jnp.int32))
+        return Table(t.columns, jnp.arange(self.capacity) < n)
+
+    def sort_by(self, keys: Iterable[str], descending: Iterable[bool] = ()) -> "Table":
+        """Stable multi-key sort; invalid rows sort last."""
+        keys = list(keys)
+        desc = list(descending) or [False] * len(keys)
+        order = jnp.argsort(~self.mask(), stable=True)  # seed: valid first
+        # apply keys right-to-left for stable multi-key ordering
+        for k, d in reversed(list(zip(keys, desc))):
+            col = jnp.take(self.columns[k], order, mode="clip")
+            m = jnp.take(self.mask(), order, mode="clip")
+            key = _sort_key(col, d, m)
+            perm = jnp.argsort(key, stable=True)
+            order = jnp.take(order, perm)
+        return self.take(order)
+
+    def head(self, n: int) -> "Table":
+        c = self.compress()
+        cols = {k: v[:n] for k, v in c.columns.items()}
+        return Table(cols, c.mask()[:n])
+
+    def materialize(self) -> "Table":
+        """Force device materialization — models the cursor temp table."""
+        cols = {k: jax.block_until_ready(jnp.asarray(v)) for k, v in self.columns.items()}
+        v = None if self.valid is None else jax.block_until_ready(self.valid)
+        return Table(cols, v)
+
+    def nbytes(self) -> int:
+        tot = 0
+        for v in self.columns.values():
+            tot += int(np.prod(v.shape)) * v.dtype.itemsize
+        return tot
+
+    def to_numpy(self) -> dict[str, np.ndarray]:
+        m = np.asarray(self.mask())
+        return {k: np.asarray(v)[m] for k, v in self.columns.items()}
+
+
+def _sort_key(col: jax.Array, descending: bool, valid: jax.Array) -> jax.Array:
+    if col.dtype == jnp.bool_:
+        col = col.astype(jnp.int32)
+    key = -col if descending else col
+    if jnp.issubdtype(key.dtype, jnp.floating):
+        big = jnp.array(jnp.inf, dtype=key.dtype)
+    else:
+        big = jnp.array(jnp.iinfo(key.dtype).max, dtype=key.dtype)
+    return jnp.where(valid, key, big)
+
+
+def concat(a: Table, b: Table) -> Table:
+    cols = {k: jnp.concatenate([a.columns[k], b.columns[k]], axis=0)
+            for k in a.columns}
+    return Table(cols, jnp.concatenate([a.mask(), b.mask()]))

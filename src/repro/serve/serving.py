@@ -1,0 +1,77 @@
+"""Batched serving loop: continuous batching over a decode-step jit.
+
+The serve step is ONE jit (decode_step over the full batch); requests join
+and leave slots between steps (continuous batching).  Slot state is
+device-resident; the host only touches per-step token ids.  The decode
+attention inside is the paper-contract aggregate (see models/attention.py).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: list[int]
+    max_new: int
+    out: list[int] = field(default_factory=list)
+    done: bool = False
+
+
+class Server:
+    """Fixed-slot continuous batching server over an LM."""
+
+    def __init__(self, lm, params, *, slots: int, max_len: int):
+        self.lm = lm
+        self.params = params
+        self.slots = slots
+        self.cache = lm.init_cache(slots, max_len, params=params)
+        self.active: list[Optional[Request]] = [None] * slots
+        self.pending: list[Request] = []
+        self.tokens = np.zeros((slots, 1), np.int32)
+        self._step = jax.jit(lm.decode_step)
+
+    def submit(self, req: Request) -> None:
+        self.pending.append(req)
+
+    def _admit(self) -> None:
+        for i in range(self.slots):
+            if self.active[i] is None and self.pending:
+                req = self.pending.pop(0)
+                self.active[i] = req
+                # prefill-by-decode: feed prompt tokens one at a time
+                # (prompt chunking is the serving example's job)
+                req._cursor = 0
+                self.tokens[i, 0] = req.prompt[0]
+
+    def step(self) -> None:
+        self._admit()
+        logits, self.cache = self._step(self.params, self.cache,
+                                        jnp.asarray(self.tokens))
+        nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+        for i, req in enumerate(self.active):
+            if req is None:
+                continue
+            req._cursor += 1
+            if req._cursor < len(req.prompt):
+                self.tokens[i, 0] = req.prompt[req._cursor]   # still prefilling
+                continue
+            req.out.append(int(nxt[i]))
+            self.tokens[i, 0] = nxt[i]
+            if len(req.out) >= req.max_new:
+                req.done = True
+                self.active[i] = None
+
+    def run(self, max_steps: int = 1000) -> None:
+        steps = 0
+        while (self.pending or any(self.active)) and steps < max_steps:
+            self.step()
+            steps += 1

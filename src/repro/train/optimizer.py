@@ -1,0 +1,117 @@
+"""AdamW with fp32 master weights, cosine schedule, global-norm clipping,
+and optional int8 error-feedback gradient compression (the cross-pod
+bandwidth trick; see train_step.py for where it sits in the reduction).
+
+Pure JAX — optimizer state is a pytree mirroring the (bf16) params with
+fp32 master/m/v leaves, so standard sharding rules apply leaf-wise (ZeRO-
+style: the launcher shards these over the data axis)."""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+F32 = jnp.float32
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr_peak: float = 3e-4
+    lr_min: float = 3e-5
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+
+def schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    warm = cfg.lr_peak * jnp.minimum(1.0, (step + 1) / cfg.warmup_steps)
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / jnp.maximum(1, cfg.total_steps - cfg.warmup_steps), 0.0, 1.0)
+    cos = cfg.lr_min + 0.5 * (cfg.lr_peak - cfg.lr_min) * (1 + jnp.cos(jnp.pi * t))
+    return jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def init_opt_state(params: PyTree) -> PyTree:
+    master = jax.tree.map(lambda p: p.astype(F32), params)
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, F32), params)
+    return {"master": master, "m": zeros,
+            "v": jax.tree.map(jnp.zeros_like, zeros),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree: PyTree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(F32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def adamw_update(cfg: AdamWConfig, params: PyTree, grads: PyTree,
+                 opt: PyTree) -> tuple[PyTree, PyTree, dict]:
+    step = opt["step"]
+    lr = schedule(cfg, step)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-12))
+
+    b1, b2 = cfg.b1, cfg.b2
+    t = (step + 1).astype(F32)
+    bc1 = 1 - b1 ** t
+    bc2 = 1 - b2 ** t
+
+    def upd(g, m, v, mw):
+        g = g.astype(F32) * scale
+        m_new = b1 * m + (1 - b1) * g
+        v_new = b2 * v + (1 - b2) * g * g
+        mhat = m_new / bc1
+        vhat = v_new / bc2
+        step_vec = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * mw
+        mw_new = mw - lr * step_vec
+        return m_new, v_new, mw_new
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_m = jax.tree.leaves(opt["m"])
+    flat_v = jax.tree.leaves(opt["v"])
+    flat_w = jax.tree.leaves(opt["master"])
+    new_m, new_v, new_w = [], [], []
+    for g, m, v, w in zip(flat_g, flat_m, flat_v, flat_w):
+        m2, v2, w2 = upd(g, m, v, w)
+        new_m.append(m2); new_v.append(v2); new_w.append(w2)
+
+    master = jax.tree.unflatten(treedef, new_w)
+    new_opt = {"master": master,
+               "m": jax.tree.unflatten(treedef, new_m),
+               "v": jax.tree.unflatten(treedef, new_v),
+               "step": step + 1}
+    dtypes = jax.tree.map(lambda p: p.dtype, params)
+    new_params = jax.tree.map(lambda w, d: w.astype(d), master, dtypes)
+    metrics = {"lr": lr, "grad_norm": gnorm}
+    return new_params, new_opt, metrics
+
+
+# --------------------------------------------------------------------------
+# int8 error-feedback gradient compression (cross-pod DCN saver)
+# --------------------------------------------------------------------------
+
+
+def compress_int8(g: jax.Array, err: jax.Array) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Quantize (g + carried error) to int8 with a per-tensor scale;
+    returns (q, scale, new_error)."""
+    g32 = g.astype(F32) + err
+    scale = jnp.maximum(jnp.max(jnp.abs(g32)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g32 / scale), -127, 127).astype(jnp.int8)
+    deq = q.astype(F32) * scale
+    return q, scale, g32 - deq
+
+
+def decompress_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(F32) * scale
+
+
+def init_error_state(params: PyTree) -> PyTree:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, F32), params)

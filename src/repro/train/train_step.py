@@ -1,0 +1,139 @@
+"""The jit-compiled training step: loss → grads → (optional compressed)
+reduction → AdamW — plus the straggler monitor used by the driver loop.
+
+Distribution notes (1000+ nodes):
+  * under ``jax.jit`` with sharded params/batch, gradient reduction is
+    emitted by the partitioner (reduce-scatter + all-gather on the data
+    axes); the multi-pod mesh reduces hierarchically (ICI within a pod,
+    DCN across the "pod" axis);
+  * ``compress=True`` quantizes per-microbatch gradient contributions to
+    int8 with error feedback BEFORE the mean over microbatches — on a real
+    deployment this is the cross-pod DCN stage; the error state keeps the
+    scheme unbiased over time;
+  * microbatching (gradient accumulation) runs as a ``lax.scan`` so
+    arbitrarily large global batches fit.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .optimizer import (AdamWConfig, adamw_update, compress_int8,
+                        decompress_int8, global_norm, init_opt_state)
+
+PyTree = Any
+F32 = jnp.float32
+
+
+def make_train_step(loss_fn: Callable[[PyTree, PyTree], jax.Array],
+                    opt_cfg: AdamWConfig, *, microbatches: int = 1,
+                    compress: bool = False, acc_shardings: PyTree = None):
+    """Returns step(params, opt_state, batch[, err]) → (params, opt,
+    metrics[, err]).  ``batch`` leaves have leading dim divisible by
+    ``microbatches``.
+
+    ``acc_shardings`` (optional NamedSharding tree mirroring params):
+    ZeRO-2 — the fp32 gradient accumulator is constrained to the optimizer-
+    state sharding (model × data) instead of the parameter sharding (model
+    only), turning the per-microbatch gradient combine into a
+    reduce-scatter and cutting the accumulator's HBM footprint by the DP
+    width (§Perf iteration 6)."""
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(loss_fn)(params, batch)
+
+    def step(params, opt_state, batch, err_state=None):
+        if microbatches == 1:
+            loss, grads = grads_of(params, batch)
+        else:
+            def split(x):
+                # STRIDED split: microbatch i takes rows [i::mb].  With the
+                # global batch sharded blockwise over the data axes, each
+                # microbatch stays evenly spread across every data shard —
+                # the reshape+swap is local (no resharding collective),
+                # unlike a contiguous split which would park a whole
+                # microbatch on one shard.
+                per = x.shape[0] // microbatches
+                return x.reshape((per, microbatches) + x.shape[1:]) \
+                    .swapaxes(0, 1)
+            mb = jax.tree.map(split, batch)
+
+            def body(carry, mbatch):
+                loss_acc, g_acc = carry
+                loss, g = grads_of(params, mbatch)
+                g_acc = jax.tree.map(jnp.add, g_acc, g)
+                if acc_shardings is not None:
+                    g_acc = jax.lax.with_sharding_constraint(g_acc,
+                                                             acc_shardings)
+                return (loss_acc + loss, g_acc), None
+
+            zero = jax.tree.map(lambda p: jnp.zeros(p.shape, F32), params)
+            if acc_shardings is not None:
+                zero = jax.lax.with_sharding_constraint(zero, acc_shardings)
+            (loss, grads), _ = jax.lax.scan(body, (jnp.zeros((), F32), zero),
+                                            mb)
+            loss = loss / microbatches
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+
+        if compress:
+            assert err_state is not None
+            qs = jax.tree.map(compress_int8, grads, err_state)
+            grads = jax.tree.map(lambda t: decompress_int8(t[0], t[1]),
+                                 qs, is_leaf=lambda x: isinstance(x, tuple))
+            new_err = jax.tree.map(lambda t: t[2], qs,
+                                   is_leaf=lambda x: isinstance(x, tuple))
+        else:
+            new_err = err_state
+
+        params, opt_state, metrics = adamw_update(opt_cfg, params, grads,
+                                                  opt_state)
+        metrics["loss"] = loss
+        if compress:
+            return params, opt_state, metrics, new_err
+        return params, opt_state, metrics
+
+    return step
+
+
+# --------------------------------------------------------------------------
+# Straggler mitigation (driver side)
+# --------------------------------------------------------------------------
+
+
+@dataclass
+class StragglerMonitor:
+    """EWMA step-time watermark.  A deployment wires ``on_straggler`` to
+    its control plane (demote/replace the slow host; with our seeded,
+    stateless data pipeline any replacement host can recompute the shard).
+    Tested with injected delays."""
+    threshold: float = 2.0         # × EWMA ⇒ straggler
+    alpha: float = 0.2
+    ewma: Optional[float] = None
+    flagged: int = 0
+
+    def observe(self, dt: float) -> bool:
+        if self.ewma is None:
+            self.ewma = dt
+            return False
+        is_straggler = dt > self.threshold * self.ewma
+        # stragglers do not poison the watermark
+        if not is_straggler:
+            self.ewma = (1 - self.alpha) * self.ewma + self.alpha * dt
+        else:
+            self.flagged += 1
+        return is_straggler
+
+
+class StepTimer:
+    def __init__(self):
+        self._t = None
+
+    def tick(self) -> float:
+        now = time.perf_counter()
+        dt = 0.0 if self._t is None else now - self._t
+        self._t = now
+        return dt

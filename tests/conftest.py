@@ -1,0 +1,8 @@
+import os
+import sys
+
+# Smoke tests and benches must see exactly ONE device; the dry-run (and only
+# the dry-run) forces 512 placeholder host devices via its own env handling.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

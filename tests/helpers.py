@@ -1,0 +1,66 @@
+"""Shared test fixtures: the paper's Figure-1 and Figure-2 programs, and a
+tiny catalog to run them against."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (Assign, BinOp, Col, Const, CursorLoop, If, Program,
+                        Var, let)
+from repro.relational import Filter, Join, Scan, Table
+from repro.relational.plan import OrderBy
+
+
+def fig1_program() -> Program:
+    """The minCostSupp UDF of the paper's Figure 1 (argmin-with-lower-bound
+    over a join)."""
+    q = Filter(
+        Join(Scan("PARTSUPP", ("ps_partkey", "ps_suppkey", "ps_supplycost")),
+             Scan("SUPPLIER", ("s_suppkey", "s_name")),
+             left_key="ps_suppkey", right_key="s_suppkey", how="inner"),
+        Col("ps_partkey").eq(Var("pkey")))
+    body = [
+        If(BinOp("and", Var("pCost") < Var("minCost"), Var("pCost") > Var("lb")),
+           [Assign("minCost", Var("pCost")),
+            Assign("suppName", Var("sName"))]),
+    ]
+    loop = CursorLoop(q, fetch=[("pCost", "ps_supplycost"),
+                                ("sName", "s_name")], body=body)
+    return Program(
+        "minCostSupp", params=("pkey", "lb"),
+        pre=[let("minCost", Const(100000.0)), let("suppName", Const(-1))],
+        loop=loop, post=[], returns=("suppName",),
+        var_dtypes={"suppName": jnp.int32, "minCost": jnp.float32})
+
+
+def fig1_catalog():
+    return {
+        "PARTSUPP": Table.from_columns(
+            ps_partkey=np.array([0, 0, 0, 1, 1, 1], np.int32),
+            ps_suppkey=np.array([0, 1, 2, 0, 1, 2], np.int32),
+            ps_supplycost=np.array([5.0, 3.0, 8.0, 7.0, 2.0, 9.0], np.float32)),
+        "SUPPLIER": Table.from_columns(
+            s_suppkey=np.array([0, 1, 2], np.int32),
+            s_name=np.array([100, 101, 102], np.int32)),
+    }
+
+
+def fig2_program() -> Program:
+    """The cumulative time-weighted ROI loop of the paper's Figure 2
+    (ordered product aggregate)."""
+    q = OrderBy(Filter(Scan("MONTHLY", ("investor_id", "month", "roi")),
+                       Col("investor_id").eq(Var("id"))), ("month",))
+    return Program(
+        "computeCumulativeReturn", params=("id",),
+        pre=[let("cumulativeROI", Const(1.0))],
+        loop=CursorLoop(q, fetch=[("monthlyROI", "roi")],
+                        body=[Assign("cumulativeROI",
+                                     Var("cumulativeROI")
+                                     * (Var("monthlyROI") + 1.0))]),
+        post=[Assign("cumulativeROI", Var("cumulativeROI") - 1.0)],
+        returns=("cumulativeROI",))
+
+
+def fig2_catalog():
+    return {"MONTHLY": Table.from_columns(
+        investor_id=np.array([1, 1, 1, 2, 1], np.int32),
+        month=np.array([2, 0, 1, 0, 3], np.int32),
+        roi=np.array([0.10, 0.05, -0.02, 0.5, 0.07], np.float32))}

@@ -1,0 +1,125 @@
+"""Faithfulness tests: the analysis sets and end-to-end results the paper
+derives for its two running examples (Figures 1, 2, 5, 6, 7, 8)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (aggify, analyze_loop, build_aggregate, run_aggify,
+                        run_cursor, run_rewritten)
+
+from helpers import fig1_catalog, fig1_program, fig2_catalog, fig2_program
+
+MODES = ("stream", "chunked", "recognized", "auto")
+
+
+# --- §5 illustrations: the exact sets the paper derives --------------------
+
+def test_fig1_analysis_sets():
+    ana, _, _ = analyze_loop(fig1_program())
+    assert ana.v_delta == {"pCost", "minCost", "lb", "suppName", "sName"}
+    assert ana.v_fetch == {"pCost", "sName"}
+    assert ana.v_local == set()
+    assert ana.v_fields == {"minCost", "lb", "suppName"}     # V_F \ isInit
+    assert set(ana.p_accum) == {"pCost", "sName", "minCost", "lb"}
+    assert ana.v_init == {"minCost", "lb"}
+    assert ana.v_term == ("suppName",)
+
+
+def test_fig2_analysis_sets():
+    ana, _, _ = analyze_loop(fig2_program())
+    assert ana.v_delta == {"cumulativeROI", "monthlyROI"}
+    assert ana.v_fetch == {"monthlyROI"}
+    assert ana.v_fields == {"cumulativeROI"}
+    assert set(ana.p_accum) == {"monthlyROI", "cumulativeROI"}
+    assert ana.v_init == {"cumulativeROI"}
+    assert ana.v_term == ("cumulativeROI",)
+
+
+def test_fig1_accumulate_params_order():
+    """Figure 5: Accumulate(pCost, sName, pMinCost, pLb) — fetch params in
+    FETCH order come first."""
+    agg = build_aggregate(fig1_program())
+    assert agg.fetch_params == ("pCost", "sName")
+    assert set(agg.outer_params) == {"minCost", "lb"}
+
+
+# --- §6/§7: the rewrite preserves semantics ---------------------------------
+
+@pytest.mark.parametrize("mode", MODES)
+def test_fig1_equivalence(mode):
+    prog, cat = fig1_program(), fig1_catalog()
+    for pkey, lb in [(0, 4.0), (0, -1.0), (1, 0.0), (1, 8.0), (7, 0.0)]:
+        ref = run_cursor(prog, cat, {"pkey": pkey, "lb": lb})
+        got = run_aggify(prog, cat, {"pkey": pkey, "lb": lb}, mode=mode)
+        assert int(ref["suppName"]) == int(got["suppName"]), (pkey, lb, mode)
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_fig2_equivalence(mode):
+    prog, cat = fig2_program(), fig2_catalog()
+    for inv in (1, 2, 3):
+        ref = run_cursor(prog, cat, {"id": inv})
+        got = run_aggify(prog, cat, {"id": inv}, mode=mode)
+        np.testing.assert_allclose(np.asarray(ref["cumulativeROI"]),
+                                   np.asarray(got["cumulativeROI"]),
+                                   rtol=1e-6)
+
+
+def test_deferred_init_matches_eager():
+    """§5.2: deferred field initialization (the paper's Init-takes-no-args
+    workaround) must agree with the JAX-native eager init."""
+    prog, cat = fig1_program(), fig1_catalog()
+    a = run_aggify(prog, cat, {"pkey": 0, "lb": 4.0}, mode="stream",
+                   deferred_init=True)
+    b = run_aggify(prog, cat, {"pkey": 0, "lb": 4.0}, mode="stream")
+    assert int(a["suppName"]) == int(b["suppName"])
+
+
+def test_empty_input_preserves_program_state():
+    """§7: on an empty Q the loop never runs; P_n = P_0.  The rewritten
+    query must produce the same (the pre-loop value of V_term vars)."""
+    prog, cat = fig1_program(), fig1_catalog()
+    ref = run_cursor(prog, cat, {"pkey": 99, "lb": 0.0})
+    for mode in MODES:
+        got = run_aggify(prog, cat, {"pkey": 99, "lb": 0.0}, mode=mode)
+        assert int(got["suppName"]) == int(ref["suppName"]) == -1
+
+
+def test_dead_code_elimination():
+    """§6.2: '@pCost and @sName are no longer required, and are removed' —
+    our pre-statement DCE keeps only definitions feeding the rewrite."""
+    rp = aggify(fig1_program())
+    kept = {s.var for s in rp.pre}
+    assert "minCost" in kept and "suppName" in kept
+
+
+def test_rewrite_reuses_query_unmodified():
+    """§6.2: 'The cursor query Q remains unchanged, and is now the subquery
+    in the FROM clause.'"""
+    prog = fig1_program()
+    rp = aggify(prog)
+    assert rp.agg_call.child is prog.loop.query
+
+
+def test_order_enforcement_rule():
+    """Eq. 6: ORDER BY in Q forces Sort below a streaming aggregate."""
+    prog = fig2_program()
+    rp = aggify(prog)
+    assert rp.agg_call.ordered
+    assert rp.agg_call.sort_keys == ("month",)
+
+
+def test_chunked_num_chunks_sweep():
+    prog, cat = fig2_program(), fig2_catalog()
+    ref = run_cursor(prog, cat, {"id": 1})
+    for c in (1, 2, 3, 4, 8, 64):
+        got = run_aggify(prog, cat, {"id": 1}, mode="chunked", num_chunks=c)
+        np.testing.assert_allclose(np.asarray(ref["cumulativeROI"]),
+                                   np.asarray(got["cumulativeROI"]), rtol=1e-6)
+
+
+def test_interpreted_cursor_matches_scan_cursor():
+    prog, cat = fig1_program(), fig1_catalog()
+    a = run_cursor(prog, cat, {"pkey": 0, "lb": 4.0}, interpreted=True)
+    b = run_cursor(prog, cat, {"pkey": 0, "lb": 4.0})
+    assert int(a["suppName"]) == int(b["suppName"])

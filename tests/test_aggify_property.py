@@ -1,0 +1,136 @@
+"""Property-based equivalence: random loop bodies drawn from a grammar ×
+random tables ⇒ cursor == aggify for every execution mode that applies
+(Theorem 4.2, tested mechanically)."""
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.core import (Assign, BinOp, Col, Const, CursorLoop, If, Program,
+                        UnOp, Var, aggify, build_aggregate, let, run_aggify,
+                        run_cursor)
+from repro.relational import Scan, Table
+from repro.relational.plan import OrderBy
+
+COLS = ("a", "b", "k")
+
+
+def _table(draw):
+    n = draw(st.integers(min_value=1, max_value=40))
+    rng = np.random.default_rng(draw(st.integers(0, 2**31 - 1)))
+    return Table.from_columns(
+        a=rng.uniform(-4, 4, n).astype(np.float32),
+        b=rng.uniform(-4, 4, n).astype(np.float32),
+        k=rng.integers(0, 5, n).astype(np.int32),
+    )
+
+
+@st.composite
+def acyclic_expr(draw, depth=0):
+    """Expressions over fetch vars va/vb and outer params p0/p1."""
+    leaf = st.sampled_from([Var("va"), Var("vb"), Var("p0"), Var("p1"),
+                            Const(1.0), Const(0.5), Const(-2.0)])
+    if depth >= 2 or draw(st.booleans()):
+        return draw(leaf)
+    op = draw(st.sampled_from(["+", "-", "*", "min", "max"]))
+    return BinOp(op, draw(acyclic_expr(depth + 1)), draw(acyclic_expr(depth + 1)))
+
+
+@st.composite
+def update_stmt(draw, field):
+    kind = draw(st.sampled_from(["sum", "prod", "min", "max", "last",
+                                 "guarded_sum", "argmin", "argmax",
+                                 "affine"]))
+    e = draw(acyclic_expr())
+    if kind == "sum":
+        return Assign(field, Var(field) + e)
+    if kind == "prod":
+        # clamp contributions to keep products finite
+        return Assign(field, Var(field) * BinOp("min", BinOp("max", e, Const(-1.5)), Const(1.5)))
+    if kind == "min":
+        return Assign(field, BinOp("min", Var(field), e))
+    if kind == "max":
+        return Assign(field, BinOp("max", Var(field), e))
+    if kind == "last":
+        return Assign(field, e)
+    if kind == "guarded_sum":
+        g = BinOp(draw(st.sampled_from(["<", ">", "<=", ">="])),
+                  draw(acyclic_expr()), draw(acyclic_expr()))
+        return If(g, [Assign(field, Var(field) + e)])
+    if kind == "affine":
+        # NOT recognizable (cyclic multiply): exercises stream fallback
+        return Assign(field, Var(field) * Const(0.9) + e)
+    op = "<" if kind == "argmin" else ">"
+    return If(BinOp(op, e, Var(field)), [Assign(field, e)])
+
+
+@st.composite
+def loop_program(draw):
+    nfields = draw(st.integers(1, 3))
+    fields = [f"f{i}" for i in range(nfields)]
+    body = [draw(update_stmt(f)) for f in fields]
+    ordered = draw(st.booleans())
+    q = Scan("T", COLS)
+    if ordered:
+        q = OrderBy(q, ("k",))
+    loop = CursorLoop(q, fetch=[("va", "a"), ("vb", "b")], body=body)
+    pre = [let(f, Const(float(draw(st.integers(-3, 3))))) for f in fields]
+    prog = Program("prop", params=("p0", "p1"), pre=pre, loop=loop,
+                   post=[], returns=tuple(fields))
+    table = _table(draw)
+    p0 = float(draw(st.integers(-2, 2)))
+    p1 = float(draw(st.integers(-2, 2)))
+    return prog, table, {"p0": p0, "p1": p1}
+
+
+@settings(max_examples=40, deadline=None)
+@given(loop_program())
+def test_cursor_equals_aggify_auto(case):
+    prog, table, params = case
+    cat = {"T": table}
+    ref = run_cursor(prog, cat, params)
+    got = run_aggify(prog, cat, params, mode="auto")
+    for k in ref:
+        np.testing.assert_allclose(np.asarray(ref[k]), np.asarray(got[k]),
+                                   rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(loop_program())
+def test_cursor_equals_aggify_stream(case):
+    prog, table, params = case
+    cat = {"T": table}
+    ref = run_cursor(prog, cat, params)
+    got = run_aggify(prog, cat, params, mode="stream")
+    for k in ref:
+        np.testing.assert_allclose(np.asarray(ref[k]), np.asarray(got[k]),
+                                   rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(loop_program(), st.integers(1, 16))
+def test_chunked_matches_stream_when_mergeable(case, nc):
+    prog, table, params = case
+    agg = build_aggregate(prog)
+    if not agg.mergeable:
+        return
+    cat = {"T": table}
+    ref = run_aggify(prog, cat, params, mode="stream")
+    got = run_aggify(prog, cat, params, mode="chunked", num_chunks=nc)
+    for k in ref:
+        np.testing.assert_allclose(np.asarray(ref[k]), np.asarray(got[k]),
+                                   rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(loop_program())
+def test_rewrite_is_stable(case):
+    """Rewriting twice produces the same aggregate signature (idempotence
+    of the analysis)."""
+    prog, _, _ = case
+    a1 = build_aggregate(prog)
+    a2 = build_aggregate(prog)
+    assert a1.fields == a2.fields
+    assert a1.accum_params == a2.accum_params
+    assert a1.terminate_vars == a2.terminate_vars

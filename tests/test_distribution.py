@@ -1,0 +1,145 @@
+"""Distribution-layer tests that run on ONE device: sharding-rule
+assignment logic (divisibility fallbacks), the aggregate Merge under a
+sharded execution (via vmap-simulated shards), and attention partial-merge
+equivalence — the math that the multi-chip mesh executes over ICI."""
+import types
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.core.aggregate import Aggregate, chunked, streaming
+from repro.launch.sharding import _assign
+from repro.models.attention import decode_attention_jnp, softmax_aggregate
+
+
+class FakeMesh:
+    """Duck-typed mesh: only .shape (dict) and .axis_names are used by the
+    assignment helper."""
+    def __init__(self, shape: dict):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+
+
+MESH = FakeMesh({"data": 16, "model": 16})
+MESH_MP = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+def test_assign_prefers_first_dividing_axis():
+    # 64 heads divide 16 → model on dim 2
+    spec = _assign(MESH, (64, 8192, 64, 128), [(2, "model"), (1, "model")])
+    assert spec == P(None, None, "model", None)
+    # 40 heads do NOT divide 16 → fall to d_model
+    spec = _assign(MESH, (64, 5120, 40, 128), [(2, "model"), (1, "model")])
+    assert spec == P(None, "model", None, None)
+
+
+def test_assign_axis_used_once():
+    spec = _assign(MESH, (16, 16), [(0, "model"), (1, "model")])
+    assert spec == P("model", None)
+
+
+def test_assign_tuple_axes():
+    spec = _assign(MESH_MP, (256, 4096), [(0, ("pod", "data"))])
+    assert spec == P(("pod", "data"), None)
+    # batch=1 can't shard
+    spec = _assign(MESH_MP, (1, 4096), [(0, ("pod", "data"))])
+    assert spec == P(None, None)
+
+
+def test_param_and_opt_specs_cover_tree():
+    from repro.configs import get_config
+    from repro.launch.sharding import opt_specs, param_specs
+    from repro.models import LM
+    from repro.train.optimizer import init_opt_state
+    cfg = get_config("qwen3-14b").reduced()
+    lm = LM(cfg)
+    params = jax.eval_shape(lm.init, jax.random.PRNGKey(0))
+    spec = param_specs(MESH, cfg, params)
+    # spec tree mirrors the param tree exactly
+    assert jax.tree.structure(spec, is_leaf=lambda x: isinstance(x, P)) \
+        == jax.tree.structure(params)
+    opt = jax.eval_shape(init_opt_state, params)
+    ospec = opt_specs(MESH, cfg, opt, spec)
+    assert set(ospec) == {"master", "m", "v", "step"}
+
+
+def test_softmax_aggregate_merge_matches_monolithic():
+    """Splitting a KV cache into shards, accumulating locally and merging
+    (the ICI flash-decode combine) equals monolithic softmax attention."""
+    rng = np.random.default_rng(0)
+    d = 16
+    s = 64
+    q = jnp.asarray(rng.standard_normal(d), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((s, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((s, d)), jnp.float32)
+    logits = k @ q / np.sqrt(d)
+
+    agg = softmax_aggregate(d)
+    # 4 'shards' of 16 rows each: local accumulate, then ordered merge
+    partials = []
+    for i in range(4):
+        st = agg.identity()
+        for j in range(16):
+            st = agg.accumulate(st, {"s": logits[16 * i + j],
+                                     "v": v[16 * i + j]})
+        partials.append(st)
+    merged = partials[0]
+    for p in partials[1:]:
+        merged = agg.merge(merged, p)
+    got = agg.terminate(merged)
+
+    w = jax.nn.softmax(logits)
+    want = w @ v
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5)
+
+
+def test_decode_attention_shard_split_equivalence():
+    """decode_attention_jnp over a split cache + aggregate merge == over
+    the full cache (what XLA's partitioner computes when S is sharded)."""
+    rng = np.random.default_rng(1)
+    b, h, d, s = 2, 4, 16, 64
+    q = jnp.asarray(rng.standard_normal((b, h, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, s, h, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, s, h, d)), jnp.float32)
+    kv_len = jnp.asarray([64, 40], jnp.int32)
+    want = decode_attention_jnp(q, k, v, kv_len)
+
+    # manual two-shard merge, per (b, h) scalar-state folds
+    agg = softmax_aggregate(d)
+    got = np.zeros((b, h, d), np.float32)
+    for bi in range(b):
+        for hi in range(h):
+            partials = []
+            for shard in range(2):
+                st = agg.identity()
+                for j in range(32):
+                    pos = shard * 32 + j
+                    logit = jnp.where(pos < kv_len[bi],
+                                      k[bi, pos, hi] @ q[bi, hi] / np.sqrt(d),
+                                      -1e30)
+                    st = agg.accumulate(st, {"s": logit, "v": v[bi, pos, hi]})
+                partials.append(st)
+            merged = agg.merge(partials[0], partials[1])
+            got[bi, hi] = np.asarray(agg.terminate(merged))
+    np.testing.assert_allclose(got, np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+def test_chunked_aggregate_under_vmap_batching():
+    """chunked() composes with vmap — per-row group parallelism (how the
+    grouped executor maps onto VPU lanes)."""
+    def init():
+        return {"s": jnp.zeros((), jnp.float32)}
+
+    agg = Aggregate(
+        "sum", init,
+        lambda st, row: {"s": st["s"] + row["x"]},
+        lambda st: st["s"],
+        merge=lambda a, b: {"s": a["s"] + b["s"]},
+        identity=init)
+    rows = {"x": jnp.arange(24, dtype=jnp.float32).reshape(4, 6)}
+    out = jax.vmap(lambda r: chunked(agg, r, None, num_chunks=3))(rows)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(rows["x"].sum(axis=1)))

@@ -1,0 +1,207 @@
+"""§8 enhancements: acyclic code motion, FOR-loop rewriting, nested loops
+(decorrelation via grouped AggCall), and local-table DML support."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (Assign, BinOp, Col, Const, CursorLoop, ForLoop, If,
+                        InsertLocal, Program, UnOp, Var, aggify,
+                        apply_acyclic_code_motion, build_aggregate,
+                        grouped_agg_call, is_aggifyable, let, rewrite_for,
+                        run_aggify, run_cursor)
+from repro.core.aggify import NotAggifyable, check_applicability
+from repro.relational import Filter, Join, Scan, Table, execute
+from repro.relational.plan import AggCall, Project
+
+from helpers import fig1_catalog, fig1_program
+
+
+# --- §8.1 acyclic code motion ------------------------------------------------
+
+def test_guard_hoisted_to_where():
+    """The paper's own example: (@pCost > @lb) moves into the WHERE clause;
+    the cyclic conjunct (@pCost < @minCost) stays."""
+    prog = fig1_program()
+    moved = apply_acyclic_code_motion(prog, hoist_exprs=False)
+    body = moved.loop.body
+    assert len(body) == 1
+    cond = body[0].cond
+    assert isinstance(cond, BinOp) and cond.op == "<"   # only cyclic conjunct
+    # results unchanged
+    cat = fig1_catalog()
+    for lb in (-1.0, 4.0, 8.0):
+        a = run_cursor(prog, cat, {"pkey": 0, "lb": lb})
+        b = run_cursor(moved, cat, {"pkey": 0, "lb": lb})
+        c = run_aggify(moved, cat, {"pkey": 0, "lb": lb})
+        assert int(a["suppName"]) == int(b["suppName"]) == int(c["suppName"])
+
+
+def test_expression_hoisted_to_projection():
+    """(monthlyROI + 1) moves into Q as a projected column (§8.1: 'even
+    within statements that are part of a data dependence cycle, expressions
+    can be pulled out')."""
+    from helpers import fig2_catalog, fig2_program
+    prog = fig2_program()
+    moved = apply_acyclic_code_motion(prog)
+    assert any(v.startswith("__acm_") for v in moved.loop.fetch_vars)
+    cat = fig2_catalog()
+    a = run_cursor(prog, cat, {"id": 1})
+    b = run_cursor(moved, cat, {"id": 1})
+    c = run_aggify(moved, cat, {"id": 1})
+    np.testing.assert_allclose(np.asarray(a["cumulativeROI"]),
+                               np.asarray(b["cumulativeROI"]), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(a["cumulativeROI"]),
+                               np.asarray(c["cumulativeROI"]), rtol=1e-6)
+
+
+# --- §8.2 FOR loops -----------------------------------------------------------
+
+def test_for_loop_rewrite_and_aggify():
+    prog = Program(
+        "sumsq", params=("n",),
+        pre=[let("acc", Const(0.0))],
+        loop=ForLoop("i", Const(0), Var("n"), Const(1),
+                     [Assign("acc", Var("acc")
+                             + UnOp("float", Var("i")) * UnOp("float", Var("i")))],
+                     inclusive=False),
+        post=[], returns=("acc",))
+    p = rewrite_for(prog, capacity=256)
+    for n in (0, 1, 5, 100):
+        ref = float(sum(i * i for i in range(n)))
+        rc = run_cursor(p, {}, {"n": n})
+        ra = run_aggify(p, {}, {"n": n})
+        assert float(rc["acc"]) == ref
+        assert float(ra["acc"]) == ref
+
+
+def test_for_loop_dynamic_bounds():
+    """§8.2: 'the values need not be statically determinable' — bounds come
+    from program variables at run time."""
+    prog = Program(
+        "rng", params=("lo", "hi", "step"),
+        pre=[let("cnt", Const(0.0))],
+        loop=ForLoop("i", Var("lo"), Var("hi"), Var("step"),
+                     [Assign("cnt", Var("cnt") + 1.0)], inclusive=True),
+        post=[], returns=("cnt",))
+    p = rewrite_for(prog, capacity=512)
+    got = run_aggify(p, {}, {"lo": 4, "hi": 20, "step": 2})
+    assert float(got["cnt"]) == 9.0
+
+
+# --- §6.3.1 nested loops / grouped decorrelation -------------------------------
+
+def test_grouped_agg_call_decorrelates_fig1():
+    """Instead of invoking minCostSupp per part (correlated), group by
+    ps_partkey and run the custom aggregate once per group — the Aggify+
+    execution strategy for the Figure-1 query."""
+    prog = fig1_program()
+    cat = fig1_catalog()
+    agg = build_aggregate(prog)
+    q = Join(Scan("PARTSUPP", ("ps_partkey", "ps_suppkey", "ps_supplycost")),
+             Scan("SUPPLIER", ("s_suppkey", "s_name")),
+             left_key="ps_suppkey", right_key="s_suppkey", how="inner")
+    call = AggCall(child=q, aggregate=agg,
+                   param_binding=(("pCost", Col("ps_supplycost")),
+                                  ("sName", Col("s_name")),
+                                  ("minCost", Var("minCost")),
+                                  ("lb", Var("lb"))),
+                   group_keys=("ps_partkey",))
+    env = {"minCost": jnp.float32(100000.0), "lb": jnp.float32(4.0),
+           "suppName": jnp.int32(-1)}
+    out = execute(call, cat, env).to_numpy()
+    got = dict(zip(out["ps_partkey"], out["suppName"]))
+    # per-part reference via the scalar UDF
+    for pk in (0, 1):
+        ref = run_cursor(prog, cat, {"pkey": pk, "lb": 4.0})
+        assert int(got[pk]) == int(ref["suppName"])
+
+
+def test_grouped_scan_fallback_matches_recognized():
+    """The generic segmented-scan path must agree with the segment-
+    vectorized recognized path."""
+    prog = fig1_program()
+    cat = fig1_catalog()
+    agg = build_aggregate(prog)
+    assert agg.recognized is not None
+    unrec = type(agg)(**{**agg.__dict__, "recognized": None})
+    q = Join(Scan("PARTSUPP", ("ps_partkey", "ps_suppkey", "ps_supplycost")),
+             Scan("SUPPLIER", ("s_suppkey", "s_name")),
+             left_key="ps_suppkey", right_key="s_suppkey", how="inner")
+    env = {"minCost": jnp.float32(100000.0), "lb": jnp.float32(0.0),
+           "suppName": jnp.int32(-1)}
+    binding = (("pCost", Col("ps_supplycost")), ("sName", Col("s_name")),
+               ("minCost", Var("minCost")), ("lb", Var("lb")))
+    a = execute(AggCall(q, agg, binding, group_keys=("ps_partkey",)),
+                cat, env).to_numpy()
+    b = execute(AggCall(q, unrec, binding, group_keys=("ps_partkey",)),
+                cat, env).to_numpy()
+    assert list(a["suppName"]) == list(b["suppName"])
+
+
+# --- §4.2 applicability + local-table DML --------------------------------------
+
+def test_persistent_dml_rejected():
+    q = Scan("T", ("x",))
+    prog = Program(
+        "bad", params=(), pre=[],
+        loop=CursorLoop(q, fetch=[("vx", "x")],
+                        body=[InsertLocal("PERSISTENT_TABLE", [Var("vx")])]),
+        post=[], returns=())
+    assert not is_aggifyable(prog)
+    with pytest.raises(NotAggifyable):
+        check_applicability(prog)
+
+
+def test_local_table_insert_supported():
+    """DML on local table variables is supported (§4.2) — stream-only."""
+    cat = {"T": Table.from_columns(x=np.array([3., 1., 4., 1., 5.], np.float32))}
+    prog = Program(
+        "collect", params=(),
+        pre=[let("s", Const(0.0))],
+        loop=CursorLoop(Scan("T", ("x",)), fetch=[("vx", "x")],
+                        body=[If(Var("vx") > 2.0,
+                                 [InsertLocal("tv", [Var("vx")])]),
+                              Assign("s", Var("s") + Var("vx"))]),
+        post=[], returns=("s", "tv"),
+        local_tables={"tv": ((jnp.float32,), 16)})
+    ref = run_cursor(prog, cat)
+    got = run_aggify(prog, cat)   # auto resolves to stream (local table)
+    assert float(ref["s"]) == float(got["s"]) == 14.0
+    (bufs_r, n_r), (bufs_g, n_g) = ref["tv"], got["tv"]
+    assert int(n_r) == int(n_g) == 3
+    np.testing.assert_allclose(np.asarray(bufs_r[0])[:3],
+                               np.asarray(bufs_g[0])[:3])
+
+
+def test_grouped_recognized_pallas_kernel_path():
+    """The fused Pallas segment-aggregate kernel (interpret mode) must
+    agree with the jnp segment-op path for grouped recognized aggregates."""
+    import os
+
+    from repro.core.executors import grouped_agg_call
+
+    prog = fig1_program()
+    cat = fig1_catalog()
+    agg = build_aggregate(prog)
+    # a pure-sum grouped aggregate exercises the kernel row
+    sum_prog = Program(
+        "qtySum", params=(),
+        pre=[let("qty", Const(0.0))],
+        loop=CursorLoop(Scan("PARTSUPP",
+                             ("ps_partkey", "ps_suppkey", "ps_supplycost")),
+                        fetch=[("c", "ps_supplycost")],
+                        body=[Assign("qty", Var("qty") + Var("c"))]),
+        post=[], returns=("qty",))
+    sagg = build_aggregate(sum_prog)
+    call = AggCall(Scan("PARTSUPP", ("ps_partkey", "ps_suppkey",
+                                     "ps_supplycost")),
+                   sagg, (("c", Col("ps_supplycost")), ),
+                   group_keys=("ps_partkey",))
+    env = {"qty": jnp.float32(0.0)}
+    a = execute(call, cat, env).to_numpy()
+    os.environ["REPRO_SEGAGG_PALLAS"] = "1"
+    try:
+        b = execute(call, cat, env).to_numpy()
+    finally:
+        del os.environ["REPRO_SEGAGG_PALLAS"]
+    np.testing.assert_allclose(a["qty"], b["qty"], rtol=1e-5)

@@ -1,0 +1,175 @@
+"""Training substrate: optimizer convergence, checkpoint atomicity +
+elastic restore, data-pipeline determinism, compression error feedback,
+straggler monitor, end-to-end tiny training run."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.data.pipeline import DataConfig, Prefetcher, host_batch
+from repro.models import LM
+from repro.train.checkpoint import (latest_step, restore_checkpoint,
+                                    save_checkpoint)
+from repro.train.optimizer import (AdamWConfig, adamw_update, compress_int8,
+                                   decompress_int8, init_error_state,
+                                   init_opt_state, schedule)
+from repro.train.train_step import StragglerMonitor, make_train_step
+
+
+def test_adamw_quadratic_convergence():
+    cfg = AdamWConfig(lr_peak=0.1, warmup_steps=5, total_steps=200,
+                      weight_decay=0.0, clip_norm=10.0)
+    params = {"w": jnp.asarray([3.0, -2.0])}
+    opt = init_opt_state(params)
+
+    def loss_fn(p):
+        return jnp.sum((p["w"] - jnp.asarray([1.0, 1.0])) ** 2)
+
+    for _ in range(150):
+        g = jax.grad(loss_fn)(params)
+        params, opt, _ = adamw_update(cfg, params, g, opt)
+    np.testing.assert_allclose(np.asarray(params["w"]), [1.0, 1.0], atol=1e-2)
+
+
+def test_schedule_shape():
+    cfg = AdamWConfig(lr_peak=1e-3, lr_min=1e-4, warmup_steps=10,
+                      total_steps=100)
+    lrs = [float(schedule(cfg, jnp.asarray(s))) for s in range(100)]
+    assert lrs[0] < lrs[9]                       # warmup rises
+    assert abs(lrs[10] - 1e-3) < 1e-4            # peak
+    assert lrs[-1] < 2.2e-4                      # decays toward min
+
+
+def test_compression_error_feedback_unbiased():
+    """Error feedback makes the *accumulated* quantized signal track the
+    true signal."""
+    rng = np.random.default_rng(0)
+    g_true = jnp.asarray(rng.standard_normal(128) * 1e-3, jnp.float32)
+    err = jnp.zeros(128, jnp.float32)
+    acc = jnp.zeros(128, jnp.float32)
+    for _ in range(50):
+        q, s, err = compress_int8(g_true, err)
+        acc = acc + decompress_int8(q, s)
+    np.testing.assert_allclose(np.asarray(acc / 50), np.asarray(g_true),
+                               atol=2e-5)
+
+
+def test_checkpoint_roundtrip_and_rotation(tmp_path):
+    d = str(tmp_path / "ckpt")
+    tree = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "nested": {"b": jnp.ones((4,), jnp.bfloat16)}}
+    for s in (1, 2, 3, 4):
+        save_checkpoint(d, s, tree, keep=2)
+    assert latest_step(d) == 4
+    kept = sorted(x for x in os.listdir(d) if x.startswith("step_"))
+    assert kept == ["step_00000003", "step_00000004"]
+    restored = restore_checkpoint(d, 4, tree)
+    np.testing.assert_array_equal(np.asarray(restored["a"]),
+                                  np.asarray(tree["a"]))
+    assert restored["nested"]["b"].dtype == jnp.bfloat16
+
+
+def test_checkpoint_detects_corruption(tmp_path):
+    d = str(tmp_path / "ckpt")
+    tree = {"a": jnp.arange(4, dtype=jnp.float32)}
+    path = save_checkpoint(d, 1, tree)
+    # corrupt the array file
+    fn = [f for f in os.listdir(path) if f.endswith(".bin")][0]
+    with open(os.path.join(path, fn), "r+b") as f:
+        f.seek(0)
+        f.write(b"\xff\xff")
+    with pytest.raises(IOError):
+        restore_checkpoint(d, 1, tree)
+
+
+def test_checkpoint_elastic_resharding(tmp_path):
+    """Restore under a different device layout: global array identical."""
+    d = str(tmp_path / "ckpt")
+    tree = {"w": jnp.arange(16, dtype=jnp.float32).reshape(4, 4)}
+    save_checkpoint(d, 7, tree)
+    # single-device 'mesh' — resharding API path (device_put w/ sharding)
+    from jax.sharding import SingleDeviceSharding
+    shard = {"w": SingleDeviceSharding(jax.devices()[0])}
+    restored = restore_checkpoint(d, 7, tree, shardings=shard)
+    np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                  np.asarray(tree["w"]))
+
+
+def test_data_pipeline_determinism_and_sharding():
+    base = DataConfig(vocab=100, seq_len=16, global_batch=8, seed=3)
+    a = host_batch(base, step=5)
+    b = host_batch(base, step=5)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    c = host_batch(base, step=6)
+    assert not np.array_equal(a["tokens"], c["tokens"])
+    # host sharding partitions the global batch
+    h0 = host_batch(DataConfig(100, 16, 8, 3, n_hosts=2, host_id=0), 5)
+    h1 = host_batch(DataConfig(100, 16, 8, 3, n_hosts=2, host_id=1), 5)
+    assert h0["tokens"].shape == (4, 16)
+    assert not np.array_equal(h0["tokens"], h1["tokens"])
+
+
+def test_prefetcher():
+    cfg = DataConfig(vocab=50, seq_len=8, global_batch=4)
+    pf = Prefetcher(cfg, start_step=0)
+    s0, b0 = next(pf)
+    s1, b1 = next(pf)
+    pf.close()
+    assert (s0, s1) == (0, 1)
+    ref = host_batch(cfg, 0)
+    np.testing.assert_array_equal(b0["tokens"], ref["tokens"])
+
+
+def test_straggler_monitor():
+    mon = StragglerMonitor(threshold=2.0)
+    for _ in range(10):
+        assert not mon.observe(1.0)
+    assert mon.observe(5.0)           # flagged
+    assert mon.flagged == 1
+    assert not mon.observe(1.05)      # watermark not poisoned
+
+
+def test_microbatched_step_matches_single():
+    cfg = get_config("h2o-danube-1.8b").reduced()
+    lm = LM(cfg, q_chunk=16, kv_chunk=16)
+    params = lm.init(jax.random.PRNGKey(0))
+    opt_cfg = AdamWConfig(lr_peak=1e-3, warmup_steps=1, total_steps=10)
+    opt = init_opt_state(params)
+    batch = {
+        "tokens": jax.random.randint(jax.random.PRNGKey(1), (4, 16), 0,
+                                     cfg.vocab),
+        "labels": jax.random.randint(jax.random.PRNGKey(2), (4, 16), 0,
+                                     cfg.vocab),
+    }
+    s1 = make_train_step(lm.loss, opt_cfg, microbatches=1)
+    s2 = make_train_step(lm.loss, opt_cfg, microbatches=2)
+    p1, _, m1 = s1(params, opt, batch)
+    p2, _, m2 = s2(params, opt, batch)
+    np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]),
+                               rtol=1e-3)
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), atol=3e-2)
+
+
+def test_tiny_training_reduces_loss():
+    """End-to-end: a few steps on a tiny dense model reduce loss on a
+    learnable (repetitive) synthetic task."""
+    cfg = get_config("h2o-danube-1.8b").reduced()
+    lm = LM(cfg, q_chunk=16, kv_chunk=16)
+    params = lm.init(jax.random.PRNGKey(0))
+    opt_cfg = AdamWConfig(lr_peak=5e-3, warmup_steps=2, total_steps=40,
+                          weight_decay=0.0)
+    opt = init_opt_state(params)
+    step = jax.jit(make_train_step(lm.loss, opt_cfg))
+    rng = np.random.default_rng(0)
+    seq = np.tile(np.arange(16) % 7, (8, 1)).astype(np.int32)
+    batch = {"tokens": jnp.asarray(seq), "labels": jnp.asarray(np.roll(seq, -1, 1))}
+    losses = []
+    for _ in range(30):
+        params, opt, m = step(params, opt, batch)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] * 0.7, losses[::6]
