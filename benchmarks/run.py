@@ -9,6 +9,8 @@ Prints ``name,us_per_call,derived`` CSV rows.
   logical_reads   — Table 4
   scalability     — Figures 10/11/12
   roofline        — §Roofline terms from the dry-run artifacts
+  group_agg       — grouped-aggregation mode shoot-out (stream vs
+                    recognized vs fused Pallas path; docs/execution-modes.md)
 """
 from __future__ import annotations
 
@@ -25,8 +27,8 @@ def main() -> None:
                     help="larger data sizes (slower)")
     args = ap.parse_args()
 
-    from . import (app_loops, applicability, logical_reads, roofline_bench,
-                   scalability, tpch_loops, workload_loops)
+    from . import (app_loops, applicability, group_agg, logical_reads,
+                   roofline_bench, scalability, tpch_loops, workload_loops)
 
     scale = 0.005 if args.full else args.scale
     sizes = ((100, 1_000, 10_000, 100_000, 1_000_000, 3_000_000)
@@ -39,6 +41,8 @@ def main() -> None:
         "logical_reads": lambda: logical_reads.run(scale=scale),
         "scalability": lambda: scalability.run(sizes=sizes),
         "roofline": lambda: roofline_bench.run(),
+        "group_agg": lambda: group_agg.run(
+            n=200_000 if args.full else 50_000),
     }
     only = None if args.only == "all" else set(args.only.split(","))
     print("name,us_per_call,derived")

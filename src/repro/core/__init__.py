@@ -10,8 +10,9 @@ from .aggify import (AggifyAnalysis, CustomAggregate, NotAggifyable,
 from .cfg import CFG, FETCH_STATUS
 from .code_motion import apply_acyclic_code_motion
 from .dataflow import analyze
-from .executors import (agg_call_values, execute_agg_call, grouped_agg_call,
-                        run_aggify, run_cursor, run_rewritten)
+from .executors import (agg_call_values, execute_agg_call, fused_eligible,
+                        grouped_agg_call, run_aggify, run_cursor,
+                        run_rewritten)
 from .for_loops import rewrite_for
 from .loop_ir import (Assign, BinOp, Call, Col, Const, CursorLoop, Expr,
                       ForLoop, If, InsertLocal, Program, Stmt, UnOp, Var,
@@ -23,7 +24,8 @@ __all__ = [
     "RewrittenProgram", "aggify", "analyze_loop", "build_aggregate",
     "check_applicability", "exec_stmts", "is_aggifyable", "CFG",
     "FETCH_STATUS", "apply_acyclic_code_motion", "analyze",
-    "agg_call_values", "execute_agg_call", "grouped_agg_call", "run_aggify",
+    "agg_call_values", "execute_agg_call", "fused_eligible",
+    "grouped_agg_call", "run_aggify",
     "run_cursor", "run_rewritten", "rewrite_for", "Assign", "BinOp", "Call",
     "Col", "Const", "CursorLoop", "Expr", "ForLoop", "If", "InsertLocal",
     "Program", "Stmt", "UnOp", "Var", "Where", "let", "maximum", "minimum",

@@ -13,11 +13,24 @@ Aggify paths (§5/§6 + our beyond-paper parallel modes):
   * ``mode='chunked'``    — Merge-parallel partial aggregation (synthesized
                             merge; see recognize.py).
   * ``mode='recognized'`` — fully set-oriented closed form (no scan at all).
-  * ``mode='auto'``       — recognized > chunked > stream.
+  * ``mode='fused'``      — grouped: recognized updates lowered onto the
+                            fused Pallas segment-aggregate kernel
+                            (kernels/segment_agg.py) — one VMEM-resident
+                            pass computes every sum/count/min/max moment
+                            for every recognized column; remaining update
+                            kinds (arg_group/last/prod) stay on jnp segment
+                            ops in the same XLA program.  Ungrouped, the
+                            closed form is already one fused pass, so
+                            'fused' coincides with 'recognized'.
+  * ``mode='auto'``       — fused > recognized > chunked > stream.
 
 Grouped invocation (``AggCall.group_keys``) decorrelates per-group loops
-(the paper's Q2/minCostSupp-per-part pattern) into a single pass — either
-segment-vectorized (recognized) or one segmented scan (generic).
+(the paper's Q2/minCostSupp-per-part pattern) into a single pass — fused
+(Pallas kernel), segment-vectorized (recognized), or one segmented scan
+(generic).  Kernel backend selection: compiled on TPU, ``jax.ops.segment_*``
+fallback on CPU/GPU; ``REPRO_SEGAGG_BACKEND`` ∈ {pallas, interpret, jnp}
+overrides, and the legacy ``REPRO_SEGAGG_PALLAS=1`` forces the kernel
+(interpret mode off-TPU).
 """
 from __future__ import annotations
 
@@ -149,6 +162,17 @@ def run_aggify(prog: Program, catalog, params=None, mode: str = "auto",
 # ---------------------------------------------------------------------------
 
 
+def fused_eligible(agg: CustomAggregate) -> bool:
+    """True when the accumulator decomposes into moments the fused Pallas
+    segment-aggregate kernel computes: at least one recognized sum/min/max
+    update (counts are sums of 1; means are sum/count) or an argmin/argmax
+    group whose key extremum comes from the kernel's min/max rows (payload
+    selection stays on jnp gathers in the same XLA program)."""
+    return (agg.recognized is not None and not agg.local_tables
+            and any(u.kind in ("sum", "min", "max", "arg_group")
+                    for u in agg.recognized))
+
+
 def _resolve_mode(call: AggCall, agg: CustomAggregate,
                   deferred_init: bool) -> str:
     mode = call.mode
@@ -160,6 +184,12 @@ def _resolve_mode(call: AggCall, agg: CustomAggregate,
         if agg.mergeable:
             return "chunked"
         return "stream"
+    if mode == "fused":
+        # ungrouped: the closed form already is one fused pass
+        if agg.recognized is None:
+            raise ValueError(f"aggregate {agg.name!r} not recognized; cannot "
+                             "run in fused mode")
+        return "recognized"
     if mode == "recognized" and agg.recognized is None:
         raise ValueError(f"aggregate {agg.name!r} not recognized; cannot "
                          "run in recognized mode")
@@ -262,11 +292,13 @@ def grouped_agg_call(call: AggCall, catalog, env) -> Table:
     for k in call.group_keys:
         cols[k] = jnp.take(st.columns[k], safe_first)
 
-    if agg.recognized is not None and not agg.local_tables:
-        import os as _os
-        out = _grouped_recognized(
-            agg, rows, outer_vals, m, seg, cap,
-            use_pallas=_os.environ.get("REPRO_SEGAGG_PALLAS") == "1")
+    mode = _resolve_grouped_mode(call, agg)
+    if mode == "fused":
+        out = _grouped_fused(agg, rows, outer_vals, m, seg, cap,
+                             backend=_segagg_backend(),
+                             require_kernel=call.mode == "fused")
+    elif mode == "recognized":
+        out = _grouped_recognized(agg, rows, outer_vals, m, seg, cap)
     else:
         out = _grouped_scan(agg, rows, outer_vals, m, starts, seg, cap)
     for v in agg.terminate_vars:
@@ -274,39 +306,176 @@ def grouped_agg_call(call: AggCall, catalog, env) -> Table:
     return Table(cols, out_valid)
 
 
-def _grouped_recognized(agg, rows, outer_vals, valid, seg, cap,
-                        use_pallas: bool = False):
-    """Segment-vectorized recognized aggregation.  ``use_pallas`` routes
-    sum/min/max/count through the fused Pallas segment-aggregate kernel
-    (kernels/segment_agg.py) — one HBM pass computes all four moments; on
-    CPU it runs in interpret mode (tests) while jnp segment ops remain the
-    default execution."""
+def _resolve_grouped_mode(call: AggCall, agg: CustomAggregate) -> str:
+    """Grouped physical-mode selection: fused > recognized > scan.
+    'stream' and 'chunked' both lower to the generic segmented scan (the
+    per-group sequential semantics; chunk-parallelism within a segment is
+    an open item)."""
+    mode = call.mode
+    recognized = agg.recognized is not None and not agg.local_tables
+    if mode == "auto":
+        if fused_eligible(agg):
+            return "fused"
+        return "recognized" if recognized else "scan"
+    if mode == "fused":
+        if not fused_eligible(agg):
+            raise ValueError(
+                f"aggregate {agg.name!r} has no fused-eligible recognized "
+                "updates (sum/min/max/argmin/argmax); cannot run in fused "
+                "mode")
+        return "fused"
+    if mode == "recognized":
+        if not recognized:
+            raise ValueError(f"aggregate {agg.name!r} not recognized; cannot "
+                             "run in recognized mode")
+        return "recognized"
+    if mode == "chunked" and not agg.mergeable:
+        raise ValueError(f"aggregate {agg.name!r} has no merge")
+    return "scan"
+
+
+def _segagg_backend() -> str:
+    """Kernel backend for the fused grouped path: compiled on TPU, pure-JAX
+    segment ops on CPU/GPU (the interpreter loop is test-only).  Env
+    overrides: REPRO_SEGAGG_BACKEND, or legacy REPRO_SEGAGG_PALLAS=1."""
+    import os as _os
+    env = _os.environ.get("REPRO_SEGAGG_BACKEND")
+    if env in ("pallas", "interpret", "jnp"):
+        return env
+    on_tpu = jax.default_backend() == "tpu"
+    if _os.environ.get("REPRO_SEGAGG_PALLAS") == "1":
+        return "pallas" if on_tpu else "interpret"
+    return "pallas" if on_tpu else "jnp"
+
+
+def _grouped_fused(agg, rows, outer_vals, valid, seg, cap, backend="auto",
+                   require_kernel=False):
+    """Fused grouped aggregation: every recognized sum/min/max/arg-extremum
+    update over a ≤32-bit floating field is batched into ONE fused
+    segment-aggregate pass (each column carries its own guard mask, so
+    differently-guarded updates still share the traversal); remaining
+    updates (prod/last, float64/integer fields) run on the jnp segment
+    path in the same XLA program.  ``require_kernel`` (an explicit
+    ``mode='fused'`` request) raises instead of silently running a
+    kernel-free pass when every update is dtype-routed to jnp."""
+    from repro.kernels.segment_agg import fused_segment_agg
+
     col_env = dict(outer_vals)
     col_env.update(rows)
-    out: dict[str, jax.Array] = {}
     n = valid.shape[0]
-    idx = jnp.arange(n)
+
+    kernel_updates = []
+    rest = []
     for u in agg.recognized:
-        g = valid
-        if u.guard is not None:
-            g = g & jnp.asarray(eval_expr(u.guard, col_env), bool)
-        if use_pallas and u.kind in ("sum", "min", "max"):
-            from repro.kernels.segment_agg import segment_agg as _seg_kernel
+        d = jnp.asarray(outer_vals[u.fields[0]]).dtype
+        # the kernel accumulates in f32: float64 fields would silently
+        # lose precision, so they stay on the jnp path in their own dtype
+        if (u.kind in ("sum", "min", "max", "arg_group")
+                and jnp.issubdtype(d, jnp.floating)
+                and jnp.dtype(d).itemsize <= 4):
+            kernel_updates.append(u)
+        else:
+            rest.append(u)
+    if require_kernel and not kernel_updates:
+        raise ValueError(
+            f"aggregate {agg.name!r}: no recognized update targets a ≤32-bit "
+            "floating field (the kernel accumulates in f32), so mode='fused' "
+            "would run no kernel work — use mode='recognized' or 'auto'")
+
+    out: dict[str, jax.Array] = {}
+    if kernel_updates:
+        cols = []
+        masks = []
+        moments: list[set] = []    # per kernel column
+        col_of: dict = {}          # (expr, guard) -> kernel column index
+        upd_col = []
+        for u in kernel_updates:
+            ck = (u.exprs[0], u.guard)
+            if ck not in col_of:    # min+max over one column share a pass
+                g = valid
+                if u.guard is not None:
+                    g = g & jnp.asarray(eval_expr(u.guard, col_env), bool)
+                e = jnp.broadcast_to(
+                    jnp.asarray(eval_expr(u.exprs[0], col_env), jnp.float32),
+                    (n,))
+                col_of[ck] = len(cols)
+                cols.append(e)
+                masks.append(g)
+                moments.append(set())
+            c = col_of[ck]
+            upd_col.append(c)
+            if u.kind == "arg_group":
+                moments[c].add("min" if u.op in ("<", "<=") else "max")
+            else:
+                moments[c].add(u.kind)
+        fused = fused_segment_agg(
+            jnp.stack(cols, axis=1), seg.astype(jnp.int32),
+            jnp.stack(masks, axis=1), cap, backend=backend,
+            moments=tuple(tuple(sorted(ms)) for ms in moments))
+        for u, c in zip(kernel_updates, upd_col):
             f = u.fields[0]
             d = jnp.asarray(outer_vals[f]).dtype
-            e = jnp.broadcast_to(
-                jnp.asarray(eval_expr(u.exprs[0], col_env), jnp.float32), (n,))
-            fused = _seg_kernel(e, seg.astype(jnp.int32), g, cap,
-                                interpret=True)
-            row_i = {"sum": 0, "min": 2, "max": 3}[u.kind]
-            r = fused[row_i].astype(d)
+            g, key = masks[c], cols[c]
+            if u.kind == "arg_group":
+                minimize = u.op in ("<", "<=")
+                best = fused[c, 2 if minimize else 3].astype(d)
+                worst = _recognize._MINMAX_ID["min" if minimize else "max"](d)
+                masked = jnp.where(g, key.astype(d), worst)
+                _arg_group_select(u, outer_vals, col_env, g, masked, best,
+                                  seg, cap, out)
+                continue
+            r = fused[c, {"sum": 0, "min": 2, "max": 3}[u.kind]].astype(d)
             if u.kind == "sum":
                 out[f] = outer_vals[f] + r
             elif u.kind == "min":
                 out[f] = jnp.minimum(outer_vals[f], r)
             else:
                 out[f] = jnp.maximum(outer_vals[f], r)
-            continue
+    if rest:
+        out.update(_grouped_recognized(agg, rows, outer_vals, valid, seg,
+                                       cap, updates=tuple(rest)))
+    return out
+
+
+def _arg_group_select(u, outer_vals, col_env, g, masked, best, seg, cap,
+                      out) -> None:
+    """Shared tail of the grouped argmin/argmax lowering: given the
+    per-segment key extremum ``best`` (from the fused kernel or jnp segment
+    ops), pick the attaining row (first for strict comparisons, last for
+    non-strict — matching the sequential loop's tie order), gather the
+    payload columns, and beat-compare against the pre-loop state."""
+    n = masked.shape[0]
+    idx = jnp.arange(n)
+    kf = u.fields[0]
+    hit = g & (masked == jnp.take(best, seg))
+    cand = jnp.where(hit, idx, (n if u.op in ("<", ">") else -1))
+    pickfn = jax.ops.segment_min if u.op in ("<", ">") else jax.ops.segment_max
+    pick = pickfn(cand, seg, num_segments=cap)
+    safe = jnp.clip(pick, 0, n - 1)
+    cmp = {"<": best < outer_vals[kf], "<=": best <= outer_vals[kf],
+           ">": best > outer_vals[kf], ">=": best >= outer_vals[kf]}[u.op]
+    beat = cmp & (pick < n) & (pick >= 0)
+    out[kf] = jnp.where(beat, best, outer_vals[kf])
+    for f, pe in zip(u.fields[1:], u.exprs[1:]):
+        pd = jnp.asarray(outer_vals[f]).dtype
+        pv = jnp.broadcast_to(jnp.asarray(eval_expr(pe, col_env), pd), (n,))
+        out[f] = jnp.where(beat, jnp.take(pv, safe), outer_vals[f])
+
+
+def _grouped_recognized(agg, rows, outer_vals, valid, seg, cap,
+                        updates=None):
+    """Segment-vectorized recognized aggregation on ``jax.ops.segment_*``
+    (``updates`` restricts to a subset — used by the fused path for the
+    kinds the kernel does not cover)."""
+    col_env = dict(outer_vals)
+    col_env.update(rows)
+    out: dict[str, jax.Array] = {}
+    n = valid.shape[0]
+    idx = jnp.arange(n)
+    for u in (agg.recognized if updates is None else updates):
+        g = valid
+        if u.guard is not None:
+            g = g & jnp.asarray(eval_expr(u.guard, col_env), bool)
         if u.kind in ("sum", "prod", "min", "max"):
             f = u.fields[0]
             d = jnp.asarray(outer_vals[f]).dtype
@@ -336,20 +505,8 @@ def _grouped_recognized(agg, rows, outer_vals, valid, seg, cap,
             masked = jnp.where(g, key, worst)
             segfn = jax.ops.segment_min if minimize else jax.ops.segment_max
             best = segfn(masked, seg, num_segments=cap)
-            hit = g & (masked == jnp.take(best, seg))
-            # first (strict) or last (non-strict) attaining row per segment
-            cand = jnp.where(hit, idx, (n if u.op in ("<", ">") else -1))
-            pickfn = jax.ops.segment_min if u.op in ("<", ">") else jax.ops.segment_max
-            pick = pickfn(cand, seg, num_segments=cap)
-            safe = jnp.clip(pick, 0, n - 1)
-            cmp = {"<": best < outer_vals[kf], "<=": best <= outer_vals[kf],
-                   ">": best > outer_vals[kf], ">=": best >= outer_vals[kf]}[u.op]
-            beat = cmp & (pick < n) & (pick >= 0)
-            out[kf] = jnp.where(beat, best, outer_vals[kf])
-            for f, pe in zip(u.fields[1:], u.exprs[1:]):
-                pd = jnp.asarray(outer_vals[f]).dtype
-                pv = jnp.broadcast_to(jnp.asarray(eval_expr(pe, col_env), pd), (n,))
-                out[f] = jnp.where(beat, jnp.take(pv, safe), outer_vals[f])
+            _arg_group_select(u, outer_vals, col_env, g, masked, best,
+                              seg, cap, out)
         elif u.kind == "last":
             f = u.fields[0]
             pd = jnp.asarray(outer_vals[f]).dtype

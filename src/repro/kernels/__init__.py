@@ -5,7 +5,8 @@ Each kernel ships with a pure-jnp oracle (ref.py) and a dispatching wrapper
 see the module docstrings."""
 from . import ops, ref
 from .decode_attn import decode_attention
-from .segment_agg import segment_agg
+from .segment_agg import fused_segment_agg, segment_agg
 from .ssd_scan import ssd_scan
 
-__all__ = ["ops", "ref", "decode_attention", "segment_agg", "ssd_scan"]
+__all__ = ["ops", "ref", "decode_attention", "fused_segment_agg",
+           "segment_agg", "ssd_scan"]

@@ -18,6 +18,7 @@ import jax.numpy as jnp
 
 from . import ref as _ref
 from .decode_attn import decode_attention as _decode_pallas
+from .segment_agg import fused_segment_agg as _fused_segagg
 from .segment_agg import segment_agg as _segagg_pallas
 from .ssd_scan import ssd_scan as _ssd_pallas
 
@@ -45,6 +46,20 @@ def segment_agg(vals, segs, valid, num_segments: int, *,
                               block_rows=block_rows,
                               interpret=not _on_tpu())
     return _ref.segment_agg_ref(vals, segs, valid, num_segments)
+
+
+def fused_segment_agg(vals, segs, valid, num_segments: int, *,
+                      use_pallas: bool | None = None, block_rows: int = 256,
+                      block_segs: int | None = None):
+    """Multi-column fused segmented aggregation → (C, 4, num_segments).
+    Kernel on TPU (interpret under test), jnp segment ops otherwise."""
+    if want_pallas(use_pallas):
+        backend = "pallas" if _on_tpu() else "interpret"
+    else:
+        backend = "jnp"
+    return _fused_segagg(vals, segs, valid, num_segments,
+                         block_rows=block_rows, block_segs=block_segs,
+                         backend=backend)
 
 
 def decode_attention(q, k, v, kv_len, *, use_pallas: bool | None = None,

@@ -21,6 +21,15 @@ def segment_agg_ref(vals: jax.Array, segs: jax.Array, valid: jax.Array,
     return jnp.stack([s, c, mn, mx])
 
 
+def fused_segment_agg_ref(vals: jax.Array, segs: jax.Array, valid: jax.Array,
+                          num_segments: int) -> jax.Array:
+    """Multi-column oracle: (N, C) vals, (N, C) per-column validity →
+    (C, 4, num_segments) f32 with moment rows [sum, count, min, max]."""
+    cols = [segment_agg_ref(vals[:, c], segs, valid[:, c], num_segments)
+            for c in range(vals.shape[1])]
+    return jnp.stack(cols, axis=0)
+
+
 def decode_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
                          kv_len: jax.Array) -> jax.Array:
     """Masked softmax attention, fp32 accumulation.  q (BH,G,D);

@@ -2,20 +2,36 @@
 
 One pass over rows sorted by segment id computes SUM / COUNT / MIN / MAX
 per segment simultaneously — the fused multi-aggregate the recognized
-execution path of Aggify emits for grouped custom aggregates.
+execution path of Aggify emits for grouped custom aggregates.  The kernel
+accepts *multiple value columns per pass* (each with its own validity
+mask, so differently-guarded recognized updates batch into one HBM
+traversal) and tiles the *segment range* so the one-hot membership mask
+always fits VMEM regardless of group cardinality.
 
 TPU adaptation (vs a CUDA scatter-atomic formulation): atomics are not the
 TPU model.  Instead each row-block materializes a one-hot membership mask
-(rows × segments) in VMEM and reduces with broadcast/select ops on the VPU
-(8×128 lanes); partials accumulate into the output block, which stays
+(rows × segment-tile) in VMEM and reduces with broadcast/select ops on the
+VPU (8×128 lanes); partials accumulate into the output block, which stays
 resident in VMEM across the whole row-block grid (output revisiting).
 Rows are pre-sorted by segment, so the mask is band-structured and the
-working set is bounded by (BLOCK_ROWS × NUM_SEGS) — the caller tiles the
-segment range so this fits VMEM.
+working set is bounded by (BLOCK_ROWS × BLOCK_SEGS) — chosen by
+``default_block_segs`` to respect a VMEM budget.
 
-Grid: (num_row_blocks,). Block shapes:
-  vals  (BLOCK_ROWS, 1)  f32/bf16      segs (BLOCK_ROWS, 1) i32
-  out   (4, NUM_SEGS)    rows = [sum, count, min, max]
+Grid: (num_seg_tiles, num_row_blocks) — row blocks iterate fastest so the
+output tile stays VMEM-resident while every row block streams past it.
+Block shapes:
+  vals  (BLOCK_ROWS, C)  f32          segs  (BLOCK_ROWS, 1) i32
+  valid (BLOCK_ROWS, C)  i32
+  out   (4*C, BLOCK_SEGS)  row layout [4*c + m] with m = sum,count,min,max
+
+Execution backends (``fused_segment_agg``):
+  * ``pallas``    — compiled kernel (real TPU).
+  * ``interpret`` — the same kernel under the Pallas interpreter (CI/CPU
+                    correctness; exercises the exact lowering).
+  * ``jnp``       — pure ``jax.ops.segment_*`` fallback, identical math,
+                    used on CPU/GPU where the interpreter loop would be
+                    the bottleneck.
+  * ``auto``      — pallas on TPU, jnp elsewhere.
 """
 from __future__ import annotations
 
@@ -29,67 +45,203 @@ from jax.experimental import pallas as pl
 NEG_INF = float("-inf")
 POS_INF = float("inf")
 
+#: index of each fused moment in the kernel output
+MOMENTS = ("sum", "count", "min", "max")
+
+
+def default_block_segs(num_segments: int, block_rows: int = 256,
+                       vmem_budget_elems: int = 1 << 19) -> int:
+    """Largest segment-tile width whose (block_rows × tile) membership mask
+    stays under ``vmem_budget_elems`` f32 elements (default 2 MB)."""
+    bs = max(8, vmem_budget_elems // max(block_rows, 1))
+    return int(min(num_segments, bs))
+
 
 def _segment_agg_kernel(vals_ref, segs_ref, valid_ref, out_ref, *,
-                        num_segments: int):
-    i = pl.program_id(0)
+                        block_segs: int, num_cols: int,
+                        moments: tuple[tuple[str, ...], ...]):
+    j = pl.program_id(0)          # segment tile (output stays resident)
+    i = pl.program_id(1)          # row block   (streams past the tile)
 
     @pl.when(i == 0)
     def _init():
-        out_ref[0, :] = jnp.zeros((num_segments,), out_ref.dtype)        # sum
-        out_ref[1, :] = jnp.zeros((num_segments,), out_ref.dtype)        # count
-        out_ref[2, :] = jnp.full((num_segments,), POS_INF, out_ref.dtype)  # min
-        out_ref[3, :] = jnp.full((num_segments,), NEG_INF, out_ref.dtype)  # max
+        for c in range(num_cols):
+            out_ref[4 * c + 0, :] = jnp.zeros((block_segs,), out_ref.dtype)
+            out_ref[4 * c + 1, :] = jnp.zeros((block_segs,), out_ref.dtype)
+            out_ref[4 * c + 2, :] = jnp.full((block_segs,), POS_INF,
+                                             out_ref.dtype)
+            out_ref[4 * c + 3, :] = jnp.full((block_segs,), NEG_INF,
+                                             out_ref.dtype)
 
-    vals = vals_ref[...].astype(out_ref.dtype)          # (R, 1)
+    vals = vals_ref[...].astype(out_ref.dtype)          # (R, C)
     segs = segs_ref[...]                                # (R, 1) int32
-    ok = valid_ref[...] != 0                            # (R, 1)
+    ok = valid_ref[...] != 0                            # (R, C)
 
     r = vals.shape[0]
-    seg_iota = lax.broadcasted_iota(jnp.int32, (r, num_segments), 1)
-    member = (segs == seg_iota) & ok                    # (R, S) band mask
+    local = segs - j * block_segs                       # tile-relative ids
+    seg_iota = lax.broadcasted_iota(jnp.int32, (r, block_segs), 1)
+    in_tile = local == seg_iota                         # (R, BS) band mask
 
-    vbc = jnp.broadcast_to(vals, (r, num_segments))
-    out_ref[0, :] += jnp.sum(jnp.where(member, vbc, 0), axis=0)
-    out_ref[1, :] += jnp.sum(member.astype(out_ref.dtype), axis=0)
-    out_ref[2, :] = jnp.minimum(
-        out_ref[2, :], jnp.min(jnp.where(member, vbc, POS_INF), axis=0))
-    out_ref[3, :] = jnp.maximum(
-        out_ref[3, :], jnp.max(jnp.where(member, vbc, NEG_INF), axis=0))
+    for c in range(num_cols):
+        ms = moments[c]
+        member = in_tile & ok[:, c:c + 1]
+        vbc = jnp.broadcast_to(vals[:, c:c + 1], (r, block_segs))
+        if "sum" in ms:
+            out_ref[4 * c + 0, :] += jnp.sum(jnp.where(member, vbc, 0),
+                                             axis=0)
+        if "count" in ms:
+            out_ref[4 * c + 1, :] += jnp.sum(member.astype(out_ref.dtype),
+                                             axis=0)
+        if "min" in ms:
+            out_ref[4 * c + 2, :] = jnp.minimum(
+                out_ref[4 * c + 2, :],
+                jnp.min(jnp.where(member, vbc, POS_INF), axis=0))
+        if "max" in ms:
+            out_ref[4 * c + 3, :] = jnp.maximum(
+                out_ref[4 * c + 3, :],
+                jnp.max(jnp.where(member, vbc, NEG_INF), axis=0))
+
+
+def _normalize(vals: jax.Array, valid: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Lift (N,)/(N,C) vals and valid to matching (N, C)."""
+    if vals.ndim == 1:
+        vals = vals[:, None]
+    if valid.ndim == 1:
+        valid = valid[:, None]
+    if valid.shape[1] == 1 and vals.shape[1] > 1:
+        valid = jnp.broadcast_to(valid, vals.shape)
+    return vals, valid
 
 
 @functools.partial(jax.jit, static_argnames=("num_segments", "block_rows",
-                                             "interpret"))
-def segment_agg(vals: jax.Array, segs: jax.Array, valid: jax.Array,
-                num_segments: int, block_rows: int = 256,
-                interpret: bool = True) -> jax.Array:
-    """Returns (4, num_segments) f32: [sum, count, min, max] per segment.
-
-    ``vals`` (N,) float, ``segs`` (N,) int32 sorted ascending, ``valid``
-    (N,) bool.  N is padded to a multiple of ``block_rows``.
-    """
-    n = vals.shape[0]
+                                             "block_segs", "interpret",
+                                             "moments"))
+def _segment_agg_pallas(vals: jax.Array, segs: jax.Array, valid: jax.Array,
+                        num_segments: int, block_rows: int,
+                        block_segs: int, interpret: bool,
+                        moments: tuple[str, ...] = MOMENTS) -> jax.Array:
+    """(N, C) vals/valid → (C, 4, num_segments) f32 via the Pallas kernel."""
+    n, num_cols = vals.shape
     pad = (-n) % block_rows
     if pad:
-        vals = jnp.pad(vals, (0, pad))
-        segs = jnp.pad(segs, (0, pad))
-        valid = jnp.pad(valid, (0, pad))
+        vals = jnp.pad(vals, ((0, pad), (0, 0)))
+        segs = jnp.pad(segs, (0, pad), constant_values=num_segments)
+        valid = jnp.pad(valid, ((0, pad), (0, 0)))
     n_p = n + pad
-    vals2 = vals.reshape(n_p, 1)
     segs2 = segs.astype(jnp.int32).reshape(n_p, 1)
-    valid2 = valid.astype(jnp.int32).reshape(n_p, 1)
+    valid2 = valid.astype(jnp.int32)
+    vals2 = vals.astype(jnp.float32)
 
-    grid = (n_p // block_rows,)
+    num_seg_tiles = -(-num_segments // block_segs)
+    s_pad = num_seg_tiles * block_segs
+    grid = (num_seg_tiles, n_p // block_rows)
     out = pl.pallas_call(
-        functools.partial(_segment_agg_kernel, num_segments=num_segments),
-        out_shape=jax.ShapeDtypeStruct((4, num_segments), jnp.float32),
+        functools.partial(_segment_agg_kernel, block_segs=block_segs,
+                          num_cols=num_cols, moments=moments),
+        out_shape=jax.ShapeDtypeStruct((4 * num_cols, s_pad), jnp.float32),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((block_rows, 1), lambda i: (i, 0)),
-            pl.BlockSpec((block_rows, 1), lambda i: (i, 0)),
-            pl.BlockSpec((block_rows, 1), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, num_cols), lambda j, i: (i, 0)),
+            pl.BlockSpec((block_rows, 1), lambda j, i: (i, 0)),
+            pl.BlockSpec((block_rows, num_cols), lambda j, i: (i, 0)),
         ],
-        out_specs=pl.BlockSpec((4, num_segments), lambda i: (0, 0)),
+        out_specs=pl.BlockSpec((4 * num_cols, block_segs),
+                               lambda j, i: (0, j)),
         interpret=interpret,
     )(vals2, segs2, valid2)
+    return out[:, :num_segments].reshape(num_cols, 4, num_segments)
+
+
+_MOMENT_ROW = {"sum": 0, "count": 1, "min": 2, "max": 3}
+_MOMENT_FILL = {"sum": 0.0, "count": 0.0, "min": POS_INF, "max": NEG_INF}
+
+
+def _segment_agg_jnp(vals: jax.Array, segs: jax.Array, valid: jax.Array,
+                     num_segments: int,
+                     moments: tuple[tuple[str, ...], ...]) -> jax.Array:
+    """Pure-JAX fallback, identical math: (N, C) → (C, 4, num_segments).
+    ``moments`` is per-column; moment rows a column does not request hold
+    their init identity (0 / 0 / ±inf).  Unlike the kernel (where the
+    fused pass makes extra moments nearly free), each jnp moment is a
+    separate segment op, so it runs once per moment over exactly the
+    columns that need it."""
+    v = vals.astype(jnp.float32)
+    seg = segs.astype(jnp.int32)
+    num_cols = vals.shape[1]
+    out = jnp.stack(
+        [jnp.full((num_cols, num_segments), _MOMENT_FILL[m], jnp.float32)
+         for m in MOMENTS], axis=1)
+    for m in MOMENTS:
+        idx = [c for c in range(num_cols) if m in moments[c]]
+        if not idx:
+            continue
+        vi = v[:, idx]
+        gi = valid[:, idx]
+        if m == "sum":
+            r = jax.ops.segment_sum(jnp.where(gi, vi, 0.0), seg,
+                                    num_segments=num_segments)
+        elif m == "count":
+            r = jax.ops.segment_sum(gi.astype(jnp.float32), seg,
+                                    num_segments=num_segments)
+        elif m == "min":
+            r = jax.ops.segment_min(jnp.where(gi, vi, POS_INF), seg,
+                                    num_segments=num_segments)
+        else:
+            r = jax.ops.segment_max(jnp.where(gi, vi, NEG_INF), seg,
+                                    num_segments=num_segments)
+        out = out.at[jnp.asarray(idx), _MOMENT_ROW[m], :].set(r.T)
     return out
+
+
+def fused_segment_agg(vals: jax.Array, segs: jax.Array, valid: jax.Array,
+                      num_segments: int, *, block_rows: int = 256,
+                      block_segs: int | None = None,
+                      backend: str = "auto",
+                      moments: tuple[str, ...] = MOMENTS) -> jax.Array:
+    """Fused multi-column segmented aggregation.
+
+    ``vals``  (N,) or (N, C) — C value columns over the same row stream.
+    ``segs``  (N,) int, sorted ascending, in [0, num_segments).
+    ``valid`` (N,) or (N, C) bool — per-column row validity (guards).
+    ``moments`` restricts which of [sum, count, min, max] are computed —
+    either one tuple of moment names applied to every column, or a
+    per-column tuple of tuples.  Skipped rows hold their init identity.
+
+    Returns (C, 4, num_segments) f32 with moment rows [sum, count, min,
+    max]; empty segments read [0, 0, +inf, -inf].
+    """
+    vals, valid = _normalize(jnp.asarray(vals), jnp.asarray(valid))
+    num_cols = vals.shape[1]
+    if not moments or isinstance(moments[0], str):
+        moments = (tuple(m for m in MOMENTS if m in moments),) * num_cols
+    else:
+        moments = tuple(tuple(m for m in MOMENTS if m in ms)
+                        for ms in moments)
+    if len(moments) != num_cols:
+        raise ValueError(f"per-column moments: got {len(moments)} entries "
+                         f"for {num_cols} columns")
+    if backend == "auto":
+        backend = "pallas" if jax.default_backend() == "tpu" else "jnp"
+    if backend == "jnp":
+        return _segment_agg_jnp(vals, segs, valid, num_segments, moments)
+    if backend not in ("pallas", "interpret"):
+        raise ValueError(f"unknown segment_agg backend {backend!r}")
+    if block_segs is None:
+        block_segs = default_block_segs(num_segments, block_rows)
+    return _segment_agg_pallas(vals, jnp.asarray(segs), valid, num_segments,
+                               block_rows, int(block_segs),
+                               interpret=backend == "interpret",
+                               moments=moments)
+
+
+def segment_agg(vals: jax.Array, segs: jax.Array, valid: jax.Array,
+                num_segments: int, block_rows: int = 256,
+                interpret: bool = True,
+                block_segs: int | None = None) -> jax.Array:
+    """Single-column legacy entry point: (4, num_segments) f32 rows
+    [sum, count, min, max].  See ``fused_segment_agg`` for the
+    multi-column / backend-dispatching API."""
+    out = fused_segment_agg(vals, segs, valid, num_segments,
+                            block_rows=block_rows, block_segs=block_segs,
+                            backend="interpret" if interpret else "pallas")
+    return out[0]

@@ -178,6 +178,24 @@ _SEG_OPS = {
     "prod": jax.ops.segment_prod,
 }
 
+#: ops the fused Pallas segment-aggregate kernel serves from its four
+#: moment rows (mean = sum/count)
+_FUSED_OPS = ("sum", "min", "max", "count", "mean")
+
+
+def _groupagg_fused_backend() -> Optional[str]:
+    """Backend for the fused GroupAgg path, or None for per-op jnp segment
+    ops.  Default: the compiled kernel on TPU (one HBM pass for all
+    moments), per-op jnp elsewhere.  REPRO_GROUPAGG_FUSED ∈ {pallas,
+    interpret, jnp, off} overrides (tests use 'interpret')."""
+    import os
+    env = os.environ.get("REPRO_GROUPAGG_FUSED")
+    if env in ("pallas", "interpret", "jnp"):
+        return env
+    if env == "off":
+        return None
+    return "pallas" if jax.default_backend() == "tpu" else None
+
 
 def _group_agg(t: Table, keys: tuple[str, ...],
                aggs: tuple[tuple[str, str, Optional[str]], ...]) -> Table:
@@ -193,6 +211,27 @@ def _group_agg(t: Table, keys: tuple[str, ...],
     first_of_seg = jax.ops.segment_min(first_idx, seg, num_segments=cap)
     for k in keys:
         cols[k] = jnp.take(st.columns[k], jnp.clip(first_of_seg, 0, cap - 1))
+
+    backend = _groupagg_fused_backend()
+
+    def _fusable(op, col):
+        # kernel accumulates in f32: float64 columns keep the exact per-op
+        # path, and counts (f32-exact only below 2^24) require the row
+        # capacity to bound every segment count inside that range
+        if op not in _FUSED_OPS:
+            return False
+        if op in ("count", "mean") and cap >= 1 << 24:
+            return False
+        if col is None:
+            return True
+        d = st.columns[col].dtype
+        return jnp.issubdtype(d, jnp.floating) and jnp.dtype(d).itemsize <= 4
+
+    fused_aggs = [] if backend is None else [
+        (out, op, col) for out, op, col in aggs if _fusable(op, col)]
+    if fused_aggs:
+        cols.update(_group_agg_fused(st, seg, m, cap, fused_aggs, backend))
+        aggs = tuple(a for a in aggs if a not in fused_aggs)
 
     for out, op, col in aggs:
         if op == "count":
@@ -214,6 +253,53 @@ def _group_agg(t: Table, keys: tuple[str, ...],
         cols[out] = _SEG_OPS[op](v, seg, num_segments=cap)
 
     return Table(cols, out_valid)
+
+
+def _group_agg_fused(st: Table, seg: jax.Array, m: jax.Array, cap: int,
+                     fused_aggs, backend: str) -> dict[str, jax.Array]:
+    """Serve sum/count/min/max/mean GroupAgg ops from ONE fused
+    segment-aggregate pass: each distinct value column is one kernel
+    column; all four moments come back together, so e.g. (sum, count,
+    mean, min) over one column costs a single HBM traversal."""
+    from repro.kernels.segment_agg import fused_segment_agg
+
+    value_cols = list(dict.fromkeys(
+        col for _, _, col in fused_aggs if col is not None))
+    if not value_cols:        # count-only: any column works, mask does the job
+        vals = jnp.zeros((cap, 1), jnp.float32)
+        col_idx = {}
+    else:
+        vals = jnp.stack([st.columns[c].astype(jnp.float32)
+                          for c in value_cols], axis=1)
+        col_idx = {c: i for i, c in enumerate(value_cols)}
+    moments = [set() for _ in range(max(1, len(value_cols)))]
+    for _, op, col in fused_aggs:
+        i = col_idx.get(col, 0)   # count (col=None) rides on column 0
+        moments[i].update({"mean": ("sum", "count"),
+                           "count": ("count",)}.get(op, (op,)))
+    fused = fused_segment_agg(vals, seg.astype(jnp.int32), m[:, None], cap,
+                              backend=backend,
+                              moments=tuple(tuple(sorted(ms))
+                                            for ms in moments))
+
+    out: dict[str, jax.Array] = {}
+    count = fused[0, 1]
+    for name, op, col in fused_aggs:
+        if op == "count":
+            out[name] = count.astype(
+                jnp.int64 if jax.config.jax_enable_x64 else jnp.int32)
+            continue
+        i = col_idx[col]
+        d = st.columns[col].dtype
+        if op == "sum":
+            out[name] = fused[i, 0].astype(d)
+        elif op == "mean":
+            out[name] = fused[i, 0] / jnp.maximum(fused[i, 1], 1.0)
+        elif op == "min":
+            out[name] = fused[i, 2].astype(d)
+        else:  # max
+            out[name] = fused[i, 3].astype(d)
+    return out
 
 
 def _identity_for(op: str, dtype) -> jax.Array:

@@ -181,7 +181,7 @@ class AggCall(Plan):
     sort_keys: tuple[str, ...] = ()
     sort_desc: tuple[bool, ...] = ()
     group_keys: tuple[str, ...] = ()
-    mode: str = "auto"                  # auto|stream|chunked|recognized
+    mode: str = "auto"                  # auto|stream|chunked|recognized|fused
 
     @property
     def columns(self) -> tuple[str, ...]:

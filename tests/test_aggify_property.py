@@ -1,11 +1,17 @@
 """Property-based equivalence: random loop bodies drawn from a grammar ×
 random tables ⇒ cursor == aggify for every execution mode that applies
-(Theorem 4.2, tested mechanically)."""
-import hypothesis.strategies as st
+(Theorem 4.2, tested mechanically).
+
+The whole module skips when ``hypothesis`` is not installed (it is an
+optional dev dependency — the CI image and the hermetic container only
+guarantee jax + pytest)."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
+
+hypothesis = pytest.importorskip("hypothesis")
+import hypothesis.strategies as st           # noqa: E402
+from hypothesis import given, settings       # noqa: E402
 
 from repro.core import (Assign, BinOp, Col, Const, CursorLoop, If, Program,
                         UnOp, Var, aggify, build_aggregate, let, run_aggify,
