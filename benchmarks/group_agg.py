@@ -116,6 +116,21 @@ def run(n: int = 50_000, ngroups: int = 512, repeats: int = 3,
     cat = _catalog(n, ngroups)
     small_cat = _catalog(interpret_rows, max(8, ngroups // 8), seed=1)
 
+    # band pruning: executed vs cross-product grid steps for this workload
+    # (the grouped executor uses the table capacity as the static segment
+    # bound, so the unpruned grid walks n-capacity many segment tiles)
+    from repro.kernels.segment_agg import (default_block_segs,
+                                           full_grid_steps,
+                                           pruned_grid_steps)
+    keys = np.asarray(cat["PARTSUPP"].columns["ps_partkey"])
+    segs = np.cumsum(np.concatenate([[1], keys[1:] != keys[:-1]])) - 1
+    pruned = pruned_grid_steps(segs, n)
+    full = full_grid_steps(n, n)
+    bs = default_block_segs(n)
+    emit("groupagg_grid_steps", 0.0,
+         f"pruned={pruned}_full={full}_reduction={full / pruned:.1f}x_"
+         f"block_segs={bs}")
+
     for name, (prog, env) in _programs().items():
         us_stream = _run_mode(_grouped(prog, "stream"), cat, env,
                               repeats=repeats)

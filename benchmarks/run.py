@@ -25,6 +25,9 @@ def main() -> None:
     ap.add_argument("--scale", type=float, default=0.0005)
     ap.add_argument("--full", action="store_true",
                     help="larger data sizes (slower)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write results as a JSON artifact (the "
+                         "committed BENCH_*.json baselines use this)")
     args = ap.parse_args()
 
     from . import (app_loops, applicability, group_agg, logical_reads,
@@ -47,6 +50,8 @@ def main() -> None:
     only = None if args.only == "all" else set(args.only.split(","))
     print("name,us_per_call,derived")
     failures = 0
+    from .util import reset_results, write_json
+    reset_results()
     for name, fn in benches.items():
         if only and name not in only:
             continue
@@ -57,6 +62,8 @@ def main() -> None:
             traceback.print_exc()
             print(f"{name},0,ERROR:{type(e).__name__}")
             failures += 1
+    if args.json:
+        write_json(args.json)
     sys.exit(1 if failures else 0)
 
 

@@ -1,10 +1,15 @@
-"""Benchmark timing helpers."""
+"""Benchmark timing helpers + machine-readable result collection."""
 from __future__ import annotations
 
+import json
 import time
 from typing import Callable
 
 import jax
+
+#: every emit() lands here so the driver can dump a JSON artifact
+#: (benchmarks/run.py --json PATH); cleared per driver invocation
+_RESULTS: list[dict] = []
 
 
 def time_fn(fn: Callable[[], object], *, repeats: int = 5,
@@ -25,3 +30,25 @@ def time_fn(fn: Callable[[], object], *, repeats: int = 5,
 
 def emit(name: str, us: float, derived: str = "") -> None:
     print(f"{name},{us:.1f},{derived}")
+    _RESULTS.append({"name": name, "us_per_call": round(us, 1),
+                     "derived": derived})
+
+
+def reset_results() -> None:
+    _RESULTS.clear()
+
+
+def write_json(path: str) -> None:
+    """Dump everything emit()ed so far as a JSON artifact — the committed
+    CPU baseline (BENCH_group_agg.json) and the CI artifact both come from
+    this, so the perf trajectory accumulates in one schema."""
+    doc = {
+        "schema": 1,
+        "backend": jax.default_backend(),
+        "jax_version": jax.__version__,
+        "device_count": jax.device_count(),
+        "results": list(_RESULTS),
+    }
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2)
+        f.write("\n")

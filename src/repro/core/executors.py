@@ -262,6 +262,11 @@ def execute_agg_call(call: AggCall, catalog, env) -> Table:
 def grouped_agg_call(call: AggCall, catalog, env) -> Table:
     agg: CustomAggregate = call.aggregate
     t = _engine.execute(call.child, catalog, env)
+    # row-sharded input (Table.shard_rows): the fused path runs the kernel
+    # per shard and all-reduces moments; detect BEFORE the sort, on the
+    # columns the caller committed
+    from repro.launch.sharded_agg import row_sharded_mesh
+    shard_route = row_sharded_mesh(*t.columns.values(), t.valid)
     sort_keys = tuple(call.group_keys) + tuple(call.sort_keys)
     sort_desc = (False,) * len(call.group_keys) + tuple(
         call.sort_desc or (False,) * len(call.sort_keys))
@@ -296,7 +301,8 @@ def grouped_agg_call(call: AggCall, catalog, env) -> Table:
     if mode == "fused":
         out = _grouped_fused(agg, rows, outer_vals, m, seg, cap,
                              backend=_segagg_backend(),
-                             require_kernel=call.mode == "fused")
+                             require_kernel=call.mode == "fused",
+                             shard_route=shard_route)
     elif mode == "recognized":
         out = _grouped_recognized(agg, rows, outer_vals, m, seg, cap)
     else:
@@ -349,7 +355,7 @@ def _segagg_backend() -> str:
 
 
 def _grouped_fused(agg, rows, outer_vals, valid, seg, cap, backend="auto",
-                   require_kernel=False):
+                   require_kernel=False, shard_route=None):
     """Fused grouped aggregation: every recognized sum/min/max/arg-extremum
     update over a ≤32-bit floating field is batched into ONE fused
     segment-aggregate pass (each column carries its own guard mask, so
@@ -357,7 +363,10 @@ def _grouped_fused(agg, rows, outer_vals, valid, seg, cap, backend="auto",
     updates (prod/last, float64/integer fields) run on the jnp segment
     path in the same XLA program.  ``require_kernel`` (an explicit
     ``mode='fused'`` request) raises instead of silently running a
-    kernel-free pass when every update is dtype-routed to jnp."""
+    kernel-free pass when every update is dtype-routed to jnp.
+    ``shard_route`` = (mesh, axis) routes the kernel pass through
+    ``launch.sharded_agg.sharded_fused_segment_agg`` — one kernel launch
+    per row shard, moments all-reduced over the mesh axis."""
     from repro.kernels.segment_agg import fused_segment_agg
 
     col_env = dict(outer_vals)
@@ -408,10 +417,21 @@ def _grouped_fused(agg, rows, outer_vals, valid, seg, cap, backend="auto",
                 moments[c].add("min" if u.op in ("<", "<=") else "max")
             else:
                 moments[c].add(u.kind)
-        fused = fused_segment_agg(
-            jnp.stack(cols, axis=1), seg.astype(jnp.int32),
-            jnp.stack(masks, axis=1), cap, backend=backend,
-            moments=tuple(tuple(sorted(ms)) for ms in moments))
+        kernel_moments = tuple(tuple(sorted(ms)) for ms in moments)
+        # the grouped sort established the sorted-segs precondition by
+        # construction, so the band-pruned kernel skips its guard
+        if shard_route is not None:
+            from repro.launch.sharded_agg import sharded_fused_segment_agg
+            fused = sharded_fused_segment_agg(
+                jnp.stack(cols, axis=1), seg.astype(jnp.int32),
+                jnp.stack(masks, axis=1), cap, mesh=shard_route[0],
+                axis=shard_route[1], backend=backend,
+                moments=kernel_moments, assume_sorted=True)
+        else:
+            fused = fused_segment_agg(
+                jnp.stack(cols, axis=1), seg.astype(jnp.int32),
+                jnp.stack(masks, axis=1), cap, backend=backend,
+                moments=kernel_moments, assume_sorted=True)
         for u, c in zip(kernel_updates, upd_col):
             f = u.fields[0]
             d = jnp.asarray(outer_vals[f]).dtype

@@ -12,14 +12,28 @@ TPU adaptation (vs a CUDA scatter-atomic formulation): atomics are not the
 TPU model.  Instead each row-block materializes a one-hot membership mask
 (rows × segment-tile) in VMEM and reduces with broadcast/select ops on the
 VPU (8×128 lanes); partials accumulate into the output block, which stays
-resident in VMEM across the whole row-block grid (output revisiting).
-Rows are pre-sorted by segment, so the mask is band-structured and the
-working set is bounded by (BLOCK_ROWS × BLOCK_SEGS) — chosen by
-``default_block_segs`` to respect a VMEM budget.
+resident in VMEM across its whole visit run (output revisiting).  Rows are
+pre-sorted by segment, so the mask is band-structured and the working set
+is bounded by (BLOCK_ROWS × BLOCK_SEGS) — chosen by ``default_block_segs``
+to respect a VMEM budget at a 128-lane-aligned tile width.
 
-Grid: (num_seg_tiles, num_row_blocks) — row blocks iterate fastest so the
-output tile stays VMEM-resident while every row block streams past it.
-Block shapes:
+Band pruning (the default for the kernel backends): because rows are
+sorted, row block *i* only intersects the contiguous band of segment tiles
+``[min(segs_i) // BS, max(segs_i) // BS]``.  The grid is therefore NOT the
+``(seg_tiles × row_blocks)`` cross product: a compact 1-D grid of
+``row_blocks + seg_tiles - 1`` steps walks exactly the intersecting
+``(row_block, seg_tile)`` pairs, carried into the kernel via
+``pltpu.PrefetchScalarGridSpec`` step→block index maps (scalar prefetch,
+so the index maps themselves read them).  Both the row-block index and the
+segment-tile index are non-decreasing along the step sequence, so each
+input block is fetched once and each output tile is written once — grid
+cost O(row_blocks + seg_tiles) instead of O(row_blocks × seg_tiles).
+``pruned_grid_steps`` reports the executed-step count so tests and
+benchmarks can assert it.  Pruning requires the documented sorted-``segs``
+precondition; see ``fused_segment_agg``.
+
+Grid (unpruned fallback, ``prune=False``): (num_seg_tiles, num_row_blocks)
+with row blocks iterating fastest.  Block shapes in both layouts:
   vals  (BLOCK_ROWS, C)  f32          segs  (BLOCK_ROWS, 1) i32
   valid (BLOCK_ROWS, C)  i32
   out   (4*C, BLOCK_SEGS)  row layout [4*c + m] with m = sum,count,min,max
@@ -39,8 +53,10 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax import lax
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 NEG_INF = float("-inf")
 POS_INF = float("inf")
@@ -48,37 +64,52 @@ POS_INF = float("inf")
 #: index of each fused moment in the kernel output
 MOMENTS = ("sum", "count", "min", "max")
 
+#: TPU vector lane width — segment tiles are sized in multiples of it so
+#: the membership-mask reduce never issues ragged lanes
+LANE = 128
+
 
 def default_block_segs(num_segments: int, block_rows: int = 256,
                        vmem_budget_elems: int = 1 << 19) -> int:
-    """Largest segment-tile width whose (block_rows × tile) membership mask
-    stays under ``vmem_budget_elems`` f32 elements (default 2 MB)."""
-    bs = max(8, vmem_budget_elems // max(block_rows, 1))
-    return int(min(num_segments, bs))
+    """Largest 128-lane-aligned segment-tile width whose (block_rows × tile)
+    membership mask stays under ``vmem_budget_elems`` f32 elements (default
+    2 MB).  Invariants (asserted by tests): the result is a multiple of
+    ``LANE``; it never exceeds the segment range rounded up to a lane
+    multiple; and ``result * block_rows <= vmem_budget_elems`` whenever the
+    budget admits at least one lane group (the floor is one 128-lane tile —
+    narrower tiles would leave VPU lanes dead every cycle)."""
+    budget = (vmem_budget_elems // max(block_rows, 1)) // LANE * LANE
+    bs = max(LANE, budget)
+    need = -(-num_segments // LANE) * LANE
+    return int(min(need, bs))
 
 
-def _segment_agg_kernel(vals_ref, segs_ref, valid_ref, out_ref, *,
-                        block_segs: int, num_cols: int,
-                        moments: tuple[tuple[str, ...], ...]):
-    j = pl.program_id(0)          # segment tile (output stays resident)
-    i = pl.program_id(1)          # row block   (streams past the tile)
+# ---------------------------------------------------------------------------
+# Kernel bodies (shared between the pruned and unpruned grids)
+# ---------------------------------------------------------------------------
 
-    @pl.when(i == 0)
-    def _init():
-        for c in range(num_cols):
-            out_ref[4 * c + 0, :] = jnp.zeros((block_segs,), out_ref.dtype)
-            out_ref[4 * c + 1, :] = jnp.zeros((block_segs,), out_ref.dtype)
-            out_ref[4 * c + 2, :] = jnp.full((block_segs,), POS_INF,
-                                             out_ref.dtype)
-            out_ref[4 * c + 3, :] = jnp.full((block_segs,), NEG_INF,
-                                             out_ref.dtype)
 
+def _init_out(out_ref, num_cols: int, block_segs: int) -> None:
+    for c in range(num_cols):
+        out_ref[4 * c + 0, :] = jnp.zeros((block_segs,), out_ref.dtype)
+        out_ref[4 * c + 1, :] = jnp.zeros((block_segs,), out_ref.dtype)
+        out_ref[4 * c + 2, :] = jnp.full((block_segs,), POS_INF,
+                                         out_ref.dtype)
+        out_ref[4 * c + 3, :] = jnp.full((block_segs,), NEG_INF,
+                                         out_ref.dtype)
+
+
+def _accum_rows(vals_ref, segs_ref, valid_ref, out_ref, seg_tile, *,
+                block_segs: int, num_cols: int,
+                moments: tuple[tuple[str, ...], ...]) -> None:
+    """Accumulate one row block into the resident output tile ``seg_tile``
+    (a traced i32 scalar on the pruned grid, a grid index otherwise)."""
     vals = vals_ref[...].astype(out_ref.dtype)          # (R, C)
     segs = segs_ref[...]                                # (R, 1) int32
     ok = valid_ref[...] != 0                            # (R, C)
 
     r = vals.shape[0]
-    local = segs - j * block_segs                       # tile-relative ids
+    local = segs - seg_tile * block_segs                # tile-relative ids
     seg_iota = lax.broadcasted_iota(jnp.int32, (r, block_segs), 1)
     in_tile = local == seg_iota                         # (R, BS) band mask
 
@@ -102,6 +133,151 @@ def _segment_agg_kernel(vals_ref, segs_ref, valid_ref, out_ref, *,
                 jnp.max(jnp.where(member, vbc, NEG_INF), axis=0))
 
 
+def _segment_agg_kernel(vals_ref, segs_ref, valid_ref, out_ref, *,
+                        block_segs: int, num_cols: int,
+                        moments: tuple[tuple[str, ...], ...]):
+    """Unpruned cross-product grid: (seg_tiles, row_blocks), rows fastest
+    so the output tile stays VMEM-resident while every row block streams
+    past it."""
+    j = pl.program_id(0)          # segment tile (output stays resident)
+    i = pl.program_id(1)          # row block   (streams past the tile)
+
+    @pl.when(i == 0)
+    def _():
+        _init_out(out_ref, num_cols, block_segs)
+
+    _accum_rows(vals_ref, segs_ref, valid_ref, out_ref, j,
+                block_segs=block_segs, num_cols=num_cols, moments=moments)
+
+
+def _segment_agg_kernel_pruned(rowm_ref, tilem_ref, nsteps_ref,
+                               vals_ref, segs_ref, valid_ref, out_ref, *,
+                               block_segs: int, num_cols: int,
+                               moments: tuple[tuple[str, ...], ...]):
+    """Band-pruned 1-D grid: step ``s`` works on row block ``rowm[s]`` and
+    segment tile ``tilem[s]`` (scalar-prefetched maps; the BlockSpec index
+    maps read the same arrays, so only intersecting blocks are fetched).
+    Steps past ``nsteps`` are grid padding — they repeat the last real
+    (row_block, seg_tile) pair so no new DMA is issued, and the accumulate
+    is gated off."""
+    s = pl.program_id(0)
+    j = tilem_ref[s]
+    prev_j = tilem_ref[jnp.maximum(s - 1, 0)]
+
+    @pl.when((s == 0) | (j != prev_j))    # first visit of this output tile
+    def _():
+        _init_out(out_ref, num_cols, block_segs)
+
+    @pl.when(s < nsteps_ref[0])
+    def _():
+        _accum_rows(vals_ref, segs_ref, valid_ref, out_ref, j,
+                    block_segs=block_segs, num_cols=num_cols,
+                    moments=moments)
+
+
+# ---------------------------------------------------------------------------
+# Band computation (XLA-side, jit-safe) + host-side step accounting
+# ---------------------------------------------------------------------------
+
+
+def _band_maps(segs_flat: jax.Array, n_blocks: int, block_rows: int,
+               block_segs: int, num_seg_tiles: int, grid_len: int):
+    """Step→(row_block, seg_tile) maps for the pruned grid.
+
+    Per-row-block tile bands [min_t, max_t] are flattened into one step
+    sequence; for sorted input the bands are non-decreasing and overlap at
+    most at endpoints, so the total real step count is bounded by
+    ``n_blocks + num_seg_tiles - 1`` — the static ``grid_len``.  Steps
+    beyond the real count clamp to the last real pair."""
+    tiles = jnp.clip(segs_flat.reshape(n_blocks, block_rows) // block_segs,
+                     0, num_seg_tiles - 1).astype(jnp.int32)
+    min_t = jnp.min(tiles, axis=1)
+    max_t = jnp.max(tiles, axis=1)
+    spans = max_t - min_t + 1
+    offs = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                            jnp.cumsum(spans, dtype=jnp.int32)])
+    nsteps = offs[-1]
+    steps = jnp.arange(grid_len, dtype=jnp.int32)
+    blk = jnp.clip(jnp.searchsorted(offs, steps, side="right") - 1,
+                   0, n_blocks - 1).astype(jnp.int32)
+    tile = jnp.clip(min_t[blk] + steps - offs[blk], min_t[blk], max_t[blk])
+    return blk, tile.astype(jnp.int32), nsteps.astype(jnp.int32)
+
+
+def pruned_grid_steps(segs, num_segments: int, block_rows: int = 256,
+                      block_segs: int | None = None,
+                      vmem_budget_elems: int = 1 << 19) -> int:
+    """Executed-step count of the band-pruned kernel for concrete ``segs``
+    (host-side numpy): the sum over row blocks of each block's segment-tile
+    band span.  For sorted input this is at most
+    ``row_blocks + seg_tiles - 1`` (the static pruned grid length) — vs the
+    ``row_blocks × seg_tiles`` cross product of the unpruned grid (see
+    ``full_grid_steps``).  Tests and benchmarks assert against it."""
+    s = np.asarray(segs)
+    if block_segs is None:
+        block_segs = default_block_segs(num_segments, block_rows,
+                                        vmem_budget_elems)
+    pad = (-s.shape[0]) % block_rows
+    if pad:
+        # mirror _pad_rows: repeat the last real segment id so the final
+        # row block's band is not widened to the end of the range
+        last = s[-1] if s.shape[0] else 0
+        s = np.concatenate([s, np.full(pad, last, s.dtype)])
+    num_seg_tiles = -(-num_segments // block_segs)
+    tiles = np.clip(s.reshape(-1, block_rows) // block_segs,
+                    0, num_seg_tiles - 1)
+    return int(np.sum(tiles.max(axis=1) - tiles.min(axis=1) + 1))
+
+
+def full_grid_steps(n: int, num_segments: int, block_rows: int = 256,
+                    block_segs: int | None = None,
+                    vmem_budget_elems: int = 1 << 19) -> int:
+    """Step count of the unpruned (seg_tiles × row_blocks) grid."""
+    if block_segs is None:
+        block_segs = default_block_segs(num_segments, block_rows,
+                                        vmem_budget_elems)
+    n_blocks = -(-n // block_rows)
+    return n_blocks * -(-num_segments // block_segs)
+
+
+def _validate_sorted(segs, prune: bool, assume_sorted: bool,
+                     backend: str) -> bool:
+    """Shared sorted-``segs`` precondition check for the band-pruned kernel
+    paths (single-device and sharded).  Only kernel backends with pruning
+    active care — the jnp fallback and the unpruned grid are
+    order-independent.  Concrete unsorted input raises eagerly; returns
+    True when the caller still needs the traced runtime guard (NaN
+    poison), False when the precondition is established."""
+    if not prune or assume_sorted or backend not in ("pallas", "interpret"):
+        return False
+    if isinstance(segs, jax.core.Tracer):
+        return True
+    s_np = np.asarray(segs)
+    if s_np.size > 1 and np.any(s_np[1:] < s_np[:-1]):
+        raise ValueError(
+            "fused_segment_agg: band pruning requires `segs` sorted "
+            "ascending — sort rows by segment (the grouped executors do) "
+            "or pass prune=False")
+    return False
+
+
+def _pad_rows(vals, segs, valid, block: int):
+    """Pad the row dimension to a multiple of ``block``.  Pad rows are
+    invalid (they never contribute) and repeat the LAST real segment id,
+    which keeps ``segs`` monotone without widening the final row block's
+    tile band to the end of the segment range — padding with
+    ``num_segments`` would make the pruned grid walk every trailing tile."""
+    n = vals.shape[0]
+    pad = (-n) % block
+    if not pad:
+        return vals, segs, valid
+    vals = jnp.pad(vals, ((0, pad), (0, 0)))
+    last = segs[-1] if n else jnp.zeros((), segs.dtype)
+    segs = jnp.concatenate([segs, jnp.full((pad,), last, segs.dtype)])
+    valid = jnp.pad(valid, ((0, pad), (0, 0)))
+    return vals, segs, valid
+
+
 def _normalize(vals: jax.Array, valid: jax.Array) -> tuple[jax.Array, jax.Array]:
     """Lift (N,)/(N,C) vals and valid to matching (N, C)."""
     if vals.ndim == 1:
@@ -115,40 +291,86 @@ def _normalize(vals: jax.Array, valid: jax.Array) -> tuple[jax.Array, jax.Array]
 
 @functools.partial(jax.jit, static_argnames=("num_segments", "block_rows",
                                              "block_segs", "interpret",
-                                             "moments"))
+                                             "moments", "prune",
+                                             "check_sorted"))
 def _segment_agg_pallas(vals: jax.Array, segs: jax.Array, valid: jax.Array,
                         num_segments: int, block_rows: int,
                         block_segs: int, interpret: bool,
-                        moments: tuple[str, ...] = MOMENTS) -> jax.Array:
+                        moments: tuple[str, ...] = MOMENTS,
+                        prune: bool = True,
+                        check_sorted: bool = True) -> jax.Array:
     """(N, C) vals/valid → (C, 4, num_segments) f32 via the Pallas kernel."""
     n, num_cols = vals.shape
-    pad = (-n) % block_rows
-    if pad:
-        vals = jnp.pad(vals, ((0, pad), (0, 0)))
-        segs = jnp.pad(segs, (0, pad), constant_values=num_segments)
-        valid = jnp.pad(valid, ((0, pad), (0, 0)))
-    n_p = n + pad
+    vals, segs, valid = _pad_rows(vals, segs, valid, block_rows)
+    n_p = vals.shape[0]
     segs2 = segs.astype(jnp.int32).reshape(n_p, 1)
     valid2 = valid.astype(jnp.int32)
     vals2 = vals.astype(jnp.float32)
 
     num_seg_tiles = -(-num_segments // block_segs)
     s_pad = num_seg_tiles * block_segs
-    grid = (num_seg_tiles, n_p // block_rows)
-    out = pl.pallas_call(
-        functools.partial(_segment_agg_kernel, block_segs=block_segs,
-                          num_cols=num_cols, moments=moments),
-        out_shape=jax.ShapeDtypeStruct((4 * num_cols, s_pad), jnp.float32),
-        grid=grid,
+    n_blocks = n_p // block_rows
+    if num_seg_tiles == 1:
+        prune = False       # single tile: the cross product IS the row walk
+    out_shape = jax.ShapeDtypeStruct((4 * num_cols, s_pad), jnp.float32)
+
+    if not prune:
+        out = pl.pallas_call(
+            functools.partial(_segment_agg_kernel, block_segs=block_segs,
+                              num_cols=num_cols, moments=moments),
+            out_shape=out_shape,
+            grid=(num_seg_tiles, n_blocks),
+            in_specs=[
+                pl.BlockSpec((block_rows, num_cols), lambda j, i: (i, 0)),
+                pl.BlockSpec((block_rows, 1), lambda j, i: (i, 0)),
+                pl.BlockSpec((block_rows, num_cols), lambda j, i: (i, 0)),
+            ],
+            out_specs=pl.BlockSpec((4 * num_cols, block_segs),
+                                   lambda j, i: (0, j)),
+            interpret=interpret,
+        )(vals2, segs2, valid2)
+        return out[:, :num_segments].reshape(num_cols, 4, num_segments)
+
+    grid_len = n_blocks + num_seg_tiles - 1
+    rowm, tilem, nsteps = _band_maps(segs.astype(jnp.int32), n_blocks,
+                                     block_rows, block_segs, num_seg_tiles,
+                                     grid_len)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(grid_len,),
         in_specs=[
-            pl.BlockSpec((block_rows, num_cols), lambda j, i: (i, 0)),
-            pl.BlockSpec((block_rows, 1), lambda j, i: (i, 0)),
-            pl.BlockSpec((block_rows, num_cols), lambda j, i: (i, 0)),
+            pl.BlockSpec((block_rows, num_cols),
+                         lambda s, rm, tm, ns: (rm[s], 0)),
+            pl.BlockSpec((block_rows, 1),
+                         lambda s, rm, tm, ns: (rm[s], 0)),
+            pl.BlockSpec((block_rows, num_cols),
+                         lambda s, rm, tm, ns: (rm[s], 0)),
         ],
         out_specs=pl.BlockSpec((4 * num_cols, block_segs),
-                               lambda j, i: (0, j)),
+                               lambda s, rm, tm, ns: (0, tm[s])),
+    )
+    out = pl.pallas_call(
+        functools.partial(_segment_agg_kernel_pruned, block_segs=block_segs,
+                          num_cols=num_cols, moments=moments),
+        out_shape=out_shape,
+        grid_spec=grid_spec,
         interpret=interpret,
-    )(vals2, segs2, valid2)
+    )(rowm, tilem, nsteps.reshape(1), vals2, segs2, valid2)
+
+    # tiles no row-block band touches were never visited: their blocks hold
+    # uninitialized memory, so fill them with the moment identities
+    visited = jnp.zeros((num_seg_tiles,), bool).at[tilem].set(True)
+    fill = jnp.tile(jnp.array([0.0, 0.0, POS_INF, NEG_INF], jnp.float32),
+                    num_cols)
+    out = jnp.where(jnp.repeat(visited, block_segs)[None, :], out,
+                    fill[:, None])
+
+    if check_sorted:
+        # pruning is only meaning-preserving on sorted segs; poison (rather
+        # than silently mis-aggregate) when the precondition is violated
+        # under tracing, where the eager check could not run
+        is_sorted = jnp.all(segs[1:] >= segs[:-1]) if n_p > 1 else True
+        out = jnp.where(is_sorted, out, jnp.float32(jnp.nan))
     return out[:, :num_segments].reshape(num_cols, 4, num_segments)
 
 
@@ -197,7 +419,9 @@ def fused_segment_agg(vals: jax.Array, segs: jax.Array, valid: jax.Array,
                       num_segments: int, *, block_rows: int = 256,
                       block_segs: int | None = None,
                       backend: str = "auto",
-                      moments: tuple[str, ...] = MOMENTS) -> jax.Array:
+                      moments: tuple[str, ...] = MOMENTS,
+                      prune: bool = True,
+                      assume_sorted: bool = False) -> jax.Array:
     """Fused multi-column segmented aggregation.
 
     ``vals``  (N,) or (N, C) — C value columns over the same row stream.
@@ -206,6 +430,16 @@ def fused_segment_agg(vals: jax.Array, segs: jax.Array, valid: jax.Array,
     ``moments`` restricts which of [sum, count, min, max] are computed —
     either one tuple of moment names applied to every column, or a
     per-column tuple of tuples.  Skipped rows hold their init identity.
+
+    ``prune`` (kernel backends only) enables band pruning: the compact
+    O(row_blocks + seg_tiles) grid over exactly the (row_block, seg_tile)
+    pairs whose bands intersect, instead of the full cross product.
+    Pruning relies on the sorted-``segs`` precondition, which is
+    *validated*, not assumed: concrete unsorted input raises ``ValueError``
+    eagerly; traced input gets an O(N) runtime monotonicity guard that
+    poisons the output with NaN on violation.  Callers that establish the
+    order by construction (the grouped executors sort first) pass
+    ``assume_sorted=True`` to skip both checks.
 
     Returns (C, 4, num_segments) f32 with moment rows [sum, count, min,
     max]; empty segments read [0, 0, +inf, -inf].
@@ -228,10 +462,12 @@ def fused_segment_agg(vals: jax.Array, segs: jax.Array, valid: jax.Array,
         raise ValueError(f"unknown segment_agg backend {backend!r}")
     if block_segs is None:
         block_segs = default_block_segs(num_segments, block_rows)
+    check_sorted = _validate_sorted(segs, prune, assume_sorted, backend)
     return _segment_agg_pallas(vals, jnp.asarray(segs), valid, num_segments,
                                block_rows, int(block_segs),
                                interpret=backend == "interpret",
-                               moments=moments)
+                               moments=moments, prune=prune,
+                               check_sorted=check_sorted)
 
 
 def segment_agg(vals: jax.Array, segs: jax.Array, valid: jax.Array,

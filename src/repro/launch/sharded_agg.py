@@ -1,0 +1,160 @@
+"""Mesh-sharded fused segmented aggregation: the distributed grouped hot path.
+
+``core.aggregate.shard_merge`` already merges partial aggregate states over
+ICI, and the fused segment-aggregate kernel's per-segment moments are
+exactly such mergeable state: sum and count rows add across shards, min and
+max rows extremize.  ``sharded_fused_segment_agg`` therefore runs the
+kernel once per *row shard* under ``shard_map`` and all-reduces the
+(C, 4, num_segments) moment tensor — ``lax.psum`` on the sum/count rows,
+``lax.pmin``/``lax.pmax`` on the min/max rows.  That is the same algebra
+``shard_merge`` left-folds, expressed as native collectives so XLA
+schedules one fused all-reduce per moment row instead of an all-gather
+plus a sequential fold (``moment_merge_aggregate`` exposes the fold form
+so tests can pin the two against each other).
+
+Routing is transparent: ``row_sharded_mesh`` detects concrete arrays that
+carry a ``NamedSharding`` split over more than one device along dim 0, and
+the grouped executors (``core/executors.py`` grouped ``AggCall`` dispatch,
+``relational/engine.py`` ``GroupAgg``) send such tables through the
+sharded entry with no caller changes — ``Table.shard_rows(mesh, axis)`` is
+all a caller does.  Under tracing, arrays carry no committed sharding, so
+jitted callers keep the single-device kernel (XLA's partitioner still
+shards the surrounding program).  ``REPRO_SEGAGG_SHARDED=off`` disables
+routing.
+
+Rows arrive sorted by segment (the grouped executors sort to derive
+segment ids), so every contiguous row shard is itself sorted — the band
+pruning of ``kernels/segment_agg.py`` applies per shard, and each shard's
+pruned grid only walks the segment tiles its band actually touches.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.core.aggregate import Aggregate
+from repro.kernels.segment_agg import (MOMENTS, NEG_INF, POS_INF,
+                                       _normalize, _pad_rows,
+                                       _validate_sorted, fused_segment_agg)
+
+
+def row_sharded_mesh(*arrays) -> Optional[tuple[Mesh, str]]:
+    """(mesh, axis) when any array carries a NamedSharding split over >1
+    device along dim 0; None for tracers, replicated arrays, composite row
+    axes, or when ``REPRO_SEGAGG_SHARDED=off``."""
+    if os.environ.get("REPRO_SEGAGG_SHARDED") == "off":
+        return None
+    for a in arrays:
+        if a is None or isinstance(a, jax.core.Tracer):
+            continue
+        sh = getattr(a, "sharding", None)
+        if not isinstance(sh, NamedSharding):
+            continue
+        spec = tuple(sh.spec)
+        if not spec or spec[0] is None:
+            continue
+        ax = spec[0]
+        if isinstance(ax, tuple):
+            if len(ax) != 1:
+                continue
+            ax = ax[0]
+        if sh.mesh.shape[ax] > 1:
+            return sh.mesh, ax
+    return None
+
+
+def _merge_moments(local: jax.Array, axis_name: str) -> jax.Array:
+    """Cross-shard merge of a (C, 4, S) moment tensor: the shard_merge
+    algebra (sum/count add, min/max extremize) as native collectives."""
+    s = lax.psum(local[:, 0], axis_name)
+    c = lax.psum(local[:, 1], axis_name)
+    mn = lax.pmin(local[:, 2], axis_name)
+    mx = lax.pmax(local[:, 3], axis_name)
+    return jnp.stack([s, c, mn, mx], axis=1)
+
+
+def moment_merge_aggregate(num_cols: int, num_segments: int) -> Aggregate:
+    """The (C, 4, S) moment tensor as a ``core.aggregate.Aggregate`` whose
+    state is the tensor itself: ``merge`` adds the sum/count rows and
+    extremizes the min/max rows.  ``shard_merge(moment_merge_aggregate(...),
+    local, axis)`` computes exactly what ``_merge_moments`` computes with
+    collectives — tests pin the two against each other."""
+    def identity():
+        return jnp.stack(
+            [jnp.zeros((num_cols, num_segments), jnp.float32),
+             jnp.zeros((num_cols, num_segments), jnp.float32),
+             jnp.full((num_cols, num_segments), POS_INF, jnp.float32),
+             jnp.full((num_cols, num_segments), NEG_INF, jnp.float32)],
+            axis=1)
+
+    def merge(a, b):
+        return jnp.stack([a[:, 0] + b[:, 0], a[:, 1] + b[:, 1],
+                          jnp.minimum(a[:, 2], b[:, 2]),
+                          jnp.maximum(a[:, 3], b[:, 3])], axis=1)
+
+    return Aggregate("segagg_moments", init=identity, accumulate=merge,
+                     terminate=lambda st: st, merge=merge,
+                     identity=identity)
+
+
+def sharded_fused_segment_agg(vals: jax.Array, segs: jax.Array,
+                              valid: jax.Array, num_segments: int, *,
+                              mesh: Mesh, axis: str = "data",
+                              backend: str = "auto", block_rows: int = 256,
+                              block_segs: int | None = None,
+                              moments=MOMENTS, prune: bool = True,
+                              assume_sorted: bool = False) -> jax.Array:
+    """Row-sharded fused segmented aggregation over ``mesh.shape[axis]``
+    devices: each shard runs ``fused_segment_agg`` on its contiguous row
+    slice (full segment range), then the (C, 4, num_segments) moment
+    tensors merge with one all-reduce per moment row.  Same signature and
+    result as ``fused_segment_agg`` (empty segments read
+    [0, 0, +inf, -inf]); rows are padded to a multiple of the shard count
+    with invalid rows repeating the last real segment id, so empty shards
+    contribute identities and the per-shard pruned grids stay narrow.
+
+    Exactness: counts and min/max match the single-device kernel
+    bit-for-bit; per-segment f32 sums are associativity-reordered across
+    shard boundaries, so they are bitwise-equal when the addends are
+    exactly representable (integer-valued data, the tests' parity case)
+    and within normal f32 rounding otherwise."""
+    vals, valid = _normalize(jnp.asarray(vals), jnp.asarray(valid))
+    segs = jnp.asarray(segs).astype(jnp.int32)
+    nshards = mesh.shape[axis]
+
+    # the sorted precondition only matters where band pruning runs — the
+    # per-shard kernel backends; the jnp fallback is order-independent
+    resolved = backend
+    if resolved == "auto":
+        resolved = "pallas" if jax.default_backend() == "tpu" else "jnp"
+    check_runtime = _validate_sorted(segs, prune, assume_sorted, resolved)
+
+    vals, segs, valid = _pad_rows(vals, segs, valid, nshards)
+    sh = NamedSharding(mesh, P(axis))
+    vals = jax.device_put(vals.astype(jnp.float32), sh)
+    segs = jax.device_put(segs, sh)
+    valid = jax.device_put(valid, sh)
+
+    def local(v, s, g):
+        out = fused_segment_agg(v, s, g, num_segments,
+                                block_rows=block_rows,
+                                block_segs=block_segs, backend=backend,
+                                moments=moments, prune=prune,
+                                assume_sorted=True)
+        return _merge_moments(out, axis)
+
+    out = shard_map(local, mesh=mesh,
+                    in_specs=(P(axis), P(axis), P(axis)),
+                    out_specs=P(), check_rep=False)(vals, segs, valid)
+    if check_runtime:
+        is_sorted = (jnp.all(segs[1:] >= segs[:-1])
+                     if segs.shape[0] > 1 else jnp.bool_(True))
+        out = jnp.where(is_sorted, out, jnp.float32(jnp.nan))
+    return out

@@ -184,21 +184,30 @@ _FUSED_OPS = ("sum", "min", "max", "count", "mean")
 
 
 def _groupagg_fused_backend() -> Optional[str]:
-    """Backend for the fused GroupAgg path, or None for per-op jnp segment
-    ops.  Default: the compiled kernel on TPU (one HBM pass for all
+    """Backend for the fused GroupAgg path: None for per-op jnp segment
+    ops, "off" for an explicit kill switch (also disables sharded
+    routing).  Default: the compiled kernel on TPU (one HBM pass for all
     moments), per-op jnp elsewhere.  REPRO_GROUPAGG_FUSED ∈ {pallas,
     interpret, jnp, off} overrides (tests use 'interpret')."""
     import os
     env = os.environ.get("REPRO_GROUPAGG_FUSED")
-    if env in ("pallas", "interpret", "jnp"):
+    if env in ("pallas", "interpret", "jnp", "off"):
         return env
-    if env == "off":
-        return None
     return "pallas" if jax.default_backend() == "tpu" else None
 
 
 def _group_agg(t: Table, keys: tuple[str, ...],
                aggs: tuple[tuple[str, str, Optional[str]], ...]) -> Table:
+    backend = _groupagg_fused_backend()
+    # a row-sharded input table (Table.shard_rows) routes the fused pass
+    # through the mesh — one kernel launch per row shard, moments
+    # all-reduced; detect on the caller-committed columns, pre-sort
+    shard_route = None
+    if backend != "off":
+        from repro.launch.sharded_agg import row_sharded_mesh
+        shard_route = row_sharded_mesh(*t.columns.values(), t.valid)
+        if backend is None and shard_route is not None:
+            backend = "auto"    # distributed beats per-op even off-TPU
     st, seg, starts = segment_ids_for(t, keys)
     cap = st.capacity
     m = st.mask()
@@ -211,8 +220,6 @@ def _group_agg(t: Table, keys: tuple[str, ...],
     first_of_seg = jax.ops.segment_min(first_idx, seg, num_segments=cap)
     for k in keys:
         cols[k] = jnp.take(st.columns[k], jnp.clip(first_of_seg, 0, cap - 1))
-
-    backend = _groupagg_fused_backend()
 
     def _fusable(op, col):
         # kernel accumulates in f32: float64 columns keep the exact per-op
@@ -227,10 +234,11 @@ def _group_agg(t: Table, keys: tuple[str, ...],
         d = st.columns[col].dtype
         return jnp.issubdtype(d, jnp.floating) and jnp.dtype(d).itemsize <= 4
 
-    fused_aggs = [] if backend is None else [
+    fused_aggs = [] if backend in (None, "off") else [
         (out, op, col) for out, op, col in aggs if _fusable(op, col)]
     if fused_aggs:
-        cols.update(_group_agg_fused(st, seg, m, cap, fused_aggs, backend))
+        cols.update(_group_agg_fused(st, seg, m, cap, fused_aggs, backend,
+                                     shard_route=shard_route))
         aggs = tuple(a for a in aggs if a not in fused_aggs)
 
     for out, op, col in aggs:
@@ -256,11 +264,14 @@ def _group_agg(t: Table, keys: tuple[str, ...],
 
 
 def _group_agg_fused(st: Table, seg: jax.Array, m: jax.Array, cap: int,
-                     fused_aggs, backend: str) -> dict[str, jax.Array]:
+                     fused_aggs, backend: str,
+                     shard_route=None) -> dict[str, jax.Array]:
     """Serve sum/count/min/max/mean GroupAgg ops from ONE fused
     segment-aggregate pass: each distinct value column is one kernel
     column; all four moments come back together, so e.g. (sum, count,
-    mean, min) over one column costs a single HBM traversal."""
+    mean, min) over one column costs a single HBM traversal.
+    ``shard_route`` = (mesh, axis): the pass runs per row shard with a
+    cross-device moment merge (launch/sharded_agg.py)."""
     from repro.kernels.segment_agg import fused_segment_agg
 
     value_cols = list(dict.fromkeys(
@@ -277,10 +288,20 @@ def _group_agg_fused(st: Table, seg: jax.Array, m: jax.Array, cap: int,
         i = col_idx.get(col, 0)   # count (col=None) rides on column 0
         moments[i].update({"mean": ("sum", "count"),
                            "count": ("count",)}.get(op, (op,)))
-    fused = fused_segment_agg(vals, seg.astype(jnp.int32), m[:, None], cap,
-                              backend=backend,
-                              moments=tuple(tuple(sorted(ms))
-                                            for ms in moments))
+    kernel_moments = tuple(tuple(sorted(ms)) for ms in moments)
+    # segment_ids_for sorted the rows, so the band-pruned kernel may
+    # assume the sorted-segs precondition
+    if shard_route is not None:
+        from repro.launch.sharded_agg import sharded_fused_segment_agg
+        fused = sharded_fused_segment_agg(
+            vals, seg.astype(jnp.int32), m[:, None], cap,
+            mesh=shard_route[0], axis=shard_route[1], backend=backend,
+            moments=kernel_moments, assume_sorted=True)
+    else:
+        fused = fused_segment_agg(vals, seg.astype(jnp.int32), m[:, None],
+                                  cap, backend=backend,
+                                  moments=kernel_moments,
+                                  assume_sorted=True)
 
     out: dict[str, jax.Array] = {}
     count = fused[0, 1]

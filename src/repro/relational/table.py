@@ -106,6 +106,18 @@ class Table:
         cols = {k: v[:n] for k, v in c.columns.items()}
         return Table(cols, c.mask()[:n])
 
+    def shard_rows(self, mesh, axis: str = "data") -> "Table":
+        """Commit every column (and the validity mask) to a row sharding —
+        ``PartitionSpec(axis)`` on dim 0 — over ``mesh``.  The grouped
+        fused-aggregation path (``GroupAgg`` and grouped ``AggCall``)
+        detects the committed sharding and runs the segment-aggregate
+        kernel per row shard with a cross-device moment merge
+        (``launch/sharded_agg.py``) — no other caller changes needed."""
+        from jax.sharding import NamedSharding, PartitionSpec
+        sh = NamedSharding(mesh, PartitionSpec(axis))
+        cols = {k: jax.device_put(v, sh) for k, v in self.columns.items()}
+        return Table(cols, jax.device_put(self.mask(), sh))
+
     def materialize(self) -> "Table":
         """Force device materialization — models the cursor temp table."""
         cols = {k: jax.block_until_ready(jnp.asarray(v)) for k, v in self.columns.items()}

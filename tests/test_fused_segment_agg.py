@@ -1,14 +1,20 @@
 """The fused grouped execution path (``mode='fused'``).
 
-Three layers under test, all in Pallas interpret mode so CI needs no TPU:
+Four layers under test, all in Pallas interpret mode so CI needs no TPU:
 
 1. the multi-column, segment-tiled kernel vs the pure-jnp oracle;
-2. grouped ``AggCall`` parity: ``mode='fused'`` must equal ``mode='stream'``
+2. band pruning: the compact O(row_blocks + seg_tiles) grid executes the
+   step count ``pruned_grid_steps`` predicts (ISSUE 2 acceptance bound on
+   the sorted N=200k / S=8192 workload), matches the unpruned
+   cross-product grid bit-for-bit, and validates the sorted-``segs``
+   precondition instead of silently mis-aggregating;
+3. grouped ``AggCall`` parity: ``mode='fused'`` must equal ``mode='stream'``
    (the sequential per-group semantics) on TPC-H-style grouped loops,
    including empty contributions, single-row segments, and segment counts
    exceeding one kernel tile;
-3. the engine's built-in ``GroupAgg`` served from the fused kernel.
+4. the engine's built-in ``GroupAgg`` served from the fused kernel.
 """
+import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -18,8 +24,9 @@ from repro.core import (Assign, BinOp, Col, Const, CursorLoop, If, Program,
                         run_rewritten)
 from repro.core.executors import _resolve_grouped_mode
 from repro.kernels import ref
-from repro.kernels.segment_agg import (default_block_segs, fused_segment_agg,
-                                       segment_agg)
+from repro.kernels.segment_agg import (LANE, default_block_segs,
+                                       full_grid_steps, fused_segment_agg,
+                                       pruned_grid_steps, segment_agg)
 from repro.relational import GroupAgg, Scan, Table, execute
 from repro.relational.plan import AggCall, Filter
 
@@ -92,15 +99,149 @@ def test_legacy_single_column_api_unchanged():
     assert np.isinf(float(got[2, 2]))
 
 
-def test_default_block_segs_bounds_vmem():
-    assert default_block_segs(10, 256) == 10          # never exceeds range
+def test_default_block_segs_alignment_and_budget():
+    """Satellite invariants: every tile width is a multiple of the 128-lane
+    VPU width (no ragged membership-mask reduces), at least one lane tile,
+    at most the segment range rounded up to a lane multiple, and within
+    the VMEM budget whenever the budget admits one lane group."""
+    for nseg in (1, 10, 100, 512, 8192, 1 << 20):
+        for br in (8, 128, 256, 1024, 4096):
+            bs = default_block_segs(nseg, br)
+            assert bs % LANE == 0
+            assert bs >= LANE
+            assert bs <= -(-nseg // LANE) * LANE      # lane-rounded range cap
     bs = default_block_segs(1 << 20, 256)
     assert bs * 256 <= 1 << 19                        # mask fits the budget
-    assert default_block_segs(1 << 20, 4096) >= 8
+    assert default_block_segs(1 << 20, 4096) == LANE  # budget floor: 1 lane tile
+    assert default_block_segs(10, 256) == LANE        # small ranges pad up
 
 
 # --------------------------------------------------------------------------
-# 2. grouped AggCall: fused == stream on TPC-H-style loops
+# 2. band pruning: executed steps, parity, sorted-precondition guard
+# --------------------------------------------------------------------------
+
+
+def _sorted_workload(n, nseg, ncols=1, seed=2):
+    rng = np.random.default_rng(seed)
+    segs = np.sort(rng.integers(0, nseg, n)).astype(np.int32)
+    vals = rng.uniform(-10, 10, (n, ncols)).astype(np.float32)
+    valid = rng.random((n, ncols)) < 0.9
+    return segs, vals, valid
+
+
+def test_pruned_vs_unpruned_and_oracle_parity():
+    """The pruned grid visits every intersecting (row_block, seg_tile)
+    pair in the same order the cross-product grid does — same arithmetic,
+    bit-identical output — while executing far fewer steps."""
+    segs, vals, valid = _sorted_workload(5000, 600, ncols=3)
+    kw = dict(block_rows=128, block_segs=128, backend="interpret")
+    pr = fused_segment_agg(jnp.asarray(vals), jnp.asarray(segs),
+                           jnp.asarray(valid), 600, **kw)
+    un = fused_segment_agg(jnp.asarray(vals), jnp.asarray(segs),
+                           jnp.asarray(valid), 600, prune=False, **kw)
+    want = ref.fused_segment_agg_ref(jnp.asarray(vals), jnp.asarray(segs),
+                                     jnp.asarray(valid), 600)
+    assert np.array_equal(np.asarray(pr), np.asarray(un))
+    np.testing.assert_allclose(np.asarray(pr), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+    executed = pruned_grid_steps(segs, 600, 128, 128)
+    full = full_grid_steps(5000, 600, 128, 128)
+    assert executed <= (5000 // 128 + 1) + 2 * (600 // 128 + 1)
+    assert executed * 3 < full
+
+
+def test_pruned_grid_steps_acceptance_200k():
+    """ISSUE 2 acceptance: a sorted N=200k / S=8192 workload executes at
+    most row_blocks + 2·seg_tiles grid steps — vs the row_blocks ×
+    seg_tiles cross product the unpruned grid walks."""
+    n, nseg = 200_000, 8192
+    rng = np.random.default_rng(42)
+    segs = np.sort(rng.integers(0, nseg, n)).astype(np.int32)
+    bs = default_block_segs(nseg, 256)
+    row_blocks = -(-n // 256)
+    seg_tiles = -(-nseg // bs)
+    executed = pruned_grid_steps(segs, nseg, 256)
+    assert executed <= row_blocks + 2 * seg_tiles
+    assert full_grid_steps(n, nseg, 256) == row_blocks * seg_tiles
+    assert executed * 3 < full_grid_steps(n, nseg, 256)
+
+
+def test_pruned_interpret_parity_200k():
+    """Acceptance workload under the interpreter: the band-pruned kernel
+    == the unpruned kernel == the jnp oracle on N=200k / S=8192."""
+    n, nseg = 200_000, 8192
+    rng = np.random.default_rng(42)
+    segs = jnp.asarray(np.sort(rng.integers(0, nseg, n)).astype(np.int32))
+    vals = jnp.asarray(rng.uniform(-10, 10, n).astype(np.float32))
+    valid = jnp.ones(n, bool)
+    pr = fused_segment_agg(vals, segs, valid, nseg, backend="interpret")
+    un = fused_segment_agg(vals, segs, valid, nseg, backend="interpret",
+                           prune=False)
+    want = fused_segment_agg(vals, segs, valid, nseg, backend="jnp")
+    assert np.array_equal(np.asarray(pr), np.asarray(un))
+    np.testing.assert_allclose(np.asarray(pr), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_pruned_unvisited_tiles_hold_identities():
+    """Sparse segment use (all rows in segment 0 of a wide range): the
+    pruned grid never visits most output tiles, which must still read the
+    moment identities [0, 0, +inf, -inf], not uninitialized memory."""
+    n, nseg = 256, 600
+    vals = jnp.ones((n, 1), jnp.float32)
+    segs = jnp.zeros(n, jnp.int32)
+    out = np.asarray(fused_segment_agg(vals, segs, jnp.ones((n, 1), bool),
+                                       nseg, backend="interpret",
+                                       block_rows=128, block_segs=128))
+    assert out[0, 0, 0] == n and out[0, 1, 0] == n
+    assert np.all(out[0, 0, 1:] == 0) and np.all(out[0, 1, 1:] == 0)
+    assert np.all(np.isposinf(out[0, 2, 1:]))
+    assert np.all(np.isneginf(out[0, 3, 1:]))
+
+
+def test_pruning_validates_sorted_precondition():
+    """Unsorted segs under pruning: concrete input raises eagerly; traced
+    input poisons the output with NaN (never a silently wrong aggregate);
+    prune=False remains order-independent."""
+    segs, vals, valid = _sorted_workload(400, 50)
+    bad = segs[::-1].copy()
+    kw = dict(block_rows=64, block_segs=16, backend="interpret")
+    with pytest.raises(ValueError, match="sorted"):
+        fused_segment_agg(jnp.asarray(vals), jnp.asarray(bad),
+                          jnp.asarray(valid), 50, **kw)
+    un = fused_segment_agg(jnp.asarray(vals), jnp.asarray(bad),
+                           jnp.asarray(valid), 50, prune=False, **kw)
+    want_bad = ref.fused_segment_agg_ref(jnp.asarray(vals),
+                                         jnp.asarray(bad),
+                                         jnp.asarray(valid), 50)
+    np.testing.assert_allclose(np.asarray(un), np.asarray(want_bad),
+                               rtol=1e-5, atol=1e-5)
+
+    f = jax.jit(lambda s: fused_segment_agg(
+        jnp.asarray(vals), s, jnp.asarray(valid), 50, **kw))
+    assert np.all(np.isnan(np.asarray(f(jnp.asarray(bad)))))
+    want = ref.fused_segment_agg_ref(jnp.asarray(vals), jnp.asarray(segs),
+                                     jnp.asarray(valid), 50)
+    np.testing.assert_allclose(np.asarray(f(jnp.asarray(segs))),
+                               np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_assume_sorted_skips_guard():
+    """Callers that sort by construction (the grouped executors) skip both
+    the eager check and the traced NaN guard."""
+    segs, vals, valid = _sorted_workload(300, 40)
+    out = fused_segment_agg(jnp.asarray(vals), jnp.asarray(segs),
+                            jnp.asarray(valid), 40, backend="interpret",
+                            block_rows=64, block_segs=16,
+                            assume_sorted=True)
+    want = ref.fused_segment_agg_ref(jnp.asarray(vals), jnp.asarray(segs),
+                                     jnp.asarray(valid), 40)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+# --------------------------------------------------------------------------
+# 3. grouped AggCall: fused == stream on TPC-H-style loops
 # --------------------------------------------------------------------------
 
 
@@ -251,8 +392,18 @@ def test_grouped_fused_segments_exceed_one_tile(monkeypatch):
                            _catalog(n=700, nparts=90, seed=11))
 
 
+def test_fused_stream_parity_acceptance_workload(monkeypatch):
+    """Acceptance workload at the engine level: grouped AggCall over 200k
+    rows / 8192 groups, fused (band-pruned interpret kernel) == stream
+    (the sequential segmented scan)."""
+    monkeypatch.setenv("REPRO_SEGAGG_BACKEND", "interpret")
+    env = {"tot": jnp.float32(0.0), "cnt": jnp.float32(0.0)}
+    _assert_grouped_parity(_sum_count_prog(), env,
+                           _catalog(n=200_000, nparts=8192, seed=13))
+
+
 # --------------------------------------------------------------------------
-# 3. mode selection + ungrouped fused + engine GroupAgg
+# 4. mode selection + ungrouped fused + engine GroupAgg
 # --------------------------------------------------------------------------
 
 
