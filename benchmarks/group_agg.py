@@ -20,6 +20,12 @@ as:
 
 Rows/sec derives from the input row count; ``derived`` also reports the
 speedup of each mode over the stream baseline.
+
+The ``groupagg_dense_bound_*`` rows account for the dense group bound
+(relational/group_bound.py): launched kernel-grid steps and
+moment-tensor bytes with ``max_groups`` declared vs the legacy
+capacity-sized segment range — CI asserts the bounded variant stays
+smaller on both axes.
 """
 from __future__ import annotations
 
@@ -117,11 +123,15 @@ def run(n: int = 50_000, ngroups: int = 512, repeats: int = 3,
     small_cat = _catalog(interpret_rows, max(8, ngroups // 8), seed=1)
 
     # band pruning: executed vs cross-product grid steps for this workload
-    # (the grouped executor uses the table capacity as the static segment
-    # bound, so the unpruned grid walks n-capacity many segment tiles)
+    # (without a declared bound the grouped executor uses the table
+    # capacity as the static segment range, so the unpruned grid walks
+    # n-capacity many segment tiles)
     from repro.kernels.segment_agg import (default_block_segs,
                                            full_grid_steps,
+                                           launched_grid_steps,
+                                           moment_tensor_bytes,
                                            pruned_grid_steps)
+    from repro.relational.group_bound import resolve_group_bound
     keys = np.asarray(cat["PARTSUPP"].columns["ps_partkey"])
     segs = np.cumsum(np.concatenate([[1], keys[1:] != keys[:-1]])) - 1
     pruned = pruned_grid_steps(segs, n)
@@ -130,6 +140,21 @@ def run(n: int = 50_000, ngroups: int = 512, repeats: int = 3,
     emit("groupagg_grid_steps", 0.0,
          f"pruned={pruned}_full={full}_reduction={full / pruned:.1f}x_"
          f"block_segs={bs}")
+
+    # dense group bound: declaring max_groups=ngroups sizes the segment
+    # range (bucket + overflow slot) by the group count instead of the
+    # row capacity — smaller launched grid AND smaller moment tensor /
+    # all-reduce payload (CI asserts both stay smaller than the
+    # capacity-sized variant)
+    s_bounded, _ = resolve_group_bound(ngroups, n)
+    emit("groupagg_dense_bound_grid_steps", 0.0,
+         f"bounded={launched_grid_steps(n, s_bounded)}_"
+         f"capacity={launched_grid_steps(n, n)}_"
+         f"num_segments={s_bounded}")
+    emit("groupagg_dense_bound_moment_bytes", 0.0,
+         f"bounded={moment_tensor_bytes(1, s_bounded)}_"
+         f"capacity={moment_tensor_bytes(1, n)}_"
+         f"max_groups={ngroups}")
 
     for name, (prog, env) in _programs().items():
         us_stream = _run_mode(_grouped(prog, "stream"), cat, env,
@@ -172,6 +197,11 @@ def run(n: int = 50_000, ngroups: int = 512, repeats: int = 3,
         os.environ["REPRO_GROUPAGG_FUSED"] = "pallas" if on_tpu else "jnp"
         fn2 = jax.jit(lambda: execute(plan, cat))
         us_on = time_fn(lambda: fn2().columns, repeats=repeats, warmup=1)
+        plan_b = GroupAgg(plan.child, plan.keys, plan.aggs,
+                          max_groups=ngroups)
+        fn3 = jax.jit(lambda: execute(plan_b, cat))
+        us_bounded = time_fn(lambda: fn3().columns, repeats=repeats,
+                             warmup=1)
     finally:
         if prev is None:
             os.environ.pop("REPRO_GROUPAGG_FUSED", None)
@@ -180,6 +210,9 @@ def run(n: int = 50_000, ngroups: int = 512, repeats: int = 3,
     emit("groupagg_builtin_per_op", us_off, "5_aggs_per_op_segment_ops")
     emit("groupagg_builtin_fused", us_on,
          f"speedup={us_off / us_on:.2f}x_one_pass")
+    emit("groupagg_builtin_fused_bounded", us_bounded,
+         f"speedup_vs_per_op={us_off / us_bounded:.2f}x_"
+         f"max_groups={ngroups}")
 
 
 if __name__ == "__main__":

@@ -69,6 +69,10 @@ class CustomAggregate:
     analysis: AggifyAnalysis = None
     local_tables: Mapping[str, Any] = dc_field(default_factory=dict)
     recognized: Optional[tuple] = None  # recognize.FieldUpdate list, if any
+    #: Program.var_dtypes carried along so executors can resolve the dtype
+    #: of fields absent from the caller environment (the engine's AggCall
+    #: path has no other channel for it)
+    var_dtypes: Mapping[str, Any] = dc_field(default_factory=dict)
 
     @property
     def accum_params(self) -> tuple[str, ...]:
@@ -299,6 +303,7 @@ def build_aggregate(prog: Program, name: Optional[str] = None) -> CustomAggregat
         analysis=ana,
         local_tables=local_tables,
         recognized=recognized,
+        var_dtypes=dict(prog.var_dtypes),
     )
 
 

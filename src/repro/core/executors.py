@@ -60,6 +60,23 @@ def _default_for(prog, name):
     return jnp.zeros((), dtype=dt)
 
 
+def _default_missing_fields(agg, env, outer_vals, var_dtypes) -> None:
+    """Fill ``outer_vals`` defaults for aggregate fields absent from the
+    caller environment.  Dtype resolution (shared by the grouped and
+    ungrouped paths so they cannot diverge): the explicit ``var_dtypes``
+    param wins, then the mapping the aggregate carried from
+    ``Program.var_dtypes`` (the engine's plan-execution path has no way
+    to pass the param), else float32."""
+    dtypes = var_dtypes if var_dtypes is not None \
+        else getattr(agg, "var_dtypes", None)
+    for f in agg.fields:
+        if f in env:
+            outer_vals.setdefault(f, env[f])
+        else:
+            dt = (dtypes or {}).get(f, jnp.float32)
+            outer_vals.setdefault(f, jnp.zeros((), dtype=dt))
+
+
 def build_env(prog, catalog, params: Optional[Mapping[str, Any]] = None) -> dict:
     env: dict[str, Any] = {}
     for p in prog.params:
@@ -141,7 +158,7 @@ def run_rewritten(rp: RewrittenProgram, catalog, params=None,
     call = rp.agg_call if mode is None else AggCall(
         rp.agg_call.child, rp.agg_call.aggregate, rp.agg_call.param_binding,
         rp.agg_call.ordered, rp.agg_call.sort_keys, rp.agg_call.sort_desc,
-        rp.agg_call.group_keys, mode)
+        rp.agg_call.group_keys, mode, rp.agg_call.max_groups)
     vals = agg_call_values(call, catalog, env, deferred_init=deferred_init,
                            num_chunks=num_chunks, var_dtypes=rp.var_dtypes)
     env.update(vals)
@@ -177,6 +194,13 @@ def _resolve_mode(call: AggCall, agg: CustomAggregate,
                   deferred_init: bool) -> str:
     mode = call.mode
     if deferred_init:
+        # deferred V_init (paper §5.2) only exists on the streaming fold;
+        # an explicit request for a parallel/closed-form mode cannot be
+        # honored, so refuse it rather than silently running 'stream'
+        if mode not in ("auto", "stream"):
+            raise ValueError(
+                f"deferred_init=True requires streaming execution; "
+                f"incompatible with explicit mode={mode!r}")
         return "stream"
     if mode == "auto":
         if agg.recognized is not None and not agg.local_tables:
@@ -215,12 +239,7 @@ def agg_call_values(call: AggCall, catalog, env, deferred_init=False,
             rows[name] = t.columns[e.name]
         else:
             outer_vals[name] = eval_expr(e, env)
-    for f in agg.fields:
-        if f in env:
-            outer_vals.setdefault(f, env[f])
-        else:
-            dt = (var_dtypes or {}).get(f, jnp.float32)
-            outer_vals.setdefault(f, jnp.zeros((), dtype=dt))
+    _default_missing_fields(agg, env, outer_vals, var_dtypes)
 
     valid = t.mask()
     mode = _resolve_mode(call, agg, deferred_init)
@@ -242,11 +261,14 @@ def agg_call_values(call: AggCall, catalog, env, deferred_init=False,
     return dict(zip(agg.terminate_vars, res))
 
 
-def execute_agg_call(call: AggCall, catalog, env) -> Table:
-    """Engine entry point: returns a Table (1 row, or one row per group)."""
+def execute_agg_call(call: AggCall, catalog, env,
+                     var_dtypes=None) -> Table:
+    """Engine entry point: returns a Table (1 row, or one row per group).
+    ``var_dtypes`` (Program.var_dtypes) resolves the dtype of aggregate
+    fields absent from ``env`` — without it they default to float32."""
     if call.group_keys:
-        return grouped_agg_call(call, catalog, env)
-    vals = agg_call_values(call, catalog, env)
+        return grouped_agg_call(call, catalog, env, var_dtypes=var_dtypes)
+    vals = agg_call_values(call, catalog, env, var_dtypes=var_dtypes)
     cols = {}
     for k, v in vals.items():
         a = jnp.asarray(v)
@@ -259,7 +281,8 @@ def execute_agg_call(call: AggCall, catalog, env) -> Table:
 # ---------------------------------------------------------------------------
 
 
-def grouped_agg_call(call: AggCall, catalog, env) -> Table:
+def grouped_agg_call(call: AggCall, catalog, env,
+                     var_dtypes=None) -> Table:
     agg: CustomAggregate = call.aggregate
     t = _engine.execute(call.child, catalog, env)
     # row-sharded input (Table.shard_rows): the fused path runs the kernel
@@ -271,14 +294,25 @@ def grouped_agg_call(call: AggCall, catalog, env) -> Table:
     sort_desc = (False,) * len(call.group_keys) + tuple(
         call.sort_desc or (False,) * len(call.sort_keys))
     from repro.relational.engine import segment_ids_for
+    from repro.relational.group_bound import (check_group_overflow,
+                                              poison_overflow,
+                                              resolve_group_bound)
+    # dense segment range: AggCall-declared max_groups beats the table
+    # hint; every segment tensor below (and the kernel / all-reduce
+    # payload) is sized by it instead of the row capacity
+    declared = call.max_groups if call.max_groups is not None \
+        else t.group_bound
+    nsegments, bound = resolve_group_bound(declared, t.capacity)
     st, seg, starts = segment_ids_for(
-        t.sort_by(sort_keys, sort_desc), call.group_keys)
+        t.sort_by(sort_keys, sort_desc), call.group_keys,
+        num_segments=nsegments)
     # note: sort_by in segment_ids_for re-sorts by group keys only (stable),
     # preserving the intra-group order established above.
     cap = st.capacity
     m = st.mask()
     nseg = jnp.sum(starts.astype(jnp.int32))
-    out_valid = jnp.arange(cap) < nseg
+    overflow_ok = check_group_overflow(nseg, bound)
+    out_valid = jnp.arange(nsegments) < nseg
 
     rows: dict[str, jax.Array] = {}
     outer_vals: dict[str, Any] = {}
@@ -287,29 +321,30 @@ def grouped_agg_call(call: AggCall, catalog, env) -> Table:
             rows[name] = st.columns[e.name]
         else:
             outer_vals[name] = eval_expr(e, env)
-    for f in agg.fields:
-        outer_vals.setdefault(f, env.get(f, jnp.zeros((), jnp.float32)))
+    _default_missing_fields(agg, env, outer_vals, var_dtypes)
 
     cols: dict[str, jax.Array] = {}
     first_idx = jnp.where(starts, jnp.arange(cap), cap)
-    first_of_seg = jax.ops.segment_min(first_idx, seg, num_segments=cap)
+    first_of_seg = jax.ops.segment_min(first_idx, seg,
+                                       num_segments=nsegments)
     safe_first = jnp.clip(first_of_seg, 0, cap - 1)
     for k in call.group_keys:
         cols[k] = jnp.take(st.columns[k], safe_first)
 
     mode = _resolve_grouped_mode(call, agg)
     if mode == "fused":
-        out = _grouped_fused(agg, rows, outer_vals, m, seg, cap,
+        out = _grouped_fused(agg, rows, outer_vals, m, seg, nsegments,
                              backend=_segagg_backend(),
                              require_kernel=call.mode == "fused",
                              shard_route=shard_route)
     elif mode == "recognized":
-        out = _grouped_recognized(agg, rows, outer_vals, m, seg, cap)
+        out = _grouped_recognized(agg, rows, outer_vals, m, seg, nsegments)
     else:
-        out = _grouped_scan(agg, rows, outer_vals, m, starts, seg, cap)
+        out = _grouped_scan(agg, rows, outer_vals, m, starts, seg,
+                            nsegments)
     for v in agg.terminate_vars:
         cols[v] = out[v]
-    return Table(cols, out_valid)
+    return Table(poison_overflow(cols, overflow_ok), out_valid)
 
 
 def _resolve_grouped_mode(call: AggCall, agg: CustomAggregate) -> str:
@@ -354,7 +389,7 @@ def _segagg_backend() -> str:
     return "pallas" if on_tpu else "jnp"
 
 
-def _grouped_fused(agg, rows, outer_vals, valid, seg, cap, backend="auto",
+def _grouped_fused(agg, rows, outer_vals, valid, seg, num_segments, backend="auto",
                    require_kernel=False, shard_route=None):
     """Fused grouped aggregation: every recognized sum/min/max/arg-extremum
     update over a ≤32-bit floating field is batched into ONE fused
@@ -424,13 +459,13 @@ def _grouped_fused(agg, rows, outer_vals, valid, seg, cap, backend="auto",
             from repro.launch.sharded_agg import sharded_fused_segment_agg
             fused = sharded_fused_segment_agg(
                 jnp.stack(cols, axis=1), seg.astype(jnp.int32),
-                jnp.stack(masks, axis=1), cap, mesh=shard_route[0],
+                jnp.stack(masks, axis=1), num_segments, mesh=shard_route[0],
                 axis=shard_route[1], backend=backend,
                 moments=kernel_moments, assume_sorted=True)
         else:
             fused = fused_segment_agg(
                 jnp.stack(cols, axis=1), seg.astype(jnp.int32),
-                jnp.stack(masks, axis=1), cap, backend=backend,
+                jnp.stack(masks, axis=1), num_segments, backend=backend,
                 moments=kernel_moments, assume_sorted=True)
         for u, c in zip(kernel_updates, upd_col):
             f = u.fields[0]
@@ -442,7 +477,7 @@ def _grouped_fused(agg, rows, outer_vals, valid, seg, cap, backend="auto",
                 worst = _recognize._MINMAX_ID["min" if minimize else "max"](d)
                 masked = jnp.where(g, key.astype(d), worst)
                 _arg_group_select(u, outer_vals, col_env, g, masked, best,
-                                  seg, cap, out)
+                                  seg, num_segments, out)
                 continue
             r = fused[c, {"sum": 0, "min": 2, "max": 3}[u.kind]].astype(d)
             if u.kind == "sum":
@@ -453,11 +488,11 @@ def _grouped_fused(agg, rows, outer_vals, valid, seg, cap, backend="auto",
                 out[f] = jnp.maximum(outer_vals[f], r)
     if rest:
         out.update(_grouped_recognized(agg, rows, outer_vals, valid, seg,
-                                       cap, updates=tuple(rest)))
+                                       num_segments, updates=tuple(rest)))
     return out
 
 
-def _arg_group_select(u, outer_vals, col_env, g, masked, best, seg, cap,
+def _arg_group_select(u, outer_vals, col_env, g, masked, best, seg, num_segments,
                       out) -> None:
     """Shared tail of the grouped argmin/argmax lowering: given the
     per-segment key extremum ``best`` (from the fused kernel or jnp segment
@@ -470,7 +505,7 @@ def _arg_group_select(u, outer_vals, col_env, g, masked, best, seg, cap,
     hit = g & (masked == jnp.take(best, seg))
     cand = jnp.where(hit, idx, (n if u.op in ("<", ">") else -1))
     pickfn = jax.ops.segment_min if u.op in ("<", ">") else jax.ops.segment_max
-    pick = pickfn(cand, seg, num_segments=cap)
+    pick = pickfn(cand, seg, num_segments=num_segments)
     safe = jnp.clip(pick, 0, n - 1)
     cmp = {"<": best < outer_vals[kf], "<=": best <= outer_vals[kf],
            ">": best > outer_vals[kf], ">=": best >= outer_vals[kf]}[u.op]
@@ -482,7 +517,7 @@ def _arg_group_select(u, outer_vals, col_env, g, masked, best, seg, cap,
         out[f] = jnp.where(beat, jnp.take(pv, safe), outer_vals[f])
 
 
-def _grouped_recognized(agg, rows, outer_vals, valid, seg, cap,
+def _grouped_recognized(agg, rows, outer_vals, valid, seg, num_segments,
                         updates=None):
     """Segment-vectorized recognized aggregation on ``jax.ops.segment_*``
     (``updates`` restricts to a subset — used by the fused path for the
@@ -502,19 +537,19 @@ def _grouped_recognized(agg, rows, outer_vals, valid, seg, cap,
             e = jnp.broadcast_to(jnp.asarray(eval_expr(u.exprs[0], col_env), d), (n,))
             if u.kind == "sum":
                 out[f] = outer_vals[f] + jax.ops.segment_sum(
-                    jnp.where(g, e, 0), seg, num_segments=cap)
+                    jnp.where(g, e, 0), seg, num_segments=num_segments)
             elif u.kind == "prod":
                 out[f] = outer_vals[f] * jax.ops.segment_prod(
-                    jnp.where(g, e, 1), seg, num_segments=cap)
+                    jnp.where(g, e, 1), seg, num_segments=num_segments)
             elif u.kind == "min":
                 r = jax.ops.segment_min(
                     jnp.where(g, e, _recognize._MINMAX_ID["min"](d)), seg,
-                    num_segments=cap)
+                    num_segments=num_segments)
                 out[f] = jnp.minimum(outer_vals[f], r)
             else:
                 r = jax.ops.segment_max(
                     jnp.where(g, e, _recognize._MINMAX_ID["max"](d)), seg,
-                    num_segments=cap)
+                    num_segments=num_segments)
                 out[f] = jnp.maximum(outer_vals[f], r)
         elif u.kind == "arg_group":
             kf = u.fields[0]
@@ -524,15 +559,15 @@ def _grouped_recognized(agg, rows, outer_vals, valid, seg, cap,
             worst = _recognize._MINMAX_ID["min" if minimize else "max"](kd)
             masked = jnp.where(g, key, worst)
             segfn = jax.ops.segment_min if minimize else jax.ops.segment_max
-            best = segfn(masked, seg, num_segments=cap)
+            best = segfn(masked, seg, num_segments=num_segments)
             _arg_group_select(u, outer_vals, col_env, g, masked, best,
-                              seg, cap, out)
+                              seg, num_segments, out)
         elif u.kind == "last":
             f = u.fields[0]
             pd = jnp.asarray(outer_vals[f]).dtype
             e = jnp.broadcast_to(jnp.asarray(eval_expr(u.exprs[0], col_env), pd), (n,))
             cand = jnp.where(g, idx, -1)
-            pick = jax.ops.segment_max(cand, seg, num_segments=cap)
+            pick = jax.ops.segment_max(cand, seg, num_segments=num_segments)
             got = pick >= 0
             out[f] = jnp.where(got, jnp.take(e, jnp.clip(pick, 0, n - 1)),
                                outer_vals[f])
@@ -541,7 +576,7 @@ def _grouped_recognized(agg, rows, outer_vals, valid, seg, cap,
     return out
 
 
-def _grouped_scan(agg, rows, outer_vals, valid, starts, seg, cap):
+def _grouped_scan(agg, rows, outer_vals, valid, starts, seg, num_segments):
     """Generic grouped custom aggregate: ONE segmented scan pass — state
     resets at segment starts; per-segment final states gathered at segment
     ends and terminated."""
@@ -563,7 +598,7 @@ def _grouped_scan(agg, rows, outer_vals, valid, starts, seg, cap):
     # last row index of each segment
     idx = jnp.arange(n)
     cand = jnp.where(valid, idx, -1)
-    last = jax.ops.segment_max(cand, seg, num_segments=cap)
+    last = jax.ops.segment_max(cand, seg, num_segments=num_segments)
     safe = jnp.clip(last, 0, n - 1)
     seg_states = jax.tree.map(lambda s: jnp.take(s, safe, axis=0), states)
     terms = jax.vmap(jagg.terminate)(seg_states)

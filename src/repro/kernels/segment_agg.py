@@ -32,6 +32,12 @@ cost O(row_blocks + seg_tiles) instead of O(row_blocks × seg_tiles).
 benchmarks can assert it.  Pruning requires the documented sorted-``segs``
 precondition; see ``fused_segment_agg``.
 
+``num_segments`` is the caller's static segment range: the grouped
+executors pass a dense group bound (relational/group_bound.py) when one is
+declared, which shrinks both the ``seg_tiles`` grid term
+(``launched_grid_steps``) and the (C, 4, num_segments) output tensor
+(``moment_tensor_bytes``) from row-capacity-sized to group-count-sized.
+
 Grid (unpruned fallback, ``prune=False``): (num_seg_tiles, num_row_blocks)
 with row blocks iterating fastest.  Block shapes in both layouts:
   vals  (BLOCK_ROWS, C)  f32          segs  (BLOCK_ROWS, 1) i32
@@ -238,6 +244,33 @@ def full_grid_steps(n: int, num_segments: int, block_rows: int = 256,
                                         vmem_budget_elems)
     n_blocks = -(-n // block_rows)
     return n_blocks * -(-num_segments // block_segs)
+
+
+def launched_grid_steps(n: int, num_segments: int, block_rows: int = 256,
+                        block_segs: int | None = None,
+                        vmem_budget_elems: int = 1 << 19) -> int:
+    """Static grid length ``fused_segment_agg`` actually launches for this
+    shape: ``row_blocks`` when the segment range fits one tile (pruning is
+    skipped — the row walk already is the whole grid), otherwise the
+    band-pruned ``row_blocks + seg_tiles − 1`` (which includes the padding
+    steps past ``pruned_grid_steps``; padding repeats the last real block
+    pair with the accumulate gated off).  This is the number a dense
+    group bound shrinks: ``seg_tiles`` is sized by ``num_segments``, so
+    bounding it by the group count instead of the row capacity cuts the
+    term — benchmarks/CI compare bounded vs capacity-sized launches."""
+    if block_segs is None:
+        block_segs = default_block_segs(num_segments, block_rows,
+                                        vmem_budget_elems)
+    n_blocks = -(-n // block_rows)
+    num_seg_tiles = -(-num_segments // block_segs)
+    return n_blocks if num_seg_tiles == 1 else n_blocks + num_seg_tiles - 1
+
+
+def moment_tensor_bytes(num_cols: int, num_segments: int) -> int:
+    """Bytes of the (C, 4, num_segments) f32 moment tensor — the kernel
+    output and the sharded path's all-reduce payload.  Sized by the static
+    segment range, so a dense group bound shrinks it proportionally."""
+    return num_cols * len(MOMENTS) * num_segments * 4
 
 
 def _validate_sorted(segs, prune: bool, assume_sorted: bool,

@@ -26,6 +26,14 @@ Rows arrive sorted by segment (the grouped executors sort to derive
 segment ids), so every contiguous row shard is itself sorted — the band
 pruning of ``kernels/segment_agg.py`` applies per shard, and each shard's
 pruned grid only walks the segment tiles its band actually touches.
+
+``num_segments`` sizes the all-reduce payload: the grouped executors pass
+the dense group bound (relational/group_bound.py) when one is declared, so
+the per-moment collectives move (C, 4, ~group count) elements instead of
+(C, 4, row capacity) — ~25× less on the default bench shape.  The bound
+is independent of the shard count: rows (not segments) are padded to a
+multiple of it, so a bound smaller than the mesh axis still works (tail
+shards just contribute moment identities).
 """
 from __future__ import annotations
 

@@ -62,7 +62,13 @@ def _exec(plan: Plan, catalog: Catalog, env: Env) -> Table:
             v = jnp.broadcast_to(jnp.asarray(v), (t.capacity,) + jnp.shape(jnp.asarray(v))[1:]) \
                 if jnp.ndim(jnp.asarray(v)) == 0 else jnp.asarray(v)
             cols[name] = v
-        return Table(cols, t.valid)
+        # computed expressions can mint columns with more distinct values
+        # than the declared group bound covers; only pure column renames
+        # keep the declaration honest
+        from repro.core.loop_ir import Col as _Col
+        keep = t.group_bound if all(isinstance(e, _Col)
+                                    for _, e in plan.exprs) else None
+        return Table(cols, t.valid, keep)
 
     if isinstance(plan, Join):
         lt = _exec(plan.left, catalog, env)
@@ -80,7 +86,7 @@ def _exec(plan: Plan, catalog: Catalog, env: Env) -> Table:
 
     if isinstance(plan, GroupAgg):
         t = _exec(plan.child, catalog, env)
-        return _group_agg(t, plan.keys, plan.aggs)
+        return _group_agg(t, plan.keys, plan.aggs, plan.max_groups)
 
     if isinstance(plan, AggCall):
         # Import here: core.executors depends on this module.
@@ -137,6 +143,10 @@ def _gather_join(lt: Table, rt: Table, lkey: str, rkey: str, how: str) -> Table:
                 jnp.zeros_like(cols[name]))
     else:
         raise ValueError(f"unsupported join how={how}")
+    # the join introduces right-side columns the left table's declared
+    # bound never covered — grouping the result by one of them could have
+    # arbitrarily many groups, so the declaration must not survive
+    # (semi/anti joins returned earlier: they keep the left columns only)
     return Table(cols, valid)
 
 
@@ -156,9 +166,15 @@ def _key_for_search(k: jax.Array, valid: jax.Array) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 
-def segment_ids_for(t: Table, keys: tuple[str, ...]) -> tuple[Table, jax.Array, jax.Array]:
+def segment_ids_for(t: Table, keys: tuple[str, ...],
+                    num_segments: Optional[int] = None
+                    ) -> tuple[Table, jax.Array, jax.Array]:
     """Sort by group keys and derive segment ids.  Returns (sorted table,
-    segment_ids, segment_starts_mask)."""
+    segment_ids, segment_starts_mask).  ``num_segments`` is the static
+    segment range the ids must stay within (default: row capacity);
+    invalid rows park in its last slot — the dedicated overflow segment
+    when a dense group bound is declared (group_bound.resolve_group_bound
+    reserves it), the legacy capacity-1 slot otherwise."""
     st = t.sort_by(keys)
     m = st.mask()
     same = jnp.ones(st.capacity, dtype=bool)
@@ -167,7 +183,8 @@ def segment_ids_for(t: Table, keys: tuple[str, ...]) -> tuple[Table, jax.Array, 
         same = same & jnp.concatenate([jnp.array([False]), c[1:] == c[:-1]])
     starts = m & ~same
     seg = jnp.cumsum(starts.astype(jnp.int32)) - 1
-    seg = jnp.where(m, seg, st.capacity - 1)  # park invalid rows in last seg
+    overflow = (st.capacity if num_segments is None else num_segments) - 1
+    seg = jnp.where(m, seg, overflow)  # park invalid rows in the last seg
     return st, seg, starts
 
 
@@ -197,7 +214,10 @@ def _groupagg_fused_backend() -> Optional[str]:
 
 
 def _group_agg(t: Table, keys: tuple[str, ...],
-               aggs: tuple[tuple[str, str, Optional[str]], ...]) -> Table:
+               aggs: tuple[tuple[str, str, Optional[str]], ...],
+               max_groups: Optional[int] = None) -> Table:
+    from .group_bound import (check_group_overflow, poison_overflow,
+                              resolve_group_bound)
     backend = _groupagg_fused_backend()
     # a row-sharded input table (Table.shard_rows) routes the fused pass
     # through the mesh — one kernel launch per row shard, moments
@@ -208,16 +228,22 @@ def _group_agg(t: Table, keys: tuple[str, ...],
         shard_route = row_sharded_mesh(*t.columns.values(), t.valid)
         if backend is None and shard_route is not None:
             backend = "auto"    # distributed beats per-op even off-TPU
-    st, seg, starts = segment_ids_for(t, keys)
+    # dense segment range: plan-declared max_groups beats the table hint;
+    # without either, the row capacity is the only static bound available
+    declared = max_groups if max_groups is not None else t.group_bound
+    nsegments, bound = resolve_group_bound(declared, t.capacity)
+    st, seg, starts = segment_ids_for(t, keys, num_segments=nsegments)
     cap = st.capacity
     m = st.mask()
     nseg = jnp.sum(starts.astype(jnp.int32))
-    out_valid = jnp.arange(cap) < nseg
+    overflow_ok = check_group_overflow(nseg, bound)
+    out_valid = jnp.arange(nsegments) < nseg
 
     cols: dict[str, jax.Array] = {}
     # representative key values: first row of each segment
     first_idx = jnp.where(starts, jnp.arange(cap), cap)
-    first_of_seg = jax.ops.segment_min(first_idx, seg, num_segments=cap)
+    first_of_seg = jax.ops.segment_min(first_idx, seg,
+                                       num_segments=nsegments)
     for k in keys:
         cols[k] = jnp.take(st.columns[k], jnp.clip(first_of_seg, 0, cap - 1))
 
@@ -237,20 +263,22 @@ def _group_agg(t: Table, keys: tuple[str, ...],
     fused_aggs = [] if backend in (None, "off") else [
         (out, op, col) for out, op, col in aggs if _fusable(op, col)]
     if fused_aggs:
-        cols.update(_group_agg_fused(st, seg, m, cap, fused_aggs, backend,
-                                     shard_route=shard_route))
+        cols.update(_group_agg_fused(st, seg, m, nsegments, fused_aggs,
+                                     backend, shard_route=shard_route))
         aggs = tuple(a for a in aggs if a not in fused_aggs)
 
     for out, op, col in aggs:
         if op == "count":
             vals = m.astype(jnp.int64 if jax.config.jax_enable_x64 else jnp.int32)
-            cols[out] = jax.ops.segment_sum(vals, seg, num_segments=cap)
+            cols[out] = jax.ops.segment_sum(vals, seg,
+                                            num_segments=nsegments)
             continue
         v = st.columns[col]
         if op == "mean":
             s = jax.ops.segment_sum(jnp.where(m, v, 0).astype(jnp.float32), seg,
-                                    num_segments=cap)
-            c = jax.ops.segment_sum(m.astype(jnp.float32), seg, num_segments=cap)
+                                    num_segments=nsegments)
+            c = jax.ops.segment_sum(m.astype(jnp.float32), seg,
+                                    num_segments=nsegments)
             cols[out] = s / jnp.maximum(c, 1.0)
             continue
         if op in ("min", "max"):
@@ -258,26 +286,29 @@ def _group_agg(t: Table, keys: tuple[str, ...],
             v = jnp.where(m, v, fill)
         else:
             v = jnp.where(_bmask(m, v), v, jnp.zeros_like(v) if op == "sum" else jnp.ones_like(v))
-        cols[out] = _SEG_OPS[op](v, seg, num_segments=cap)
+        cols[out] = _SEG_OPS[op](v, seg, num_segments=nsegments)
 
-    return Table(cols, out_valid)
+    return Table(poison_overflow(cols, overflow_ok), out_valid)
 
 
-def _group_agg_fused(st: Table, seg: jax.Array, m: jax.Array, cap: int,
-                     fused_aggs, backend: str,
+def _group_agg_fused(st: Table, seg: jax.Array, m: jax.Array,
+                     num_segments: int, fused_aggs, backend: str,
                      shard_route=None) -> dict[str, jax.Array]:
     """Serve sum/count/min/max/mean GroupAgg ops from ONE fused
     segment-aggregate pass: each distinct value column is one kernel
     column; all four moments come back together, so e.g. (sum, count,
     mean, min) over one column costs a single HBM traversal.
-    ``shard_route`` = (mesh, axis): the pass runs per row shard with a
-    cross-device moment merge (launch/sharded_agg.py)."""
+    ``num_segments`` is the static segment range — the dense group bound
+    (+ overflow slot) when declared, the row capacity otherwise — and
+    sizes the (C, 4, num_segments) moment tensor.  ``shard_route`` =
+    (mesh, axis): the pass runs per row shard with a cross-device moment
+    merge (launch/sharded_agg.py)."""
     from repro.kernels.segment_agg import fused_segment_agg
 
     value_cols = list(dict.fromkeys(
         col for _, _, col in fused_aggs if col is not None))
     if not value_cols:        # count-only: any column works, mask does the job
-        vals = jnp.zeros((cap, 1), jnp.float32)
+        vals = jnp.zeros((st.capacity, 1), jnp.float32)
         col_idx = {}
     else:
         vals = jnp.stack([st.columns[c].astype(jnp.float32)
@@ -294,12 +325,12 @@ def _group_agg_fused(st: Table, seg: jax.Array, m: jax.Array, cap: int,
     if shard_route is not None:
         from repro.launch.sharded_agg import sharded_fused_segment_agg
         fused = sharded_fused_segment_agg(
-            vals, seg.astype(jnp.int32), m[:, None], cap,
+            vals, seg.astype(jnp.int32), m[:, None], num_segments,
             mesh=shard_route[0], axis=shard_route[1], backend=backend,
             moments=kernel_moments, assume_sorted=True)
     else:
         fused = fused_segment_agg(vals, seg.astype(jnp.int32), m[:, None],
-                                  cap, backend=backend,
+                                  num_segments, backend=backend,
                                   moments=kernel_moments,
                                   assume_sorted=True)
 

@@ -1,0 +1,117 @@
+"""Dense segment-id bound for grouped aggregation.
+
+The grouped executors historically sized every segment tensor by the *row
+capacity* of the input table — the only group-count bound XLA's static
+shapes could get for free.  On the default bench shape (50k rows, ~2k
+groups) that makes the fused kernel's (C, 4, S) moment tensor, the
+band-pruned grid's ``seg_tiles`` term, and the sharded all-reduce payload
+~25× larger than the actual group count.  Both PL/SQL-compilation lines of
+work (Duta et al.; Ramachandra et al.) stress that the rewritten form must
+hand the optimizer *tight* static shapes — this module is that bound for
+the XLA/Pallas backend.
+
+A caller declares ``max_groups`` on a ``GroupAgg`` / ``AggCall`` plan node
+(or on the input table via ``Table.declare_group_bound``).  The declared
+value is **bucketed** — rounded up to the next power-of-two multiple of
+the 128-lane tile width — so nearby bounds share one compiled program and
+recompilation stays bounded (at most log2(capacity/128) distinct shapes).
+The segment range becomes ``bucket + 1``: real groups occupy
+``[0, bucket)`` and the extra slot is a dedicated **overflow segment**
+where invalid rows park (they previously parked in ``capacity - 1``, which
+a dense range no longer contains).
+
+The bound is *validated, not assumed* — mirroring the sorted-``segs``
+precondition of the band-pruned kernel: a concrete group count above the
+bucket raises eagerly; under tracing (where the count is a tracer) the
+outputs are poisoned — NaN for floating columns, the dtype minimum for
+integer columns — instead of silently aliasing overflowing groups into the
+overflow slot.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+#: TPU vector lane width — kept equal to ``kernels.segment_agg.LANE``
+#: (asserted by tests) without importing the Pallas toolchain here.
+LANE = 128
+
+
+def bucket_group_bound(max_groups: int) -> int:
+    """Round a declared group bound up to its recompilation bucket: the
+    next power of two, floored at one 128-lane tile.  Every bucket is a
+    multiple of ``LANE`` (so the kernel's segment tiles stay lane-aligned)
+    and a power of two (so distinct compiled shapes grow logarithmically
+    in the declared bound)."""
+    mg = int(max_groups)
+    if mg <= 0:
+        raise ValueError(f"max_groups must be positive, got {max_groups}")
+    if mg <= LANE:
+        return LANE
+    return 1 << (mg - 1).bit_length()
+
+
+def resolve_group_bound(max_groups: Optional[int],
+                        capacity: int) -> tuple[int, Optional[int]]:
+    """Resolve a declared bound into ``(num_segments, validated_bound)``.
+
+    ``num_segments`` is the static segment range every grouped tensor is
+    sized by: ``bucket(max_groups) + 1`` (the +1 is the overflow slot for
+    invalid rows) when a useful bound is declared, the row ``capacity``
+    otherwise.  ``validated_bound`` is the bucket the group count must stay
+    within (``None`` means nothing to validate — the capacity already
+    bounds the count).  A declared bound whose bucket reaches the capacity
+    is a no-op: the dense range would not be smaller than the legacy one.
+    """
+    if max_groups is None:
+        return capacity, None
+    bucket = bucket_group_bound(max_groups)
+    if bucket + 1 >= capacity:
+        return capacity, None
+    return bucket + 1, bucket
+
+
+def check_group_overflow(nseg, bound: Optional[int]):
+    """Validate the measured group count against the dense bound.
+
+    Returns the traced ``ok`` guard (``nseg <= bound``) when validation
+    must happen at runtime, or ``None`` when there is nothing left to
+    check.  Concrete counts above the bound raise eagerly."""
+    if bound is None:
+        return None
+    if isinstance(nseg, jax.core.Tracer):
+        return nseg <= bound
+    if int(nseg) > bound:
+        raise ValueError(
+            f"grouped aggregation: input has {int(nseg)} groups but the "
+            f"declared dense bound admits at most {bound} (max_groups "
+            f"bucketed to the next power-of-two lane multiple) — raise "
+            f"max_groups or drop the declaration")
+    return None
+
+
+def poison_overflow(cols: dict, ok) -> dict:
+    """Poison every output column where the traced overflow guard failed:
+    NaN for floating columns; for integers — which cannot hold NaN — the
+    dtype minimum if signed, the dtype maximum if unsigned (whose minimum
+    is 0, indistinguishable from a real aggregate); False for booleans.
+    ``ok=None`` (no runtime guard) is the identity."""
+    if ok is None:
+        return cols
+    out = {}
+    for k, v in cols.items():
+        if jnp.issubdtype(v.dtype, jnp.floating):
+            bad = jnp.array(jnp.nan, v.dtype)
+        elif v.dtype == jnp.bool_:
+            bad = jnp.array(False)
+        elif jnp.issubdtype(v.dtype, jnp.unsignedinteger):
+            bad = jnp.array(jnp.iinfo(v.dtype).max, v.dtype)
+        elif jnp.issubdtype(v.dtype, jnp.integer):
+            bad = jnp.array(jnp.iinfo(v.dtype).min, v.dtype)
+        else:
+            out[k] = v
+            continue
+        out[k] = jnp.where(ok, v, bad)
+    return out

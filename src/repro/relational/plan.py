@@ -157,10 +157,15 @@ class Limit(Plan):
 @dataclass(frozen=True)
 class GroupAgg(Plan):
     """Built-in grouped aggregation: aggs = ((out, op, col), ...) with op in
-    {sum,min,max,count,mean,prod}."""
+    {sum,min,max,count,mean,prod}.  ``max_groups`` declares a dense bound
+    on the group count (see relational/group_bound.py): segment tensors are
+    sized by its power-of-two bucket plus an overflow slot instead of the
+    input row capacity, and the bound is validated (concrete overflow
+    raises; traced overflow NaN-poisons the outputs)."""
     child: Plan
     keys: tuple[str, ...]
     aggs: tuple[tuple[str, str, Optional[str]], ...]
+    max_groups: Optional[int] = None
 
     @property
     def columns(self) -> tuple[str, ...]:
@@ -182,6 +187,9 @@ class AggCall(Plan):
     sort_desc: tuple[bool, ...] = ()
     group_keys: tuple[str, ...] = ()
     mode: str = "auto"                  # auto|stream|chunked|recognized|fused
+    #: dense group-count bound for the grouped invocation (bucketed +
+    #: validated; see relational/group_bound.py); None = row capacity
+    max_groups: Optional[int] = None
 
     @property
     def columns(self) -> tuple[str, ...]:

@@ -21,17 +21,24 @@ import numpy as np
 class Table:
     columns: Dict[str, jax.Array]
     valid: Optional[jax.Array] = None  # bool (capacity,) ; None => all valid
+    #: declared dense bound on the distinct-group count of this table's
+    #: rows (``declare_group_bound``); static metadata the grouped
+    #: executors use to size segment tensors — see
+    #: relational/group_bound.py.  Row-preserving ops propagate it (they
+    #: cannot create new key combinations); concat drops it.
+    group_bound: Optional[int] = None
 
     # -- pytree ---------------------------------------------------------------
     def tree_flatten(self):
         names = tuple(sorted(self.columns))
         children = tuple(self.columns[n] for n in names) + (self.valid,)
-        return children, names
+        return children, (names, self.group_bound)
 
     @classmethod
-    def tree_unflatten(cls, names, children):
+    def tree_unflatten(cls, aux, children):
+        names, group_bound = aux
         cols = dict(zip(names, children[:-1]))
-        return cls(cols, children[-1])
+        return cls(cols, children[-1], group_bound)
 
     # -- construction ---------------------------------------------------------
     @staticmethod
@@ -58,26 +65,30 @@ class Table:
 
     # -- row ops ---------------------------------------------------------------
     def filter(self, mask: jax.Array) -> "Table":
-        return Table(dict(self.columns), self.mask() & mask)
+        return Table(dict(self.columns), self.mask() & mask,
+                     self.group_bound)
 
     def project(self, names: Iterable[str]) -> "Table":
-        return Table({n: self.columns[n] for n in names}, self.valid)
+        return Table({n: self.columns[n] for n in names}, self.valid,
+                     self.group_bound)
 
     def with_column(self, name: str, values: jax.Array) -> "Table":
         cols = dict(self.columns)
         cols[name] = values
+        # a new column may have more distinct values than the declared
+        # group bound covers, so the declaration does not survive
         return Table(cols, self.valid)
 
     def rename(self, mapping: Mapping[str, str]) -> "Table":
         cols = {mapping.get(k, k): v for k, v in self.columns.items()}
-        return Table(cols, self.valid)
+        return Table(cols, self.valid, self.group_bound)
 
     def take(self, idx: jax.Array, idx_valid: Optional[jax.Array] = None) -> "Table":
         cols = {k: jnp.take(v, idx, axis=0, mode="clip")
                 for k, v in self.columns.items()}
         base = jnp.take(self.mask(), idx, mode="clip")
         v = base if idx_valid is None else base & idx_valid
-        return Table(cols, v)
+        return Table(cols, v, self.group_bound)
 
     def compress(self) -> "Table":
         """Stable-compact valid rows to the front (fixed capacity)."""
@@ -85,7 +96,8 @@ class Table:
         order = jnp.argsort(~m, stable=True)
         t = self.take(order)
         n = jnp.sum(m.astype(jnp.int32))
-        return Table(t.columns, jnp.arange(self.capacity) < n)
+        return Table(t.columns, jnp.arange(self.capacity) < n,
+                     self.group_bound)
 
     def sort_by(self, keys: Iterable[str], descending: Iterable[bool] = ()) -> "Table":
         """Stable multi-key sort; invalid rows sort last."""
@@ -104,7 +116,24 @@ class Table:
     def head(self, n: int) -> "Table":
         c = self.compress()
         cols = {k: v[:n] for k, v in c.columns.items()}
-        return Table(cols, c.mask()[:n])
+        return Table(cols, c.mask()[:n], self.group_bound)
+
+    def declare_group_bound(self, max_groups: int) -> "Table":
+        """Declare a dense bound on how many distinct groups this table's
+        rows can form (any key set the caller intends to group by).  The
+        grouped executors (``GroupAgg`` and grouped ``AggCall``) size
+        their segment tensors, the band-pruned kernel grid, and the
+        sharded all-reduce payload by the bound's power-of-two bucket
+        instead of the row capacity — and *validate* it: a concrete input
+        with more groups raises eagerly, a traced one NaN-poisons the
+        outputs.  See relational/group_bound.py.
+
+        The *bucket* (not the raw value) is stored: it rides in the
+        pytree treedef, so tables declared with nearby bounds share one
+        treedef and jitted callers don't retrace per distinct value."""
+        from .group_bound import bucket_group_bound
+        return Table(dict(self.columns), self.valid,
+                     bucket_group_bound(max_groups))
 
     def shard_rows(self, mesh, axis: str = "data") -> "Table":
         """Commit every column (and the validity mask) to a row sharding —
@@ -116,13 +145,14 @@ class Table:
         from jax.sharding import NamedSharding, PartitionSpec
         sh = NamedSharding(mesh, PartitionSpec(axis))
         cols = {k: jax.device_put(v, sh) for k, v in self.columns.items()}
-        return Table(cols, jax.device_put(self.mask(), sh))
+        return Table(cols, jax.device_put(self.mask(), sh),
+                     self.group_bound)
 
     def materialize(self) -> "Table":
         """Force device materialization — models the cursor temp table."""
         cols = {k: jax.block_until_ready(jnp.asarray(v)) for k, v in self.columns.items()}
         v = None if self.valid is None else jax.block_until_ready(self.valid)
-        return Table(cols, v)
+        return Table(cols, v, self.group_bound)
 
     def nbytes(self) -> int:
         tot = 0

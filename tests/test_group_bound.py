@@ -1,0 +1,462 @@
+"""Dense segment-id bound for grouped aggregation (relational/group_bound.py).
+
+Covers the bound subsystem end to end: bucketing, resolution, overflow
+validation (concrete raise / traced poison), parity of the bounded grouped
+executors against the capacity-sized ones (built-in ``GroupAgg`` and
+grouped ``AggCall``, per-op and fused), the ``Table.declare_group_bound``
+hint and its propagation through row ops, the shrunken moment tensor /
+kernel grid, the sharded path with a bound smaller than the shard count
+(subprocess 8-way mesh), and the satellite fixes (grouped ``var_dtypes``
+threading, fused-vs-per-op count/mean dtype parity incl. x64, and the
+``deferred_init`` × explicit-mode conflict).
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.relational import GroupAgg, Scan, Table, execute
+from repro.relational.group_bound import (LANE, bucket_group_bound,
+                                          check_group_overflow,
+                                          resolve_group_bound)
+from repro.relational.plan import AggCall
+
+AGGS = (("s", "sum", "v"), ("c", "count", None), ("mn", "min", "v"),
+        ("mx", "max", "v"), ("avg", "mean", "v"))
+
+
+def _table(n, ngroups, seed=0, dtype=np.float32):
+    rng = np.random.default_rng(seed)
+    return Table.from_columns(
+        k=np.sort(rng.integers(0, ngroups, n)).astype(np.int32),
+        v=rng.uniform(0, 10, n).astype(dtype))
+
+
+def _plan(max_groups=None):
+    return GroupAgg(Scan("T", ("k", "v")), ("k",), AGGS,
+                    max_groups=max_groups)
+
+
+def _rows(t: Table) -> dict:
+    return t.to_numpy()
+
+
+# --------------------------------------------------------------------------
+# bucketing + resolution
+# --------------------------------------------------------------------------
+
+
+def test_bucket_group_bound():
+    assert bucket_group_bound(1) == 128
+    assert bucket_group_bound(128) == 128
+    assert bucket_group_bound(129) == 256
+    assert bucket_group_bound(500) == 512
+    assert bucket_group_bound(512) == 512
+    assert bucket_group_bound(513) == 1024
+    for bad in (0, -3):
+        with pytest.raises(ValueError):
+            bucket_group_bound(bad)
+
+
+def test_buckets_are_lane_aligned_powers_of_two():
+    from repro.kernels.segment_agg import LANE as KERNEL_LANE
+    assert LANE == KERNEL_LANE   # group_bound mirrors the kernel lane width
+    for mg in (1, 7, 128, 200, 1000, 5000):
+        b = bucket_group_bound(mg)
+        assert b >= mg and b % LANE == 0 and b & (b - 1) == 0
+
+
+def test_resolve_group_bound():
+    # undeclared: legacy capacity sizing, nothing to validate
+    assert resolve_group_bound(None, 50_000) == (50_000, None)
+    # declared: bucket + a dedicated overflow slot
+    assert resolve_group_bound(100, 50_000) == (129, 128)
+    assert resolve_group_bound(2000, 50_000) == (2049, 2048)
+    # a bucket at/above capacity is a no-op (no shape win to be had)
+    assert resolve_group_bound(100, 64) == (64, None)
+    assert resolve_group_bound(120, 129) == (129, None)
+
+
+def test_check_group_overflow_concrete():
+    assert check_group_overflow(jnp.int32(5), None) is None
+    assert check_group_overflow(jnp.int32(128), 128) is None
+    with pytest.raises(ValueError, match="129 groups"):
+        check_group_overflow(jnp.int32(129), 128)
+
+
+# --------------------------------------------------------------------------
+# built-in GroupAgg under a dense bound
+# --------------------------------------------------------------------------
+
+
+def test_groupagg_bounded_parity_and_dense_output():
+    t = _table(5000, 100)
+    want = execute(_plan(), {"T": t})
+    got = execute(_plan(max_groups=100), {"T": t})
+    assert want.capacity == 5000 and got.capacity == 129
+    w, g = _rows(want), _rows(got)
+    assert set(w) == set(g)
+    for k in w:
+        np.testing.assert_allclose(w[k], g[k], rtol=1e-6), k
+
+
+def test_groupagg_table_hint_routes_dense():
+    t = _table(5000, 100).declare_group_bound(100)
+    got = execute(_plan(), {"T": t})
+    assert got.capacity == 129
+    # plan-level declaration beats the table hint
+    assert execute(_plan(max_groups=300), {"T": t}).capacity == 513
+
+
+def test_group_bound_survives_row_ops():
+    t = _table(256, 10).declare_group_bound(10)
+    # the hint stores the BUCKET (pytree-aux stable across nearby bounds)
+    assert t.group_bound == 128
+    assert t.filter(t.columns["v"] > 1).group_bound == 128
+    assert t.sort_by(["k"]).group_bound == 128
+    assert t.project(["k", "v"]).group_bound == 128
+    assert t.compress().group_bound == 128
+    assert t.head(16).group_bound == 128
+    # and through a plan pipeline into the grouped executor
+    from repro.core.loop_ir import Col
+    plan = GroupAgg(Scan("T", ("k", "v")).filter(Col("v") > 1.0),
+                    ("k",), AGGS)
+    assert execute(plan, {"T": t}).capacity == 129
+
+
+def test_group_bound_dropped_when_new_columns_appear():
+    """Ops that mint columns the declaration never covered (joins,
+    computed projections, with_column) must NOT carry the bound — a
+    grouping by the new column could exceed it on a perfectly valid
+    query."""
+    from repro.core.loop_ir import Col
+    from repro.relational.plan import Join, Project
+    t = _table(256, 10).declare_group_bound(10)
+    assert t.with_column("w", t.columns["v"] * 2).group_bound is None
+    # computed projection drops it; pure column selection keeps it
+    scan = Scan("T", ("k", "v"))
+    computed = Project(scan, (("k", Col("k")), ("w", Col("v") * 2.0)))
+    from repro.relational.engine import _exec
+    assert _exec(computed, {"T": t}, {}).group_bound is None
+    assert _exec(scan.select("k", "v"), {"T": t}, {}).group_bound == 128
+    # join output drops it (right side introduces uncovered columns)
+    r = Table.from_columns(k=np.arange(10, dtype=np.int32),
+                           name=np.arange(10, dtype=np.int32) + 100)
+    j = Join(scan, Scan("R", ("k", "name")), "k", "k", "inner")
+    assert _exec(j, {"T": t, "R": r}, {}).group_bound is None
+
+
+def test_declared_buckets_share_one_jit_trace():
+    traces = []
+
+    @jax.jit
+    def agg(table):
+        traces.append(1)
+        return execute(_plan(), {"T": table})
+
+    t = _table(5000, 100)
+    agg(t.declare_group_bound(100))
+    agg(t.declare_group_bound(101))   # same bucket → same treedef
+    assert len(traces) == 1
+
+
+def test_poison_overflow_covers_bools_and_unsigned():
+    from repro.relational.group_bound import poison_overflow
+    cols = {"f": jnp.ones(4, jnp.float32), "i": jnp.ones(4, jnp.int32),
+            "u": jnp.ones(4, jnp.uint32), "b": jnp.ones(4, bool)}
+    out = poison_overflow(cols, jnp.bool_(False))
+    assert np.all(np.isnan(np.asarray(out["f"])))
+    assert np.all(np.asarray(out["i"]) == np.iinfo(np.int32).min)
+    # unsigned min is 0 — a plausible aggregate — so unsigned poisons to max
+    assert np.all(np.asarray(out["u"]) == np.iinfo(np.uint32).max)
+    assert not np.any(np.asarray(out["b"]))
+    # no-guard path is the identity
+    assert poison_overflow(cols, None) is cols
+
+
+def test_nseg_equals_bound_is_accepted():
+    # exactly bucket-many groups: the edge the overflow slot must not eat
+    n, g = 1024, 128
+    t = Table.from_columns(k=np.arange(n, dtype=np.int32) % g,
+                           v=np.ones(n, np.float32))
+    out = execute(_plan(max_groups=128), {"T": t})
+    r = _rows(out)
+    assert len(r["k"]) == 128
+    np.testing.assert_allclose(r["c"], np.full(128, n // g))
+
+
+def test_empty_groups_and_all_invalid():
+    t = _table(512, 3)
+    out = execute(_plan(max_groups=100), {"T": t})
+    assert int(out.count()) == 3          # bound ≫ actual groups
+    tinv = Table(dict(t.columns), jnp.zeros(512, bool))
+    oinv = execute(_plan(max_groups=100), {"T": tinv})
+    assert int(oinv.count()) == 0         # every row parks in overflow
+
+
+def test_overflow_concrete_raises_eagerly():
+    t = _table(5000, 300)                 # 300 groups > bucket(100) = 128
+    with pytest.raises(ValueError, match="dense bound"):
+        execute(_plan(max_groups=100), {"T": t})
+
+
+def test_overflow_traced_poisons_outputs():
+    t = _table(5000, 300)
+    out = jax.jit(lambda: execute(_plan(max_groups=100), {"T": t}))()
+    assert np.all(np.isnan(np.asarray(out.columns["s"])))
+    assert np.all(np.isnan(np.asarray(out.columns["avg"])))
+    # integer columns cannot hold NaN: dtype-minimum sentinel
+    c = np.asarray(out.columns["c"])
+    assert np.all(c == np.iinfo(c.dtype).min)
+
+
+def test_traced_in_bound_input_not_poisoned():
+    t = _table(5000, 100)
+    want = _rows(execute(_plan(), {"T": t}))
+    got = _rows(jax.jit(lambda: execute(_plan(max_groups=100), {"T": t}))())
+    for k in want:
+        np.testing.assert_allclose(want[k], got[k], rtol=1e-6), k
+
+
+def test_bounded_fused_moment_tensor_is_group_sized(monkeypatch):
+    """Acceptance: with max_groups declared, the fused GroupAgg pass
+    allocates a (C, 4, ~S) moment tensor, not (C, 4, capacity)."""
+    import repro.kernels.segment_agg   # noqa: F401 — the package re-exports
+    ka = sys.modules["repro.kernels.segment_agg"]  # a same-named function
+    seen = []
+    orig = ka.fused_segment_agg
+
+    def spy(vals, segs, valid, num_segments, **kw):
+        out = orig(vals, segs, valid, num_segments, **kw)
+        seen.append((num_segments, out.shape))
+        return out
+
+    monkeypatch.setattr(ka, "fused_segment_agg", spy)
+    monkeypatch.setenv("REPRO_GROUPAGG_FUSED", "jnp")
+    t = _table(5000, 100)
+    execute(_plan(), {"T": t})
+    assert seen.pop() == (5000, (1, 4, 5000))
+    execute(_plan(max_groups=100), {"T": t})
+    assert seen.pop() == (129, (1, 4, 129))
+
+
+def test_bounded_grid_steps_shrink():
+    """The pruned grid's seg_tiles term is sized by num_segments: a dense
+    bound drops the launched grid to the bare row walk on the bench
+    shape."""
+    from repro.kernels.segment_agg import (launched_grid_steps,
+                                           moment_tensor_bytes)
+    n = 50_000
+    cap_steps = launched_grid_steps(n, n)
+    bounded_steps = launched_grid_steps(n, 513)
+    assert bounded_steps < cap_steps
+    assert cap_steps == 220 and bounded_steps == 196   # the bench shape
+    assert moment_tensor_bytes(1, 513) * 90 < moment_tensor_bytes(1, n)
+
+
+# --------------------------------------------------------------------------
+# grouped AggCall under a dense bound
+# --------------------------------------------------------------------------
+
+
+def _sum_count_call(mode="auto", max_groups=None):
+    from repro.core import Assign, Const, CursorLoop, If, Program, Var, let
+    from repro.core.aggify import aggify
+    schema = ("ps_partkey", "ps_suppkey", "ps_supplycost")
+    prog = Program(
+        "sumCount", params=(),
+        pre=[let("tot", Const(0.0)), let("cnt", Const(0.0))],
+        loop=CursorLoop(Scan("PARTSUPP", schema),
+                        fetch=[("c", "ps_supplycost")],
+                        body=[If(Var("c") > Const(5.0),
+                                 [Assign("tot", Var("tot") + Var("c"))]),
+                              Assign("cnt", Var("cnt") + Const(1.0))]),
+        post=[], returns=("tot", "cnt"))
+    rp = aggify(prog)
+    return AggCall(rp.agg_call.child, rp.agg_call.aggregate,
+                   rp.agg_call.param_binding, rp.agg_call.ordered,
+                   rp.agg_call.sort_keys, rp.agg_call.sort_desc,
+                   group_keys=("ps_partkey",), mode=mode,
+                   max_groups=max_groups)
+
+
+def _ps_catalog(n, ngroups, seed=3):
+    rng = np.random.default_rng(seed)
+    return {"PARTSUPP": Table.from_columns(
+        ps_partkey=np.sort(rng.integers(0, ngroups, n)).astype(np.int32),
+        ps_suppkey=np.zeros(n, np.int32),
+        ps_supplycost=rng.uniform(1, 10, n).astype(np.float32))}
+
+
+def test_grouped_aggcall_bounded_parity():
+    cat = _ps_catalog(2000, 60)
+    env = {"tot": jnp.float32(0.0), "cnt": jnp.float32(0.0)}
+    want = execute(_sum_count_call(), cat, env)
+    for mode in ("auto", "recognized", "stream"):
+        got = execute(_sum_count_call(mode, max_groups=60), cat, env)
+        assert got.capacity == 129
+        w, g = _rows(want), _rows(got)
+        for k in w:
+            np.testing.assert_allclose(w[k], g[k], rtol=1e-6), (mode, k)
+
+
+def test_grouped_aggcall_fused_kernel_bounded(monkeypatch):
+    monkeypatch.setenv("REPRO_SEGAGG_BACKEND", "interpret")
+    cat = _ps_catalog(1024, 40)
+    env = {"tot": jnp.float32(0.0), "cnt": jnp.float32(0.0)}
+    want = _rows(execute(_sum_count_call("stream"), cat, env))
+    got = _rows(execute(_sum_count_call("fused", max_groups=40), cat, env))
+    for k in want:
+        np.testing.assert_allclose(want[k], got[k], rtol=1e-5), k
+
+
+def test_grouped_aggcall_overflow():
+    cat = _ps_catalog(2000, 300)
+    env = {"tot": jnp.float32(0.0), "cnt": jnp.float32(0.0)}
+    with pytest.raises(ValueError, match="dense bound"):
+        execute(_sum_count_call(max_groups=100), cat, env)
+    out = jax.jit(
+        lambda: execute(_sum_count_call(max_groups=100), cat, env))()
+    assert np.all(np.isnan(np.asarray(out.columns["tot"])))
+
+
+# --------------------------------------------------------------------------
+# sharded path: bound smaller than the shard count (subprocess 8-way mesh)
+# --------------------------------------------------------------------------
+
+
+def test_sharded_bounded_in_subprocess_8way_mesh():
+    code = """
+import numpy as np, jax, jax.numpy as jnp
+assert jax.device_count() == 8, jax.device_count()
+from jax.sharding import Mesh
+from repro.relational import GroupAgg, Scan, Table, execute
+
+mesh = Mesh(np.asarray(jax.devices()).reshape(8), ("data",))
+rng = np.random.default_rng(9)
+n = 640
+t = Table.from_columns(
+    k=np.sort(rng.integers(0, 3, n)).astype(np.int32),   # 3 groups < 8 shards
+    v=rng.integers(-40, 40, n).astype(np.float32))
+plan = GroupAgg(Scan("L", ("k", "v")), ("k",),
+                (("s", "sum", "v"), ("c", "count", None),
+                 ("mn", "min", "v"), ("mx", "max", "v")))
+want = execute(plan, {"L": t}).to_numpy()
+import repro.launch.sharded_agg as sa
+calls = []
+orig = sa.sharded_fused_segment_agg
+def spy(vals, segs, valid, num_segments, **kw):
+    calls.append(num_segments)
+    return orig(vals, segs, valid, num_segments, **kw)
+sa.sharded_fused_segment_agg = spy
+bounded = GroupAgg(plan.child, plan.keys, plan.aggs, max_groups=3)
+out = execute(bounded, {"L": t.shard_rows(mesh, "data")})
+got = out.to_numpy()
+assert calls == [129], calls     # all-reduce payload is bound-sized
+assert out.capacity == 129
+for k in want:
+    assert np.array_equal(np.asarray(want[k], np.float32),
+                          np.asarray(got[k], np.float32)), k
+print("OK")
+"""
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env = {**os.environ,
+           "JAX_PLATFORMS": "cpu",
+           "XLA_FLAGS": (os.environ.get("XLA_FLAGS", "") +
+                         " --xla_force_host_platform_device_count=8"),
+           "PYTHONPATH": os.path.abspath(src) + os.pathsep +
+                         os.environ.get("PYTHONPATH", "")}
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, env=env)
+    assert r.returncode == 0 and "OK" in r.stdout, r.stderr
+
+
+# --------------------------------------------------------------------------
+# satellites: dtype parity, var_dtypes threading, deferred_init conflict
+# --------------------------------------------------------------------------
+
+
+def _groupagg_dtypes(fused: bool, monkeypatch):
+    monkeypatch.setenv("REPRO_GROUPAGG_FUSED", "jnp" if fused else "off")
+    t = _table(512, 10)
+    out = execute(_plan(), {"T": t})
+    return {k: np.asarray(v).dtype for k, v in out.columns.items()}
+
+
+def test_fused_vs_per_op_count_mean_dtype_parity(monkeypatch):
+    fused = _groupagg_dtypes(True, monkeypatch)
+    per_op = _groupagg_dtypes(False, monkeypatch)
+    assert fused == per_op
+    assert fused["c"] == np.int32 and fused["avg"] == np.float32
+
+
+def test_fused_vs_per_op_dtype_parity_x64(monkeypatch):
+    prev = jax.config.jax_enable_x64
+    try:
+        jax.config.update("jax_enable_x64", True)
+        fused = _groupagg_dtypes(True, monkeypatch)
+        per_op = _groupagg_dtypes(False, monkeypatch)
+        assert fused["c"] == per_op["c"] == np.int64
+        assert fused["avg"] == per_op["avg"]
+    finally:
+        jax.config.update("jax_enable_x64", prev)
+
+
+def test_grouped_var_dtypes_resolution():
+    """grouped_agg_call must resolve missing aggregate fields via
+    var_dtypes (the ungrouped path always did) instead of forcing
+    float32."""
+    from repro.core.aggify import build_aggregate
+    from repro.core.executors import execute_agg_call
+    from repro.core.loop_ir import Col, Var
+    from tests.helpers import fig1_catalog, fig1_program
+
+    prog = fig1_program()
+    agg = build_aggregate(prog)
+    from repro.relational.plan import Join
+    q = Join(Scan("PARTSUPP", ("ps_partkey", "ps_suppkey", "ps_supplycost")),
+             Scan("SUPPLIER", ("s_suppkey", "s_name")),
+             left_key="ps_suppkey", right_key="s_suppkey", how="inner")
+    call = AggCall(child=q, aggregate=agg,
+                   param_binding=(("pCost", Col("ps_supplycost")),
+                                  ("sName", Col("s_name")),
+                                  ("minCost", Var("minCost")),
+                                  ("lb", Var("lb"))),
+                   group_keys=("ps_partkey",))
+    env = {"minCost": jnp.float32(100000.0), "lb": jnp.float32(0.0)}
+    # suppName deliberately absent from env: dtype must come from
+    # var_dtypes, not the float32 fallback
+    out = execute_agg_call(call, fig1_catalog(), env,
+                           var_dtypes=prog.var_dtypes)
+    assert np.asarray(out.columns["suppName"]).dtype == np.int32
+    got = out.to_numpy()
+    assert dict(zip(got["ps_partkey"], got["suppName"])) == {0: 101, 1: 101}
+    # the engine's plan-execution path (execute(AggCall)) has no
+    # var_dtypes parameter: the aggregate carries Program.var_dtypes
+    # itself, so the dtype survives there too
+    out2 = execute(call, fig1_catalog(), env)
+    assert np.asarray(out2.columns["suppName"]).dtype == np.int32
+
+
+def test_deferred_init_rejects_explicit_parallel_modes():
+    from repro.core import Assign, Const, CursorLoop, Program, Var, let
+    from repro.core.aggify import aggify
+    from repro.core.executors import run_rewritten
+    cat = {"T": Table.from_columns(x=np.array([1., 2., 3.], np.float32))}
+    prog = Program(
+        "s", params=(), pre=[let("acc", Const(0.0))],
+        loop=CursorLoop(Scan("T", ("x",)), fetch=[("vx", "x")],
+                        body=[Assign("acc", Var("acc") + Var("vx"))]),
+        post=[], returns=("acc",))
+    rp = aggify(prog)
+    for mode in ("recognized", "chunked", "fused"):
+        with pytest.raises(ValueError, match="deferred_init"):
+            run_rewritten(rp, cat, mode=mode, deferred_init=True)
+    # auto / explicit stream still run (deferred streaming fold)
+    a = run_rewritten(rp, cat, deferred_init=True)
+    b = run_rewritten(rp, cat, mode="stream", deferred_init=True)
+    assert float(a["acc"]) == float(b["acc"]) == 6.0
