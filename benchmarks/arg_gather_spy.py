@@ -1,0 +1,160 @@
+"""Structural CI gate: the fused grouped arg-extremum lowering must issue
+NO row-capacity-sized gather.
+
+Before the kernel's index moment, every fused ``arg_group`` update paid a
+full-row hit-detection pass on jnp: ``take(best, seg)`` (an (N,)-sized
+gather) plus an (N,)-element candidate reduce.  The index moment moved the
+attaining-row pick into the kernel, leaving a single num_segments-sized
+payload take.  This spy pins that property on the *traced program* so the
+tentpole cannot silently regress:
+
+1. **Tail spy** — the jaxpr of ``_arg_select_from_index`` (the post-kernel
+   consumption) on the bench shape contains no gather with a row-sized
+   output; its only gathers are (num_segments,)-sized payload takes.
+2. **Whole-program spy** — the fused grouped-argmin bench program traces
+   to exactly as many row-sized gathers as the no-arg (min/max) baseline
+   over the same table: the group sort accounts for all of them, the arg
+   selection adds ZERO.
+3. **Detector sanity** — the SAME argmin program with the index moment
+   force-disabled (``INDEX_EXACT_ROWS`` patched to 0, which re-enables
+   the legacy hit-detection select) traces to strictly more row-sized
+   gathers, proving the spy would catch a regression to that lowering.
+
+Run as a module (the CI step) or import the helpers from tests:
+
+    PYTHONPATH=src python -m benchmarks.arg_gather_spy
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.jaxpr_spy import (count_row_sized_gathers,
+                                      gather_output_sizes)
+from repro.relational import execute
+
+
+def trace_grouped(prog, env, cat, mode, backend, max_groups):
+    """Closed jaxpr of the grouped AggCall execution under ``backend``.
+
+    A dense group bound is declared so segment-sized tensors (the legal
+    num_segments-scale takes) are statically distinguishable from
+    row-capacity-sized ones (the scale the spy forbids) — without it
+    ``num_segments == capacity`` and the two coincide."""
+    from repro.core import aggify
+    from repro.relational.plan import AggCall
+    rp = aggify(prog)
+    call = AggCall(rp.agg_call.child, rp.agg_call.aggregate,
+                   rp.agg_call.param_binding, rp.agg_call.ordered,
+                   rp.agg_call.sort_keys, rp.agg_call.sort_desc,
+                   group_keys=("ps_partkey",), mode=mode,
+                   max_groups=max_groups)
+    prev = os.environ.get("REPRO_SEGAGG_BACKEND")
+    os.environ["REPRO_SEGAGG_BACKEND"] = backend
+    try:
+        def run():
+            t = execute(call, cat, env)
+            return tuple(t.columns.values()) + (t.valid,)
+        return jax.make_jaxpr(run)()
+    finally:
+        if prev is None:
+            os.environ.pop("REPRO_SEGAGG_BACKEND", None)
+        else:
+            os.environ["REPRO_SEGAGG_BACKEND"] = prev
+
+
+def whole_program_row_gathers(n: int = 50_000, ngroups: int = 512,
+                              backend: str = "jnp") -> dict[str, int]:
+    """Row-sized-gather counts of the bench-shape grouped programs:
+    the fused argmin (index moment), the no-arg fused min/max baseline
+    over the same table, and the SAME fused argmin with the index moment
+    force-disabled (the legacy hit-detection select)."""
+    import importlib
+    sk = importlib.import_module("repro.kernels.segment_agg")
+    from benchmarks.group_agg import _catalog, _programs
+    cat = _catalog(n, ngroups)
+    progs = _programs()
+    argmin_prog, argmin_env = progs["argmin"]
+    minmax_prog, minmax_env = progs["minmax"]
+    counts = {
+        "fused_argmin": count_row_sized_gathers(
+            trace_grouped(argmin_prog, argmin_env, cat, "fused", backend,
+                          ngroups), n),
+        "fused_minmax_baseline": count_row_sized_gathers(
+            trace_grouped(minmax_prog, minmax_env, cat, "fused", backend,
+                          ngroups), n),
+    }
+    saved = sk.INDEX_EXACT_ROWS
+    sk.INDEX_EXACT_ROWS = 0      # no row count is index-exact -> legacy tail
+    try:
+        counts["fused_argmin_legacy_select"] = count_row_sized_gathers(
+            trace_grouped(argmin_prog, argmin_env, cat, "fused", backend,
+                          ngroups), n)
+    finally:
+        sk.INDEX_EXACT_ROWS = saved
+    return counts
+
+
+def tail_gather_sizes(n: int = 50_000,
+                      num_segments: int = 513) -> list[int]:
+    """Gather output sizes in the jaxpr of the fused arg-extremum tail
+    (``_arg_select_from_index``) at the bench shape."""
+    from repro.core.executors import _arg_select_from_index
+    from repro.core.loop_ir import Var
+    from repro.core.recognize import FieldUpdate
+
+    u = FieldUpdate("arg_group", ("mc", "bs"), (Var("c"), Var("s")),
+                    guard=None, op="<")
+
+    def tail(best, pick, cvals, svals):
+        col_env = {"c": cvals, "s": svals}
+        outer = {"mc": jnp.float32(1e9), "bs": jnp.int32(-1)}
+        out: dict = {}
+        _arg_select_from_index(u, outer, col_env, best, pick, n, out)
+        return out["mc"], out["bs"]
+
+    closed = jax.make_jaxpr(tail)(
+        jax.ShapeDtypeStruct((num_segments,), jnp.float32),
+        jax.ShapeDtypeStruct((num_segments,), jnp.int32),
+        jax.ShapeDtypeStruct((n,), jnp.float32),
+        jax.ShapeDtypeStruct((n,), jnp.int32))
+    return gather_output_sizes(closed)
+
+
+def main() -> int:
+    n, ngroups = 50_000, 512
+    failures = []
+
+    sizes = tail_gather_sizes(n)
+    print(f"tail (_arg_select_from_index) gather output sizes: {sizes}")
+    if any(s >= n for s in sizes):
+        failures.append(f"arg-select tail issues a row-sized gather: {sizes}")
+
+    for backend, (bn, bg) in (("jnp", (n, ngroups)),
+                              ("interpret", (2_000, 64))):
+        counts = whole_program_row_gathers(bn, bg, backend)
+        print(f"[{backend} n={bn}] row-sized gathers: {counts}")
+        if counts["fused_argmin"] != counts["fused_minmax_baseline"]:
+            failures.append(
+                f"[{backend}] fused argmin adds row-sized gathers over the "
+                f"no-arg baseline: {counts}")
+        if counts["fused_argmin_legacy_select"] <= counts["fused_argmin"]:
+            failures.append(
+                f"[{backend}] detector sanity: the legacy hit-detection "
+                f"select should trace to MORE row-sized gathers: {counts}")
+
+    if failures:
+        for f in failures:
+            print("FAIL:", f, file=sys.stderr)
+        return 1
+    print("OK: fused arg-extremum issues no row-capacity-sized gather "
+          "(tail gathers are num_segments-sized; whole program matches the "
+          "no-arg baseline; detector catches the legacy lowering)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,122 @@
+"""CI benchmark regression gate (stdlib-only — runs before PYTHONPATH/jax).
+
+Compares a freshly produced ``bench_group_agg.json`` (``benchmarks/run.py
+--json``) against the committed CPU baseline ``BENCH_group_agg.json``:
+
+* every **timed** row of the baseline (``us_per_call`` above a noise
+  floor) must still exist in the fresh run — a renamed/dropped row would
+  silently remove gate coverage — and must not regress beyond
+  ``--threshold`` (default 2.5×, sized for shared CI runners; structural
+  regressions like an accidental O(rows) gather or a lost fusion blow
+  far past it, run-to-run CPU noise does not);
+* the dense-group-bound accounting rows (``groupagg_dense_bound_*``)
+  must keep ``bounded < capacity`` on both the launched-grid and
+  moment-bytes axes (previously a one-off inline assert in the
+  workflow);
+* a delta table of every row is printed so the perf trajectory is
+  readable from the CI log.
+
+Exit code 1 on any regression, missing row, or accounting violation.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import re
+import sys
+
+#: rows at/below this baseline time are too noisy to gate on CI runners
+TIMED_FLOOR_US = 100.0
+
+#: accounting rows whose ``derived`` field must keep bounded < capacity
+DENSE_BOUND_ROWS = ("groupagg_dense_bound_grid_steps",
+                    "groupagg_dense_bound_moment_bytes")
+
+
+def load_rows(path: str) -> dict[str, dict]:
+    with open(path) as f:
+        doc = json.load(f)
+    return {r["name"]: r for r in doc.get("results", [])}
+
+
+def check_dense_bound(fresh: dict[str, dict]) -> list[str]:
+    errors = []
+    for name in DENSE_BOUND_ROWS:
+        row = fresh.get(name)
+        if row is None:
+            errors.append(f"{name}: accounting row missing from fresh run")
+            continue
+        m = re.search(r"bounded=(\d+)_capacity=(\d+)", row.get("derived", ""))
+        if not m:
+            errors.append(f"{name}: derived field not parseable: "
+                          f"{row.get('derived')!r}")
+            continue
+        bounded, capacity = int(m.group(1)), int(m.group(2))
+        if bounded >= capacity:
+            errors.append(f"{name}: bounded={bounded} is not smaller than "
+                          f"capacity={capacity}")
+        else:
+            print(f"{name}: bounded={bounded} < capacity={capacity}")
+    return errors
+
+
+def gate(fresh: dict[str, dict], baseline: dict[str, dict],
+         threshold: float) -> list[str]:
+    errors = []
+    width = max((len(n) for n in baseline), default=20)
+    print(f"{'row':<{width}}  {'base us':>12}  {'fresh us':>12}  "
+          f"{'ratio':>7}  status")
+    for name, brow in sorted(baseline.items()):
+        base_us = float(brow.get("us_per_call", 0.0))
+        if base_us <= TIMED_FLOOR_US:
+            continue                       # accounting / noise-floor rows
+        frow = fresh.get(name)
+        if frow is None:
+            errors.append(f"{name}: timed baseline row missing from the "
+                          f"fresh run (renamed? gate coverage lost)")
+            print(f"{name:<{width}}  {base_us:>12.1f}  {'—':>12}  "
+                  f"{'—':>7}  MISSING")
+            continue
+        fresh_us = float(frow.get("us_per_call", 0.0))
+        ratio = fresh_us / base_us if base_us else float("inf")
+        status = "ok"
+        if ratio > threshold:
+            status = f"REGRESSED (> {threshold:.1f}x)"
+            errors.append(f"{name}: {base_us:.1f}us -> {fresh_us:.1f}us "
+                          f"({ratio:.2f}x > {threshold:.1f}x)")
+        print(f"{name:<{width}}  {base_us:>12.1f}  {fresh_us:>12.1f}  "
+              f"{ratio:>6.2f}x  {status}")
+    for name in sorted(set(fresh) - set(baseline)):
+        if float(fresh[name].get("us_per_call", 0.0)) > TIMED_FLOOR_US:
+            print(f"{name:<{width}}  {'—':>12}  "
+                  f"{float(fresh[name]['us_per_call']):>12.1f}  {'—':>7}  "
+                  f"new (not gated; commit a fresh baseline to gate it)")
+    return errors
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--fresh", required=True,
+                    help="bench JSON produced by this CI run")
+    ap.add_argument("--baseline", required=True,
+                    help="committed baseline (BENCH_group_agg.json)")
+    ap.add_argument("--threshold", type=float, default=2.5,
+                    help="max allowed fresh/base time ratio per timed row")
+    args = ap.parse_args(argv)
+
+    fresh = load_rows(args.fresh)
+    baseline = load_rows(args.baseline)
+    errors = gate(fresh, baseline, args.threshold)
+    errors += check_dense_bound(fresh)
+    if errors:
+        print()
+        for e in errors:
+            print("FAIL:", e, file=sys.stderr)
+        return 1
+    print("\nOK: no timed row regressed beyond "
+          f"{args.threshold:.1f}x; dense-bound accounting holds")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -156,6 +156,17 @@ def run(n: int = 50_000, ngroups: int = 512, repeats: int = 3,
          f"capacity={moment_tensor_bytes(1, n)}_"
          f"max_groups={ngroups}")
 
+    # arg-extremum structure: with the kernel's index moment, the fused
+    # argmin lowering adds NO row-sized gathers over the no-arg baseline
+    # (the group sort owns them all); the legacy hit-detection select
+    # would add one.  benchmarks/arg_gather_spy.py gates this in CI; the
+    # row keeps the counts visible in the artifact trajectory.
+    from benchmarks.arg_gather_spy import whole_program_row_gathers
+    g = whole_program_row_gathers(n, ngroups, "jnp")
+    emit("groupagg_argmin_row_gathers", 0.0,
+         f"fused={g['fused_argmin']}_baseline={g['fused_minmax_baseline']}_"
+         f"legacy_select={g['fused_argmin_legacy_select']}")
+
     for name, (prog, env) in _programs().items():
         us_stream = _run_mode(_grouped(prog, "stream"), cat, env,
                               repeats=repeats)

@@ -92,6 +92,26 @@ def argmin_agg(dtype=F32) -> Aggregate:
                      merge=merge, identity=identity)
 
 
+def argmax_agg(dtype=F32) -> Aggregate:
+    """argmax with payload — the mirror of ``argmin_agg`` (strict >:
+    first attaining row wins, earlier chunk wins on merge ties).  The
+    algebra the engine's GroupAgg ``argmax`` op and the fused kernel's
+    ``argmax_first`` index moment both lower."""
+    def identity():
+        return {"k": jnp.array(-jnp.inf, dtype),
+                "p": jnp.zeros((), jnp.int32)}
+    def accumulate(st, row):
+        better = row["key"].astype(dtype) > st["k"]
+        return {"k": jnp.where(better, row["key"].astype(dtype), st["k"]),
+                "p": jnp.where(better, row["payload"], st["p"])}
+    def merge(a, b):
+        take_b = b["k"] > a["k"]
+        return {"k": jnp.where(take_b, b["k"], a["k"]),
+                "p": jnp.where(take_b, b["p"], a["p"])}
+    return Aggregate("argmax", identity, accumulate, lambda st: st["p"],
+                     merge=merge, identity=identity)
+
+
 def var_agg(dtype=F32) -> Aggregate:
     """Welford/Chan parallel variance — a nontrivial Merge (the class of
     aggregate the paper's streaming-only engine cannot parallelize but the
@@ -119,5 +139,6 @@ def var_agg(dtype=F32) -> Aggregate:
 
 BUILTINS = {
     "sum": sum_agg, "count": count_agg, "min": min_agg, "max": max_agg,
-    "avg": avg_agg, "argmin": argmin_agg, "var": var_agg,
+    "avg": avg_agg, "argmin": argmin_agg, "argmax": argmax_agg,
+    "var": var_agg,
 }

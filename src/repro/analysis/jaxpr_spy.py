@@ -1,0 +1,75 @@
+"""Structural jaxpr spies: assert properties of a traced program that
+timing cannot (and unit values will not) catch.
+
+The first client is the fused arg-extremum acceptance bound: the grouped
+argmin/argmax lowering must issue NO row-capacity-sized gather — the
+kernel's index moment replaced the ``take(best, seg)`` hit-detection scan
+and the full-row candidate reduce, and the jnp fallback computes the index
+with a segmented ``associative_scan`` (slices, not gathers).  The group
+sort itself legitimately gathers full rows, so the spy compares against a
+no-arg baseline program rather than demanding zero: the arg-extremum must
+add nothing row-sized (``benchmarks/arg_gather_spy.py``, a tier-1 test,
+and a dedicated CI step all assert it).
+
+Counting is done on the CLOSED jaxpr, pre-optimization: every ``jnp.take``
+/ advanced-index lowers to the ``gather`` primitive there, the counts are
+deterministic (no backend fusion heuristics), and sub-jaxprs — jit calls,
+scan bodies, shard_map bodies, and interpret-mode ``pallas_call`` kernels
+— are walked recursively, so nothing hides inside a call boundary.
+"""
+from __future__ import annotations
+
+import math
+from typing import Iterator
+
+from jax.extend import core as _core
+
+
+def _sub_jaxprs(params) -> Iterator["_core.Jaxpr"]:
+    for v in params.values():
+        yield from _as_jaxprs(v)
+
+
+def _as_jaxprs(v) -> Iterator["_core.Jaxpr"]:
+    if isinstance(v, _core.ClosedJaxpr):
+        yield v.jaxpr
+    elif isinstance(v, _core.Jaxpr):
+        yield v
+    elif isinstance(v, (tuple, list)):
+        for x in v:
+            yield from _as_jaxprs(x)
+
+
+def iter_eqns(jaxpr) -> Iterator:
+    """Every equation of ``jaxpr`` and, recursively, of every sub-jaxpr
+    carried in equation params (pjit, scan, while, shard_map, pallas_call,
+    custom_* wrappers, ...)."""
+    if isinstance(jaxpr, _core.ClosedJaxpr):
+        jaxpr = jaxpr.jaxpr
+    for eqn in jaxpr.eqns:
+        yield eqn
+        for sub in _sub_jaxprs(eqn.params):
+            yield from iter_eqns(sub)
+
+
+def gather_output_sizes(jaxpr) -> list[int]:
+    """Flattened output element count of every ``gather`` equation in the
+    (closed) jaxpr, recursing through call boundaries."""
+    sizes = []
+    for eqn in iter_eqns(jaxpr):
+        if eqn.primitive.name == "gather":
+            shape = getattr(eqn.outvars[0].aval, "shape", ())
+            sizes.append(int(math.prod(shape)))
+    return sizes
+
+
+def count_row_sized_gathers(jaxpr, n: int) -> int:
+    """Number of gather equations whose OUTPUT is at least row-set-sized.
+
+    This is the acceptance metric of the fused arg-extremum path: a
+    ``take(best, seg)`` hit-detection scan materializes an (N,)-sized
+    gather output, while the index-moment lowering's payload take outputs
+    only (num_segments,) elements.  Gathers *reading* a row-sized operand
+    but emitting a segment-sized result are intentionally not counted —
+    output size is what the collective/memory cost scales with."""
+    return sum(1 for s in gather_output_sizes(jaxpr) if s >= n)

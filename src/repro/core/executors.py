@@ -17,11 +17,15 @@ Aggify paths (§5/§6 + our beyond-paper parallel modes):
                             fused Pallas segment-aggregate kernel
                             (kernels/segment_agg.py) — one VMEM-resident
                             pass computes every sum/count/min/max moment
-                            for every recognized column; remaining update
-                            kinds (arg_group/last/prod) stay on jnp segment
-                            ops in the same XLA program.  Ungrouped, the
-                            closed form is already one fused pass, so
-                            'fused' coincides with 'recognized'.
+                            AND the arg-extremum attaining-row index (the
+                            kernel's index moment, tie-ordered) for every
+                            recognized column; payload selection is then a
+                            num_segments-sized take, and the remaining
+                            update kinds (last/prod, wide-dtype fields)
+                            stay on jnp segment ops in the same XLA
+                            program.  Ungrouped, the closed form is
+                            already one fused pass, so 'fused' coincides
+                            with 'recognized'.
   * ``mode='auto'``       — fused > recognized > chunked > stream.
 
 Grouped invocation (``AggCall.group_keys``) decorrelates per-group loops
@@ -183,8 +187,9 @@ def fused_eligible(agg: CustomAggregate) -> bool:
     """True when the accumulator decomposes into moments the fused Pallas
     segment-aggregate kernel computes: at least one recognized sum/min/max
     update (counts are sums of 1; means are sum/count) or an argmin/argmax
-    group whose key extremum comes from the kernel's min/max rows (payload
-    selection stays on jnp gathers in the same XLA program)."""
+    group, whose key extremum AND attaining-row index both come from the
+    kernel (the index moment) — payload selection is then a single
+    num_segments-sized take in the same XLA program."""
     return (agg.recognized is not None and not agg.local_tables
             and any(u.kind in ("sum", "min", "max", "arg_group")
                     for u in agg.recognized))
@@ -389,24 +394,56 @@ def _segagg_backend() -> str:
     return "pallas" if on_tpu else "jnp"
 
 
+def _f32_exact_key_dtype(dt) -> bool:
+    """True when every value of ``dt`` survives the cast to the kernel's
+    f32 accumulator exactly: ≤32-bit floats (f16/bf16 embed exactly),
+    bools, and ≤16-bit ints.  Wide ints and float64 can collide after the
+    cast, which would mis-pick the attaining row of an arg-extremum — key
+    expressions of those dtypes route to the exact jnp path (mirroring
+    the f32-exactness gating of the count/mean built-ins)."""
+    d = jnp.dtype(dt)
+    if jnp.issubdtype(d, jnp.floating):
+        return d.itemsize <= 4
+    if d == jnp.bool_:
+        return True
+    if jnp.issubdtype(d, jnp.integer):
+        return d.itemsize <= 2
+    return False
+
+
 def _grouped_fused(agg, rows, outer_vals, valid, seg, num_segments, backend="auto",
                    require_kernel=False, shard_route=None):
     """Fused grouped aggregation: every recognized sum/min/max/arg-extremum
     update over a ≤32-bit floating field is batched into ONE fused
     segment-aggregate pass (each column carries its own guard mask, so
     differently-guarded updates still share the traversal); remaining
-    updates (prod/last, float64/integer fields) run on the jnp segment
-    path in the same XLA program.  ``require_kernel`` (an explicit
-    ``mode='fused'`` request) raises instead of silently running a
-    kernel-free pass when every update is dtype-routed to jnp.
-    ``shard_route`` = (mesh, axis) routes the kernel pass through
-    ``launch.sharded_agg.sharded_fused_segment_agg`` — one kernel launch
-    per row shard, moments all-reduced over the mesh axis."""
-    from repro.kernels.segment_agg import fused_segment_agg
+    updates (prod/last, float64/integer fields, wide-int/f64 arg-extremum
+    keys) run on the jnp segment path in the same XLA program.
+
+    Arg-extremum updates additionally request the kernel's INDEX MOMENT:
+    the attaining row index comes back as output rows 4/5 with the loop's
+    tie order, so the whole update is consumed with a num_segments-sized
+    payload take — no hit-detection equality scan, no full-row candidate
+    reduce, no row-capacity-sized gather (``_arg_select_from_index``).
+
+    ``require_kernel`` (an explicit ``mode='fused'`` request) raises
+    instead of silently running a kernel-free pass when every update is
+    dtype-routed to jnp.  ``shard_route`` = (mesh, axis) routes the kernel
+    pass through ``launch.sharded_agg.sharded_fused_segment_agg`` — one
+    kernel launch per row shard, moments all-reduced over the mesh axis,
+    arg-extremum payloads gathered shard-locally and merged as
+    O(num_segments) collectives (never O(rows))."""
+    from repro.kernels.segment_agg import (ARGMAX_ROW, ARGMIN_ROW,
+                                           fused_segment_agg,
+                                           index_moment_ok)
 
     col_env = dict(outer_vals)
     col_env.update(rows)
     n = valid.shape[0]
+    # f32 row indices are exact below 2^24 PADDED rows (the same gate the
+    # kernel validates); beyond that the arg-extremum keeps the kernel
+    # key extremum but falls back to the legacy jnp pick
+    use_index = index_moment_ok(n)
 
     kernel_updates = []
     rest = []
@@ -414,12 +451,19 @@ def _grouped_fused(agg, rows, outer_vals, valid, seg, num_segments, backend="aut
         d = jnp.asarray(outer_vals[u.fields[0]]).dtype
         # the kernel accumulates in f32: float64 fields would silently
         # lose precision, so they stay on the jnp path in their own dtype
-        if (u.kind in ("sum", "min", "max", "arg_group")
-                and jnp.issubdtype(d, jnp.floating)
-                and jnp.dtype(d).itemsize <= 4):
-            kernel_updates.append(u)
-        else:
-            rest.append(u)
+        ok = (u.kind in ("sum", "min", "max", "arg_group")
+              and jnp.issubdtype(d, jnp.floating)
+              and jnp.dtype(d).itemsize <= 4)
+        if ok and u.kind == "arg_group":
+            # ... and so would wide-int/f64 KEY EXPRESSIONS (not just
+            # fields): distinct keys that collide in f32 would mis-pick
+            # the attaining row, so those route to the exact path too
+            # (eval_shape: the dtype probe must not evaluate the N-row
+            # expression a second time under eager execution)
+            ok = _f32_exact_key_dtype(
+                jax.eval_shape(lambda u=u: jnp.asarray(
+                    eval_expr(u.exprs[0], col_env))).dtype)
+        (kernel_updates if ok else rest).append(u)
     if require_kernel and not kernel_updates:
         raise ValueError(
             f"aggregate {agg.name!r}: no recognized update targets a ≤32-bit "
@@ -431,10 +475,23 @@ def _grouped_fused(agg, rows, outer_vals, valid, seg, num_segments, backend="aut
         cols = []
         masks = []
         moments: list[set] = []    # per kernel column
-        col_of: dict = {}          # (expr, guard) -> kernel column index
+        col_of: dict = {}          # (expr, guard[, tie]) -> column index
         upd_col = []
+        upd_mname = []             # index-moment name per update (or None)
         for u in kernel_updates:
             ck = (u.exprs[0], u.guard)
+            mname = None
+            if u.kind == "arg_group" and use_index:
+                minimize = u.op in ("<", "<=")
+                tie_first = u.op in ("<", ">")
+                mname = (("argmin" if minimize else "argmax")
+                         + ("_first" if tie_first else "_last"))
+                conflict = (("argmin" if minimize else "argmax")
+                            + ("_last" if tie_first else "_first"))
+                if ck in col_of and conflict in moments[col_of[ck]]:
+                    # one index row per extremum direction: an update with
+                    # the opposite tie order gets its own column
+                    ck = ck + (mname,)
             if ck not in col_of:    # min+max over one column share a pass
                 g = valid
                 if u.guard is not None:
@@ -448,36 +505,70 @@ def _grouped_fused(agg, rows, outer_vals, valid, seg, num_segments, backend="aut
                 moments.append(set())
             c = col_of[ck]
             upd_col.append(c)
+            upd_mname.append(mname)
             if u.kind == "arg_group":
                 moments[c].add("min" if u.op in ("<", "<=") else "max")
+                if mname is not None:
+                    moments[c].add(mname)
             else:
                 moments[c].add(u.kind)
         kernel_moments = tuple(tuple(sorted(ms)) for ms in moments)
+
+        # sharded route: payload candidates are gathered SHARD-LOCALLY and
+        # merged inside the all-reduce, so evaluate them up front
+        payload_specs = []
+        payload_slot = {}          # update position -> slot in the result
+        if shard_route is not None:
+            for j, (u, c, mname) in enumerate(zip(kernel_updates, upd_col,
+                                                  upd_mname)):
+                if mname is None:
+                    continue
+                pvals = tuple(
+                    jnp.broadcast_to(
+                        jnp.asarray(eval_expr(pe, col_env),
+                                    jnp.asarray(outer_vals[f]).dtype), (n,))
+                    for f, pe in zip(u.fields[1:], u.exprs[1:]))
+                payload_slot[j] = len(payload_specs)
+                payload_specs.append((c, u.op in ("<", "<="), pvals))
+
         # the grouped sort established the sorted-segs precondition by
         # construction, so the band-pruned kernel skips its guard
+        payload_picks = ()
         if shard_route is not None:
             from repro.launch.sharded_agg import sharded_fused_segment_agg
-            fused = sharded_fused_segment_agg(
+            res = sharded_fused_segment_agg(
                 jnp.stack(cols, axis=1), seg.astype(jnp.int32),
                 jnp.stack(masks, axis=1), num_segments, mesh=shard_route[0],
                 axis=shard_route[1], backend=backend,
-                moments=kernel_moments, assume_sorted=True)
+                moments=kernel_moments, assume_sorted=True,
+                payloads=tuple(payload_specs))
+            fused, payload_picks = res if payload_specs else (res, ())
         else:
             fused = fused_segment_agg(
                 jnp.stack(cols, axis=1), seg.astype(jnp.int32),
                 jnp.stack(masks, axis=1), num_segments, backend=backend,
                 moments=kernel_moments, assume_sorted=True)
-        for u, c in zip(kernel_updates, upd_col):
+        for j, (u, c) in enumerate(zip(kernel_updates, upd_col)):
             f = u.fields[0]
             d = jnp.asarray(outer_vals[f]).dtype
             g, key = masks[c], cols[c]
             if u.kind == "arg_group":
                 minimize = u.op in ("<", "<=")
                 best = fused[c, 2 if minimize else 3].astype(d)
-                worst = _recognize._MINMAX_ID["min" if minimize else "max"](d)
-                masked = jnp.where(g, key.astype(d), worst)
-                _arg_group_select(u, outer_vals, col_env, g, masked, best,
-                                  seg, num_segments, out)
+                if upd_mname[j] is not None:
+                    pick = _index_row_to_pick(
+                        fused[c, ARGMIN_ROW if minimize else ARGMAX_ROW],
+                        n, tie_first=u.op in ("<", ">"))
+                    pre = (payload_picks[payload_slot[j]]
+                           if j in payload_slot else None)
+                    _arg_select_from_index(u, outer_vals, col_env, best,
+                                           pick, n, out, payloads=pre)
+                else:
+                    worst = _recognize._MINMAX_ID[
+                        "min" if minimize else "max"](d)
+                    masked = jnp.where(g, key.astype(d), worst)
+                    _arg_group_select(u, outer_vals, col_env, g, masked,
+                                      best, seg, num_segments, out)
                 continue
             r = fused[c, {"sum": 0, "min": 2, "max": 3}[u.kind]].astype(d)
             if u.kind == "sum":
@@ -492,29 +583,63 @@ def _grouped_fused(agg, rows, outer_vals, valid, seg, num_segments, backend="aut
     return out
 
 
+def _index_row_to_pick(idx_row: jax.Array, n: int,
+                       tie_first: bool) -> jax.Array:
+    """Convert a kernel index-moment row (f32, tie identity ±inf for empty
+    segments) to the int32 pick convention of the select tails: ``n`` is
+    the empty sentinel for first-attaining tie order, ``-1`` for
+    last-attaining.  The ±inf → sentinel mapping happens in f32, BEFORE
+    the int cast (casting inf to int is undefined)."""
+    if tie_first:
+        return jnp.where(idx_row < n, idx_row, n).astype(jnp.int32)
+    return jnp.where(idx_row >= 0, idx_row, -1).astype(jnp.int32)
+
+
+def _arg_select_from_index(u, outer_vals, col_env, best, pick, n, out,
+                           payloads=None) -> None:
+    """Arg-extremum tail on the kernel's index moment: the attaining row
+    arrives directly from the fused pass (tie order already applied), so
+    the legacy hit-detection equality scan, the full-row candidate reduce,
+    and the row-set-sized ``take(best, seg)`` all disappear — the only
+    remaining data movement is ONE num_segments-sized payload take per
+    payload column.  ``payloads`` (the sharded path) are per-segment
+    candidates already gathered shard-locally; then no local take runs at
+    all.  The beat-compare against the pre-loop state is unchanged."""
+    kf = u.fields[0]
+    got = (pick >= 0) & (pick < n)
+    cmp = {"<": best < outer_vals[kf], "<=": best <= outer_vals[kf],
+           ">": best > outer_vals[kf], ">=": best >= outer_vals[kf]}[u.op]
+    beat = cmp & got
+    out[kf] = jnp.where(beat, best, outer_vals[kf])
+    safe = jnp.clip(pick, 0, n - 1)
+    for i, (f, pe) in enumerate(zip(u.fields[1:], u.exprs[1:])):
+        pd = jnp.asarray(outer_vals[f]).dtype
+        if payloads is not None:
+            pv_pick = payloads[i].astype(pd)
+        else:
+            pv = jnp.broadcast_to(jnp.asarray(eval_expr(pe, col_env), pd),
+                                  (n,))
+            pv_pick = jnp.take(pv, safe)
+        out[f] = jnp.where(beat, pv_pick, outer_vals[f])
+
+
 def _arg_group_select(u, outer_vals, col_env, g, masked, best, seg, num_segments,
                       out) -> None:
-    """Shared tail of the grouped argmin/argmax lowering: given the
-    per-segment key extremum ``best`` (from the fused kernel or jnp segment
-    ops), pick the attaining row (first for strict comparisons, last for
+    """Legacy tail of the grouped argmin/argmax lowering (the jnp
+    recognized path and the >2^24-row kernel fallback): given the
+    per-segment key extremum ``best``, pick the attaining row with a
+    hit-detection equality scan (first for strict comparisons, last for
     non-strict — matching the sequential loop's tie order), gather the
-    payload columns, and beat-compare against the pre-loop state."""
+    payload columns, and beat-compare against the pre-loop state.  The
+    fused path replaces this with ``_arg_select_from_index`` (the kernel's
+    index moment), which issues no row-capacity-sized gather."""
     n = masked.shape[0]
     idx = jnp.arange(n)
-    kf = u.fields[0]
     hit = g & (masked == jnp.take(best, seg))
     cand = jnp.where(hit, idx, (n if u.op in ("<", ">") else -1))
     pickfn = jax.ops.segment_min if u.op in ("<", ">") else jax.ops.segment_max
     pick = pickfn(cand, seg, num_segments=num_segments)
-    safe = jnp.clip(pick, 0, n - 1)
-    cmp = {"<": best < outer_vals[kf], "<=": best <= outer_vals[kf],
-           ">": best > outer_vals[kf], ">=": best >= outer_vals[kf]}[u.op]
-    beat = cmp & (pick < n) & (pick >= 0)
-    out[kf] = jnp.where(beat, best, outer_vals[kf])
-    for f, pe in zip(u.fields[1:], u.exprs[1:]):
-        pd = jnp.asarray(outer_vals[f]).dtype
-        pv = jnp.broadcast_to(jnp.asarray(eval_expr(pe, col_env), pd), (n,))
-        out[f] = jnp.where(beat, jnp.take(pv, safe), outer_vals[f])
+    _arg_select_from_index(u, outer_vals, col_env, best, pick, n, out)
 
 
 def _grouped_recognized(agg, rows, outer_vals, valid, seg, num_segments,

@@ -30,6 +30,33 @@ def fused_segment_agg_ref(vals: jax.Array, segs: jax.Array, valid: jax.Array,
     return jnp.stack(cols, axis=0)
 
 
+def segment_arg_index_ref(keys: jax.Array, segs: jax.Array,
+                          valid: jax.Array, num_segments: int, *,
+                          minimize: bool, tie_first: bool) -> jax.Array:
+    """Oracle for the kernel's index moment: the row index attaining each
+    segment's key extremum, first- or last-attaining on ties, valid rows
+    only.  Deliberately the classic hit-detection formulation (segment
+    extremum + equality scan + candidate reduce) — the very lowering the
+    index moment replaces — so the kernel is pinned against independent
+    math.  Returns int32 with the empty-segment sentinel ``n`` for
+    first-attaining tie order, ``-1`` for last-attaining."""
+    n = keys.shape[0]
+    k = keys.astype(jnp.float32)
+    worst = jnp.inf if minimize else -jnp.inf
+    masked = jnp.where(valid, k, worst)
+    segf = jax.ops.segment_min if minimize else jax.ops.segment_max
+    best = segf(masked, segs, num_segments=num_segments)
+    hit = valid & (masked == jnp.take(best, segs))
+    idx = jnp.arange(n, dtype=jnp.int32)
+    if tie_first:
+        cand = jnp.where(hit, idx, n)
+        r = jax.ops.segment_min(cand, segs, num_segments=num_segments)
+        return jnp.minimum(r, n)      # rowless segments clamp to the sentinel
+    cand = jnp.where(hit, idx, -1)
+    r = jax.ops.segment_max(cand, segs, num_segments=num_segments)
+    return jnp.maximum(r, -1)
+
+
 def decode_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
                          kv_len: jax.Array) -> jax.Array:
     """Masked softmax attention, fp32 accumulation.  q (BH,G,D);

@@ -67,8 +67,36 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = float("-inf")
 POS_INF = float("inf")
 
-#: index of each fused moment in the kernel output
+#: index of each fused value moment in the kernel output
 MOMENTS = ("sum", "count", "min", "max")
+
+#: optional *index* moments: the row index attaining the per-segment min
+#: (row ``ARGMIN_ROW``) or max (row ``ARGMAX_ROW``), with the requesting
+#: loop's tie order — ``*_first`` keeps the earliest attaining row (the
+#: strict ``<``/``>`` comparison of a cursor loop never replaces an equal
+#: key), ``*_last`` the latest (``<=``/``>=`` replaces on equality).  The
+#: index accumulates as an f32 lexicographic (key, row) compare inside the
+#: same band-pruned membership reduce, so it costs no extra grid steps;
+#: exactness requires the (padded) row count below 2^24 (f32 integers).
+INDEX_MOMENTS = ("argmin_first", "argmin_last", "argmax_first", "argmax_last")
+
+#: moment-row offsets of the index rows (present only when a column
+#: requests an index moment; the output then has 6 rows per column)
+ARGMIN_ROW = 4
+ARGMAX_ROW = 5
+
+#: f32-exact row-index ceiling: above this the index moment is refused
+INDEX_EXACT_ROWS = 1 << 24
+
+
+def index_moment_ok(n: int, block_rows: int = 256) -> bool:
+    """True when every row index the kernel can record — i.e. up to ``n``
+    padded to a ``block_rows`` multiple — is exactly representable in the
+    f32 accumulator.  The ONE gate shared by the kernel's own validation
+    and the executors' use-index decision, so a row count just under the
+    ceiling falls back to the legacy pick instead of tripping the
+    kernel's raise."""
+    return n + (-n) % block_rows < INDEX_EXACT_ROWS
 
 #: TPU vector lane width — segment tiles are sized in multiples of it so
 #: the membership-mask reduce never issues ragged lanes
@@ -91,56 +119,173 @@ def default_block_segs(num_segments: int, block_rows: int = 256,
 
 
 # ---------------------------------------------------------------------------
+# Moment normalization (shared by every backend and the sharded launcher)
+# ---------------------------------------------------------------------------
+
+
+def normalize_moments(moments, num_cols: int) -> tuple[tuple[str, ...], ...]:
+    """Canonicalize ``moments`` to one validated tuple per column.
+
+    Accepts either a flat tuple of moment names (applied to every column)
+    or a per-column tuple of tuples.  Index moments imply their value
+    extremum (``argmin_*`` adds ``min``, ``argmax_*`` adds ``max`` — the
+    kernel's index merge reads the running extremum row).  A column may
+    carry at most ONE tie order per extremum direction: ``argmin_first``
+    and ``argmin_last`` share output row ``ARGMIN_ROW``, so requesting
+    both on one column is a contract violation (callers split the column).
+    Unknown moment names raise instead of being silently dropped."""
+    known = MOMENTS + INDEX_MOMENTS
+    if not moments or isinstance(moments[0], str):
+        per_col = (tuple(moments),) * num_cols
+    else:
+        per_col = tuple(tuple(ms) for ms in moments)
+    if len(per_col) != num_cols:
+        raise ValueError(f"per-column moments: got {len(per_col)} entries "
+                         f"for {num_cols} columns")
+    out = []
+    for ms in per_col:
+        bad = [m for m in ms if m not in known]
+        if bad:
+            raise ValueError(f"unknown moment(s) {bad!r}; expected a subset "
+                             f"of {known}")
+        ms = set(ms)
+        if "argmin_first" in ms and "argmin_last" in ms:
+            raise ValueError("a column cannot carry both argmin_first and "
+                             "argmin_last (one index row per extremum "
+                             "direction) — use separate columns")
+        if "argmax_first" in ms and "argmax_last" in ms:
+            raise ValueError("a column cannot carry both argmax_first and "
+                             "argmax_last (one index row per extremum "
+                             "direction) — use separate columns")
+        if "argmin_first" in ms or "argmin_last" in ms:
+            ms.add("min")
+        if "argmax_first" in ms or "argmax_last" in ms:
+            ms.add("max")
+        out.append(tuple(m for m in known if m in ms))
+    return tuple(out)
+
+
+def has_index_moments(moments: tuple[tuple[str, ...], ...]) -> bool:
+    return any(m in INDEX_MOMENTS for ms in moments for m in ms)
+
+
+def moment_rows(moments: tuple[tuple[str, ...], ...]) -> int:
+    """Rows per column in the output tensor: 4 value rows, plus the two
+    index rows when any column requests an index moment."""
+    return 6 if has_index_moments(moments) else 4
+
+
+def _index_tie(ms: tuple[str, ...], which: str):
+    """Tie order of ``which`` ('argmin'/'argmax') for one column:
+    True = first-attaining, False = last-attaining, None = not requested."""
+    if which + "_first" in ms:
+        return True
+    if which + "_last" in ms:
+        return False
+    return None
+
+
+def _row_fills(moments: tuple[tuple[str, ...], ...]) -> tuple[float, ...]:
+    """Per-output-row init/identity values, column-major: [0, 0, +inf,
+    -inf] for the value rows; the index rows hold the tie identity (+inf
+    when the smallest attaining row wins, -inf when the largest does)."""
+    nrows = moment_rows(moments)
+    fills: list[float] = []
+    for ms in moments:
+        fills += [0.0, 0.0, POS_INF, NEG_INF]
+        if nrows == 6:
+            fills += [NEG_INF if _index_tie(ms, "argmin") is False
+                      else POS_INF,
+                      NEG_INF if _index_tie(ms, "argmax") is False
+                      else POS_INF]
+    return tuple(fills)
+
+
+# ---------------------------------------------------------------------------
 # Kernel bodies (shared between the pruned and unpruned grids)
 # ---------------------------------------------------------------------------
 
 
-def _init_out(out_ref, num_cols: int, block_segs: int) -> None:
-    for c in range(num_cols):
-        out_ref[4 * c + 0, :] = jnp.zeros((block_segs,), out_ref.dtype)
-        out_ref[4 * c + 1, :] = jnp.zeros((block_segs,), out_ref.dtype)
-        out_ref[4 * c + 2, :] = jnp.full((block_segs,), POS_INF,
-                                         out_ref.dtype)
-        out_ref[4 * c + 3, :] = jnp.full((block_segs,), NEG_INF,
-                                         out_ref.dtype)
+def _init_out(out_ref, num_cols: int, block_segs: int,
+              moments: tuple[tuple[str, ...], ...]) -> None:
+    fills = _row_fills(moments)
+    for r, f in enumerate(fills):
+        out_ref[r, :] = jnp.full((block_segs,), f, out_ref.dtype)
 
 
-def _accum_rows(vals_ref, segs_ref, valid_ref, out_ref, seg_tile, *,
+def _extremum_with_index(out_ref, base: int, row: int, member, vbc, idxv,
+                         block_val, tie_first: bool, minimize: bool) -> None:
+    """Merge one row block's (key, row-index) pair into the resident
+    extremum + index rows: the lexicographic compare of the index moment.
+    ``block_val`` is the block's per-segment extremum; the attaining row
+    within the block is the tie-ordered reduce over the rows matching it,
+    and the merge with the resident tile compares keys first, indices on
+    equality.  Must run before the extremum row is overwritten."""
+    krow = base + (2 if minimize else 3)
+    cur_k = out_ref[krow, :]
+    cur_i = out_ref[base + row, :]
+    hit = member & (vbc == block_val[None, :])
+    if tie_first:
+        bi = jnp.min(jnp.where(hit, idxv, POS_INF), axis=0)
+        tie = jnp.minimum
+    else:
+        bi = jnp.max(jnp.where(hit, idxv, NEG_INF), axis=0)
+        tie = jnp.maximum
+    beats = block_val < cur_k if minimize else block_val > cur_k
+    out_ref[base + row, :] = jnp.where(
+        beats, bi, jnp.where(block_val == cur_k, tie(bi, cur_i), cur_i))
+
+
+def _accum_rows(vals_ref, segs_ref, valid_ref, out_ref, seg_tile, row_base, *,
                 block_segs: int, num_cols: int,
                 moments: tuple[tuple[str, ...], ...]) -> None:
     """Accumulate one row block into the resident output tile ``seg_tile``
-    (a traced i32 scalar on the pruned grid, a grid index otherwise)."""
+    (a traced i32 scalar on the pruned grid, a grid index otherwise).
+    ``row_base`` is the global index of the block's first row — the index
+    moments record ``row_base + local_row`` for the attaining row."""
     vals = vals_ref[...].astype(out_ref.dtype)          # (R, C)
     segs = segs_ref[...]                                # (R, 1) int32
     ok = valid_ref[...] != 0                            # (R, C)
 
     r = vals.shape[0]
+    nrows = moment_rows(moments)
     local = segs - seg_tile * block_segs                # tile-relative ids
     seg_iota = lax.broadcasted_iota(jnp.int32, (r, block_segs), 1)
     in_tile = local == seg_iota                         # (R, BS) band mask
+    idxv = None
+    if nrows == 6:
+        idxv = (row_base + lax.broadcasted_iota(
+            jnp.int32, (r, block_segs), 0)).astype(out_ref.dtype)
 
     for c in range(num_cols):
         ms = moments[c]
+        base = nrows * c
         member = in_tile & ok[:, c:c + 1]
         vbc = jnp.broadcast_to(vals[:, c:c + 1], (r, block_segs))
         if "sum" in ms:
-            out_ref[4 * c + 0, :] += jnp.sum(jnp.where(member, vbc, 0),
-                                             axis=0)
+            out_ref[base + 0, :] += jnp.sum(jnp.where(member, vbc, 0),
+                                            axis=0)
         if "count" in ms:
-            out_ref[4 * c + 1, :] += jnp.sum(member.astype(out_ref.dtype),
-                                             axis=0)
+            out_ref[base + 1, :] += jnp.sum(member.astype(out_ref.dtype),
+                                            axis=0)
+        amn = _index_tie(ms, "argmin")
+        amx = _index_tie(ms, "argmax")
         if "min" in ms:
-            out_ref[4 * c + 2, :] = jnp.minimum(
-                out_ref[4 * c + 2, :],
-                jnp.min(jnp.where(member, vbc, POS_INF), axis=0))
+            bk = jnp.min(jnp.where(member, vbc, POS_INF), axis=0)
+            if amn is not None:     # index merge reads the OLD extremum row
+                _extremum_with_index(out_ref, base, ARGMIN_ROW, member, vbc,
+                                     idxv, bk, tie_first=amn, minimize=True)
+            out_ref[base + 2, :] = jnp.minimum(out_ref[base + 2, :], bk)
         if "max" in ms:
-            out_ref[4 * c + 3, :] = jnp.maximum(
-                out_ref[4 * c + 3, :],
-                jnp.max(jnp.where(member, vbc, NEG_INF), axis=0))
+            bk = jnp.max(jnp.where(member, vbc, NEG_INF), axis=0)
+            if amx is not None:
+                _extremum_with_index(out_ref, base, ARGMAX_ROW, member, vbc,
+                                     idxv, bk, tie_first=amx, minimize=False)
+            out_ref[base + 3, :] = jnp.maximum(out_ref[base + 3, :], bk)
 
 
 def _segment_agg_kernel(vals_ref, segs_ref, valid_ref, out_ref, *,
-                        block_segs: int, num_cols: int,
+                        block_rows: int, block_segs: int, num_cols: int,
                         moments: tuple[tuple[str, ...], ...]):
     """Unpruned cross-product grid: (seg_tiles, row_blocks), rows fastest
     so the output tile stays VMEM-resident while every row block streams
@@ -150,15 +295,16 @@ def _segment_agg_kernel(vals_ref, segs_ref, valid_ref, out_ref, *,
 
     @pl.when(i == 0)
     def _():
-        _init_out(out_ref, num_cols, block_segs)
+        _init_out(out_ref, num_cols, block_segs, moments)
 
-    _accum_rows(vals_ref, segs_ref, valid_ref, out_ref, j,
+    _accum_rows(vals_ref, segs_ref, valid_ref, out_ref, j, i * block_rows,
                 block_segs=block_segs, num_cols=num_cols, moments=moments)
 
 
 def _segment_agg_kernel_pruned(rowm_ref, tilem_ref, nsteps_ref,
                                vals_ref, segs_ref, valid_ref, out_ref, *,
-                               block_segs: int, num_cols: int,
+                               block_rows: int, block_segs: int,
+                               num_cols: int,
                                moments: tuple[tuple[str, ...], ...]):
     """Band-pruned 1-D grid: step ``s`` works on row block ``rowm[s]`` and
     segment tile ``tilem[s]`` (scalar-prefetched maps; the BlockSpec index
@@ -172,11 +318,12 @@ def _segment_agg_kernel_pruned(rowm_ref, tilem_ref, nsteps_ref,
 
     @pl.when((s == 0) | (j != prev_j))    # first visit of this output tile
     def _():
-        _init_out(out_ref, num_cols, block_segs)
+        _init_out(out_ref, num_cols, block_segs, moments)
 
     @pl.when(s < nsteps_ref[0])
     def _():
         _accum_rows(vals_ref, segs_ref, valid_ref, out_ref, j,
+                    rowm_ref[s] * block_rows,
                     block_segs=block_segs, num_cols=num_cols,
                     moments=moments)
 
@@ -332,8 +479,11 @@ def _segment_agg_pallas(vals: jax.Array, segs: jax.Array, valid: jax.Array,
                         moments: tuple[str, ...] = MOMENTS,
                         prune: bool = True,
                         check_sorted: bool = True) -> jax.Array:
-    """(N, C) vals/valid → (C, 4, num_segments) f32 via the Pallas kernel."""
+    """(N, C) vals/valid → (C, R, num_segments) f32 via the Pallas kernel
+    (R = 4 value-moment rows, 6 when any column requests an index
+    moment)."""
     n, num_cols = vals.shape
+    nrows = moment_rows(moments)
     vals, segs, valid = _pad_rows(vals, segs, valid, block_rows)
     n_p = vals.shape[0]
     segs2 = segs.astype(jnp.int32).reshape(n_p, 1)
@@ -345,12 +495,13 @@ def _segment_agg_pallas(vals: jax.Array, segs: jax.Array, valid: jax.Array,
     n_blocks = n_p // block_rows
     if num_seg_tiles == 1:
         prune = False       # single tile: the cross product IS the row walk
-    out_shape = jax.ShapeDtypeStruct((4 * num_cols, s_pad), jnp.float32)
+    out_shape = jax.ShapeDtypeStruct((nrows * num_cols, s_pad), jnp.float32)
 
     if not prune:
         out = pl.pallas_call(
-            functools.partial(_segment_agg_kernel, block_segs=block_segs,
-                              num_cols=num_cols, moments=moments),
+            functools.partial(_segment_agg_kernel, block_rows=block_rows,
+                              block_segs=block_segs, num_cols=num_cols,
+                              moments=moments),
             out_shape=out_shape,
             grid=(num_seg_tiles, n_blocks),
             in_specs=[
@@ -358,11 +509,11 @@ def _segment_agg_pallas(vals: jax.Array, segs: jax.Array, valid: jax.Array,
                 pl.BlockSpec((block_rows, 1), lambda j, i: (i, 0)),
                 pl.BlockSpec((block_rows, num_cols), lambda j, i: (i, 0)),
             ],
-            out_specs=pl.BlockSpec((4 * num_cols, block_segs),
+            out_specs=pl.BlockSpec((nrows * num_cols, block_segs),
                                    lambda j, i: (0, j)),
             interpret=interpret,
         )(vals2, segs2, valid2)
-        return out[:, :num_segments].reshape(num_cols, 4, num_segments)
+        return out[:, :num_segments].reshape(num_cols, nrows, num_segments)
 
     grid_len = n_blocks + num_seg_tiles - 1
     rowm, tilem, nsteps = _band_maps(segs.astype(jnp.int32), n_blocks,
@@ -379,12 +530,13 @@ def _segment_agg_pallas(vals: jax.Array, segs: jax.Array, valid: jax.Array,
             pl.BlockSpec((block_rows, num_cols),
                          lambda s, rm, tm, ns: (rm[s], 0)),
         ],
-        out_specs=pl.BlockSpec((4 * num_cols, block_segs),
+        out_specs=pl.BlockSpec((nrows * num_cols, block_segs),
                                lambda s, rm, tm, ns: (0, tm[s])),
     )
     out = pl.pallas_call(
-        functools.partial(_segment_agg_kernel_pruned, block_segs=block_segs,
-                          num_cols=num_cols, moments=moments),
+        functools.partial(_segment_agg_kernel_pruned, block_rows=block_rows,
+                          block_segs=block_segs, num_cols=num_cols,
+                          moments=moments),
         out_shape=out_shape,
         grid_spec=grid_spec,
         interpret=interpret,
@@ -393,8 +545,7 @@ def _segment_agg_pallas(vals: jax.Array, segs: jax.Array, valid: jax.Array,
     # tiles no row-block band touches were never visited: their blocks hold
     # uninitialized memory, so fill them with the moment identities
     visited = jnp.zeros((num_seg_tiles,), bool).at[tilem].set(True)
-    fill = jnp.tile(jnp.array([0.0, 0.0, POS_INF, NEG_INF], jnp.float32),
-                    num_cols)
+    fill = jnp.array(_row_fills(moments), jnp.float32)
     out = jnp.where(jnp.repeat(visited, block_segs)[None, :], out,
                     fill[:, None])
 
@@ -404,34 +555,72 @@ def _segment_agg_pallas(vals: jax.Array, segs: jax.Array, valid: jax.Array,
         # under tracing, where the eager check could not run
         is_sorted = jnp.all(segs[1:] >= segs[:-1]) if n_p > 1 else True
         out = jnp.where(is_sorted, out, jnp.float32(jnp.nan))
-    return out[:, :num_segments].reshape(num_cols, 4, num_segments)
+    return out[:, :num_segments].reshape(num_cols, nrows, num_segments)
 
 
 _MOMENT_ROW = {"sum": 0, "count": 1, "min": 2, "max": 3}
 _MOMENT_FILL = {"sum": 0.0, "count": 0.0, "min": POS_INF, "max": NEG_INF}
 
 
+def _segment_arg_index_scan(key: jax.Array, idx_cand: jax.Array,
+                            seg: jax.Array, num_segments: int, *,
+                            minimize: bool, tie_first: bool) -> jax.Array:
+    """Per-segment attaining row index WITHOUT any row-sized gather.
+
+    The classic jnp formulation (``key == best[seg]`` hit detection)
+    issues an N-sized gather; instead this runs a segmented lexicographic
+    reduce as one ``lax.associative_scan`` over (key, idx, seg) triples —
+    contiguous sorted segments make the segment-reset combine associative
+    — and reads each segment's result at its last row (an
+    S-sized take).  ``idx_cand`` carries the tie identity (±inf) for
+    invalid rows, so a valid row always beats an invalid one on equal
+    keys.  Returns the f32 index row (tie identity for empty segments)."""
+    n = key.shape[0]
+
+    def combine(a, b):          # b is the later contiguous range
+        ak, ai, as_ = a
+        bk, bi, bs = b
+        better = (bk < ak) if minimize else (bk > ak)
+        i_better = (bi < ai) if tie_first else (bi > ai)
+        take_b = (bs != as_) | better | ((bk == ak) & i_better)
+        return (jnp.where(take_b, bk, ak), jnp.where(take_b, bi, ai), bs)
+
+    _, red_idx, _ = lax.associative_scan(
+        combine, (key, idx_cand, seg.astype(jnp.int32)))
+    last = jax.ops.segment_max(jnp.arange(n, dtype=jnp.int32), seg,
+                               num_segments=num_segments)
+    got = last >= 0                           # segments with any row at all
+    picked = jnp.take(red_idx, jnp.clip(last, 0, n - 1))
+    ident = POS_INF if tie_first else NEG_INF
+    return jnp.where(got, picked, jnp.float32(ident))
+
+
 def _segment_agg_jnp(vals: jax.Array, segs: jax.Array, valid: jax.Array,
                      num_segments: int,
                      moments: tuple[tuple[str, ...], ...]) -> jax.Array:
-    """Pure-JAX fallback, identical math: (N, C) → (C, 4, num_segments).
+    """Pure-JAX fallback, identical math: (N, C) → (C, R, num_segments).
     ``moments`` is per-column; moment rows a column does not request hold
-    their init identity (0 / 0 / ±inf).  Unlike the kernel (where the
-    fused pass makes extra moments nearly free), each jnp moment is a
-    separate segment op, so it runs once per moment over exactly the
-    columns that need it."""
+    their init identity (0 / 0 / ±inf, tie identity for index rows).
+    Unlike the kernel (where the fused pass makes extra moments nearly
+    free), each jnp moment is a separate segment op, so it runs once per
+    moment over exactly the columns that need it."""
     v = vals.astype(jnp.float32)
     seg = segs.astype(jnp.int32)
     num_cols = vals.shape[1]
-    out = jnp.stack(
-        [jnp.full((num_cols, num_segments), _MOMENT_FILL[m], jnp.float32)
-         for m in MOMENTS], axis=1)
+    nrows = moment_rows(moments)
+    out = jnp.broadcast_to(
+        jnp.asarray(_row_fills(moments),
+                    jnp.float32).reshape(num_cols, nrows, 1),
+        (num_cols, nrows, num_segments))
     for m in MOMENTS:
         idx = [c for c in range(num_cols) if m in moments[c]]
         if not idx:
             continue
-        vi = v[:, idx]
-        gi = valid[:, idx]
+        # static per-column slices, NOT v[:, idx] list-indexing: advanced
+        # indexing lowers to an (N, len(idx)) gather, and this path is
+        # spy-asserted to add no row-sized gathers beyond the group sort
+        vi = jnp.stack([v[:, c] for c in idx], axis=1)
+        gi = jnp.stack([valid[:, c] for c in idx], axis=1)
         if m == "sum":
             r = jax.ops.segment_sum(jnp.where(gi, vi, 0.0), seg,
                                     num_segments=num_segments)
@@ -445,6 +634,23 @@ def _segment_agg_jnp(vals: jax.Array, segs: jax.Array, valid: jax.Array,
             r = jax.ops.segment_max(jnp.where(gi, vi, NEG_INF), seg,
                                     num_segments=num_segments)
         out = out.at[jnp.asarray(idx), _MOMENT_ROW[m], :].set(r.T)
+    if nrows == 6:
+        n = vals.shape[0]
+        rowidx = jnp.arange(n, dtype=jnp.float32)
+        for c in range(num_cols):
+            for which, row, minimize in (("argmin", ARGMIN_ROW, True),
+                                         ("argmax", ARGMAX_ROW, False)):
+                tie = _index_tie(moments[c], which)
+                if tie is None:
+                    continue
+                worst = POS_INF if minimize else NEG_INF
+                key = jnp.where(valid[:, c], v[:, c], worst)
+                cand = jnp.where(valid[:, c], rowidx,
+                                 POS_INF if tie else NEG_INF)
+                r = _segment_arg_index_scan(key, cand, seg, num_segments,
+                                            minimize=minimize,
+                                            tie_first=tie)
+                out = out.at[c, row, :].set(r)
     return out
 
 
@@ -460,9 +666,16 @@ def fused_segment_agg(vals: jax.Array, segs: jax.Array, valid: jax.Array,
     ``vals``  (N,) or (N, C) — C value columns over the same row stream.
     ``segs``  (N,) int, sorted ascending, in [0, num_segments).
     ``valid`` (N,) or (N, C) bool — per-column row validity (guards).
-    ``moments`` restricts which of [sum, count, min, max] are computed —
-    either one tuple of moment names applied to every column, or a
-    per-column tuple of tuples.  Skipped rows hold their init identity.
+    ``moments`` restricts which of [sum, count, min, max] (plus the
+    optional index moments ``argmin_first``/``argmin_last``/
+    ``argmax_first``/``argmax_last`` — see ``INDEX_MOMENTS``) are
+    computed — either one tuple of moment names applied to every column,
+    or a per-column tuple of tuples.  Skipped rows hold their init
+    identity.  Requesting an index moment grows the output to 6 rows per
+    column: rows 4/5 carry the f32 row index attaining the column's
+    min/max with the requested tie order (tie identity ±inf for empty
+    segments), and the padded row count must stay below 2^24 so f32
+    represents every index exactly.
 
     ``prune`` (kernel backends only) enables band pruning: the compact
     O(row_blocks + seg_tiles) grid over exactly the (row_block, seg_tile)
@@ -474,19 +687,19 @@ def fused_segment_agg(vals: jax.Array, segs: jax.Array, valid: jax.Array,
     order by construction (the grouped executors sort first) pass
     ``assume_sorted=True`` to skip both checks.
 
-    Returns (C, 4, num_segments) f32 with moment rows [sum, count, min,
-    max]; empty segments read [0, 0, +inf, -inf].
+    Returns (C, R, num_segments) f32 with moment rows [sum, count, min,
+    max(, argmin-index, argmax-index)]; empty segments read the
+    identities [0, 0, +inf, -inf(, ±inf, ±inf)].
     """
     vals, valid = _normalize(jnp.asarray(vals), jnp.asarray(valid))
     num_cols = vals.shape[1]
-    if not moments or isinstance(moments[0], str):
-        moments = (tuple(m for m in MOMENTS if m in moments),) * num_cols
-    else:
-        moments = tuple(tuple(m for m in MOMENTS if m in ms)
-                        for ms in moments)
-    if len(moments) != num_cols:
-        raise ValueError(f"per-column moments: got {len(moments)} entries "
-                         f"for {num_cols} columns")
+    moments = normalize_moments(moments, num_cols)
+    if has_index_moments(moments) and not index_moment_ok(vals.shape[0],
+                                                          block_rows):
+        raise ValueError(
+            f"index moments accumulate f32 row indices, exact only "
+            f"below 2^24 (padded) rows; got {vals.shape[0]} — split the "
+            f"input or use the exact jnp arg path")
     if backend == "auto":
         backend = "pallas" if jax.default_backend() == "tpu" else "jnp"
     if backend == "jnp":

@@ -12,6 +12,16 @@ schedules one fused all-reduce per moment row instead of an all-gather
 plus a sequential fold (``moment_merge_aggregate`` exposes the fold form
 so tests can pin the two against each other).
 
+Arg-extremum state is mergeable too: when the kernel's INDEX MOMENT is
+requested (rows 4/5 — the tie-ordered attaining row index), the shard
+merge extends to the lexicographic (key, global_row) ``pmin``/``pmax``
+(``_merge_index_rows``), and payload selection stays SHARD-LOCAL: each
+shard takes its own (num_segments,)-sized payload candidates from its
+local rows and the winner's candidates combine with a masked ``psum``
+(``payloads=``).  Every collective in the path moves O(num_segments)
+elements per shard — the payload gather never touches the global row
+set.
+
 Routing is transparent: ``row_sharded_mesh`` detects concrete arrays that
 carry a ``NamedSharding`` split over more than one device along dim 0, and
 the grouped executors (``core/executors.py`` grouped ``AggCall`` dispatch,
@@ -48,9 +58,12 @@ from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from repro.core.aggregate import Aggregate
-from repro.kernels.segment_agg import (MOMENTS, NEG_INF, POS_INF,
+from repro.kernels.segment_agg import (ARGMAX_ROW, ARGMIN_ROW, MOMENTS,
+                                       NEG_INF, POS_INF, _index_tie,
                                        _normalize, _pad_rows,
-                                       _validate_sorted, fused_segment_agg)
+                                       _validate_sorted, fused_segment_agg,
+                                       has_index_moments, index_moment_ok,
+                                       normalize_moments)
 
 
 def row_sharded_mesh(*arrays) -> Optional[tuple[Mesh, str]]:
@@ -88,6 +101,38 @@ def _merge_moments(local: jax.Array, axis_name: str) -> jax.Array:
     return jnp.stack([s, c, mn, mx], axis=1)
 
 
+def _merge_index_rows(local: jax.Array, gmin: jax.Array, gmax: jax.Array,
+                      offset, moments, axis_name: str) -> jax.Array:
+    """Cross-shard ARG-merge of the index rows: each shard contributes its
+    local (key, global_row) pair — ``local`` still holds shard-local row
+    indices; ``offset`` (axis_index × shard rows) globalizes them, with
+    the ±inf tie identities surviving the shift — and the merge is the
+    lexicographic extremum: only shards attaining the already-merged key
+    extremum enter their global row, reduced by ``pmin`` (first-attaining
+    tie order: the smallest global row wins, and contiguous row sharding
+    makes global row order the loop order) or ``pmax`` (last-attaining).
+    The collective payload is one (S,) row per index moment —
+    O(num_segments), never O(rows).  Returns the merged (C, 2, S) index
+    rows (unrequested rows hold +inf)."""
+    num_cols = local.shape[0]
+    cols = []
+    for c in range(num_cols):
+        rows = []
+        for which, row, gkey in (("argmin", ARGMIN_ROW, gmin[c]),
+                                 ("argmax", ARGMAX_ROW, gmax[c])):
+            tie_first = _index_tie(moments[c], which)
+            if tie_first is None:
+                rows.append(jnp.full_like(gkey, POS_INF))
+                continue
+            lkey = local[c, 2 if which == "argmin" else 3]
+            cand = jnp.where(lkey == gkey, local[c, row] + offset,
+                             POS_INF if tie_first else NEG_INF)
+            rows.append(lax.pmin(cand, axis_name) if tie_first
+                        else lax.pmax(cand, axis_name))
+        cols.append(jnp.stack(rows))
+    return jnp.stack(cols)
+
+
 def moment_merge_aggregate(num_cols: int, num_segments: int) -> Aggregate:
     """The (C, 4, S) moment tensor as a ``core.aggregate.Aggregate`` whose
     state is the tensor itself: ``merge`` adds the sum/count rows and
@@ -118,24 +163,48 @@ def sharded_fused_segment_agg(vals: jax.Array, segs: jax.Array,
                               backend: str = "auto", block_rows: int = 256,
                               block_segs: int | None = None,
                               moments=MOMENTS, prune: bool = True,
-                              assume_sorted: bool = False) -> jax.Array:
+                              assume_sorted: bool = False,
+                              payloads=()):
     """Row-sharded fused segmented aggregation over ``mesh.shape[axis]``
     devices: each shard runs ``fused_segment_agg`` on its contiguous row
-    slice (full segment range), then the (C, 4, num_segments) moment
+    slice (full segment range), then the (C, R, num_segments) moment
     tensors merge with one all-reduce per moment row.  Same signature and
     result as ``fused_segment_agg`` (empty segments read
     [0, 0, +inf, -inf]); rows are padded to a multiple of the shard count
     with invalid rows repeating the last real segment id, so empty shards
     contribute identities and the per-shard pruned grids stay narrow.
 
+    Index moments (``argmin_*``/``argmax_*`` in ``moments``) extend the
+    all-reduce algebra with the cross-shard ARG-merge: each shard's local
+    attaining row is globalized (axis_index × shard rows) and merged as a
+    lexicographic (key, global_row) ``pmin``/``pmax`` — see
+    ``_merge_index_rows``.  ``payloads`` then keeps payload selection
+    shard-local: each entry is ``(col, minimize, values)`` with ``values``
+    a tuple of (N,) payload arrays; every shard gathers its OWN
+    num_segments-sized candidate rows (local take, local rows only) and
+    the winning shard's candidates are combined with one masked ``psum``
+    per payload array.  The collective therefore moves O(num_segments)
+    elements per shard, never O(rows).  With payloads the return value is
+    ``(moments, picks)`` where ``picks[i]`` is a tuple of (S,) arrays in
+    the payload dtypes (0 for segments with no attaining row — consumers
+    gate on the index-row sentinel).
+
     Exactness: counts and min/max match the single-device kernel
-    bit-for-bit; per-segment f32 sums are associativity-reordered across
-    shard boundaries, so they are bitwise-equal when the addends are
-    exactly representable (integer-valued data, the tests' parity case)
-    and within normal f32 rounding otherwise."""
+    bit-for-bit; index rows and payload picks are bit-exact too (the
+    lexicographic merge is order-independent); per-segment f32 sums are
+    associativity-reordered across shard boundaries, so they are
+    bitwise-equal when the addends are exactly representable
+    (integer-valued data, the tests' parity case) and within normal f32
+    rounding otherwise."""
     vals, valid = _normalize(jnp.asarray(vals), jnp.asarray(valid))
     segs = jnp.asarray(segs).astype(jnp.int32)
     nshards = mesh.shape[axis]
+    num_cols = vals.shape[1]
+    norm_moments = normalize_moments(moments, num_cols)
+    indexed = has_index_moments(norm_moments)
+    if payloads and not indexed:
+        raise ValueError("shard-local payload gathering requires an index "
+                         "moment on the key column (argmin_*/argmax_*)")
 
     # the sorted precondition only matters where band pruning runs — the
     # per-shard kernel backends; the jnp fallback is order-independent
@@ -145,24 +214,78 @@ def sharded_fused_segment_agg(vals: jax.Array, segs: jax.Array,
     check_runtime = _validate_sorted(segs, prune, assume_sorted, resolved)
 
     vals, segs, valid = _pad_rows(vals, segs, valid, nshards)
+    n_p = vals.shape[0]
+    if indexed and not index_moment_ok(n_p, block_rows):
+        raise ValueError(
+            f"index moments accumulate f32 row indices, exact only below "
+            f"2^24 (padded) total rows; got {n_p}")
+    shard_n = n_p // nshards
     sh = NamedSharding(mesh, P(axis))
     vals = jax.device_put(vals.astype(jnp.float32), sh)
     segs = jax.device_put(segs, sh)
     valid = jax.device_put(valid, sh)
+    pv_flat: list[jax.Array] = []
+    for _c, _minimize, pvs in payloads:
+        for a in pvs:
+            a = jnp.asarray(a)
+            if a.shape[0] != n_p:       # mirror the row padding
+                a = jnp.concatenate(
+                    [a, jnp.zeros((n_p - a.shape[0],), a.dtype)])
+            pv_flat.append(jax.device_put(a, sh))
 
-    def local(v, s, g):
+    def local(v, s, g, *pv):
         out = fused_segment_agg(v, s, g, num_segments,
                                 block_rows=block_rows,
                                 block_segs=block_segs, backend=backend,
-                                moments=moments, prune=prune,
+                                moments=norm_moments, prune=prune,
                                 assume_sorted=True)
-        return _merge_moments(out, axis)
+        if not indexed:
+            return _merge_moments(out, axis), ()
+        sm = lax.psum(out[:, 0], axis)
+        cnt = lax.psum(out[:, 1], axis)
+        mn = lax.pmin(out[:, 2], axis)
+        mx = lax.pmax(out[:, 3], axis)
+        offset = (lax.axis_index(axis) * shard_n).astype(out.dtype)
+        gi = _merge_index_rows(out, mn, mx, offset, norm_moments, axis)
+        merged = jnp.concatenate([jnp.stack([sm, cnt, mn, mx], axis=1), gi],
+                                 axis=1)
+        picks = []
+        it = iter(pv)
+        for c, minimize, pvs in payloads:
+            gkey = mn[c] if minimize else mx[c]
+            lkey = out[c, 2 if minimize else 3]
+            lp = out[c, ARGMIN_ROW if minimize else ARGMAX_ROW]
+            # exactly one shard owns the merged (key, global_row) winner:
+            # global rows are unique, so the masked psum IS a select
+            won = ((lkey == gkey) & (lp + offset == gi[c, 0 if minimize
+                                                       else 1])
+                   & (lp >= 0) & (lp < shard_n))
+            safe = jnp.clip(lp, 0, shard_n - 1).astype(jnp.int32)
+            per = []
+            for _ in pvs:
+                arr = next(it)
+                gathered = jnp.take(arr, safe)       # (S,)-sized, local rows
+                if gathered.dtype == jnp.bool_:
+                    r = lax.psum(jnp.where(won, gathered.astype(jnp.int32),
+                                           0), axis)
+                    per.append(r != 0)
+                else:
+                    per.append(lax.psum(
+                        jnp.where(won, gathered, jnp.zeros_like(gathered)),
+                        axis))
+            picks.append(tuple(per))
+        return merged, tuple(picks)
 
-    out = shard_map(local, mesh=mesh,
-                    in_specs=(P(axis), P(axis), P(axis)),
-                    out_specs=P(), check_rep=False)(vals, segs, valid)
+    out_specs = (P(), tuple(tuple(P() for _ in pvs)
+                            for _c, _m, pvs in payloads))
+    out, picks = shard_map(
+        local, mesh=mesh,
+        in_specs=(P(axis),) * (3 + len(pv_flat)),
+        out_specs=out_specs, check_rep=False)(vals, segs, valid, *pv_flat)
     if check_runtime:
         is_sorted = (jnp.all(segs[1:] >= segs[:-1])
                      if segs.shape[0] > 1 else jnp.bool_(True))
         out = jnp.where(is_sorted, out, jnp.float32(jnp.nan))
+    if payloads:
+        return out, picks
     return out

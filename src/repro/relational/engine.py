@@ -195,9 +195,15 @@ _SEG_OPS = {
     "prod": jax.ops.segment_prod,
 }
 
-#: ops the fused Pallas segment-aggregate kernel serves from its four
-#: moment rows (mean = sum/count)
-_FUSED_OPS = ("sum", "min", "max", "count", "mean")
+#: ops the fused Pallas segment-aggregate kernel serves from its moment
+#: rows (mean = sum/count; argmin/argmax = extremum + index moment)
+_FUSED_OPS = ("sum", "min", "max", "count", "mean", "argmin", "argmax")
+
+#: arg-extremum GroupAgg ops: col is a (key_col, payload_col) pair and the
+#: output is the payload value of the FIRST row attaining the key extremum
+#: within the group (strict-comparison tie order, matching a cursor
+#: loop's ``If(key < best)``)
+_ARG_OPS = ("argmin", "argmax")
 
 
 def _groupagg_fused_backend() -> Optional[str]:
@@ -255,6 +261,15 @@ def _group_agg(t: Table, keys: tuple[str, ...],
             return False
         if op in ("count", "mean") and cap >= 1 << 24:
             return False
+        if op in _ARG_OPS:
+            # key compare + attaining-row index both run in f32: the key
+            # column must embed exactly (≤32-bit float / ≤16-bit int) and
+            # every (padded) row index must be f32-exact — the same gate
+            # the kernel validates
+            from repro.core.executors import _f32_exact_key_dtype
+            from repro.kernels.segment_agg import index_moment_ok
+            return (index_moment_ok(cap)
+                    and _f32_exact_key_dtype(st.columns[col[0]].dtype))
         if col is None:
             return True
         d = st.columns[col].dtype
@@ -272,6 +287,25 @@ def _group_agg(t: Table, keys: tuple[str, ...],
             vals = m.astype(jnp.int64 if jax.config.jax_enable_x64 else jnp.int32)
             cols[out] = jax.ops.segment_sum(vals, seg,
                                             num_segments=nsegments)
+            continue
+        if op in _ARG_OPS:
+            # per-op fallback (wide key dtypes / fused off): hit-detection
+            # formulation in the key column's own dtype — exact
+            kc, pc = col
+            kv, pv = st.columns[kc], st.columns[pc]
+            fill = _identity_for("min" if op == "argmin" else "max",
+                                 kv.dtype)
+            masked = jnp.where(m, kv, fill)
+            segf = jax.ops.segment_min if op == "argmin" \
+                else jax.ops.segment_max
+            best = segf(masked, seg, num_segments=nsegments)
+            hit = m & (masked == jnp.take(best, seg))
+            cand = jnp.where(hit, jnp.arange(cap), cap)
+            pick = jax.ops.segment_min(cand, seg, num_segments=nsegments)
+            got = pick < cap
+            cols[out] = jnp.where(
+                got, jnp.take(pv, jnp.clip(pick, 0, cap - 1)),
+                jnp.zeros((), pv.dtype))
             continue
         v = st.columns[col]
         if op == "mean":
@@ -294,21 +328,30 @@ def _group_agg(t: Table, keys: tuple[str, ...],
 def _group_agg_fused(st: Table, seg: jax.Array, m: jax.Array,
                      num_segments: int, fused_aggs, backend: str,
                      shard_route=None) -> dict[str, jax.Array]:
-    """Serve sum/count/min/max/mean GroupAgg ops from ONE fused
-    segment-aggregate pass: each distinct value column is one kernel
-    column; all four moments come back together, so e.g. (sum, count,
-    mean, min) over one column costs a single HBM traversal.
-    ``num_segments`` is the static segment range — the dense group bound
-    (+ overflow slot) when declared, the row capacity otherwise — and
-    sizes the (C, 4, num_segments) moment tensor.  ``shard_route`` =
-    (mesh, axis): the pass runs per row shard with a cross-device moment
-    merge (launch/sharded_agg.py)."""
-    from repro.kernels.segment_agg import fused_segment_agg
+    """Serve sum/count/min/max/mean/argmin/argmax GroupAgg ops from ONE
+    fused segment-aggregate pass: each distinct value (or arg-extremum
+    key) column is one kernel column; all requested moments come back
+    together, so e.g. (sum, count, mean, min) over one column costs a
+    single HBM traversal.  Arg-extremum ops additionally request the
+    kernel's index moment — the first-attaining row index arrives as
+    output rows 4/5, and the payload is one num_segments-sized take (no
+    row-capacity-sized gather).  ``num_segments`` is the static segment
+    range — the dense group bound (+ overflow slot) when declared, the
+    row capacity otherwise — and sizes the (C, R, num_segments) moment
+    tensor.  ``shard_route`` = (mesh, axis): the pass runs per row shard
+    with a cross-device moment merge, arg-extremum rows merged as
+    lexicographic (key, global_row) collectives and payloads gathered
+    shard-locally (launch/sharded_agg.py)."""
+    from repro.core.executors import _index_row_to_pick
+    from repro.kernels.segment_agg import (ARGMAX_ROW, ARGMIN_ROW,
+                                           fused_segment_agg)
 
+    cap = st.capacity
     value_cols = list(dict.fromkeys(
-        col for _, _, col in fused_aggs if col is not None))
+        (col[0] if op in _ARG_OPS else col)
+        for _, op, col in fused_aggs if col is not None))
     if not value_cols:        # count-only: any column works, mask does the job
-        vals = jnp.zeros((st.capacity, 1), jnp.float32)
+        vals = jnp.zeros((cap, 1), jnp.float32)
         col_idx = {}
     else:
         vals = jnp.stack([st.columns[c].astype(jnp.float32)
@@ -316,18 +359,38 @@ def _group_agg_fused(st: Table, seg: jax.Array, m: jax.Array,
         col_idx = {c: i for i, c in enumerate(value_cols)}
     moments = [set() for _ in range(max(1, len(value_cols)))]
     for _, op, col in fused_aggs:
+        if op in _ARG_OPS:
+            moments[col_idx[col[0]]].update(
+                ("min", "argmin_first") if op == "argmin"
+                else ("max", "argmax_first"))
+            continue
         i = col_idx.get(col, 0)   # count (col=None) rides on column 0
         moments[i].update({"mean": ("sum", "count"),
                            "count": ("count",)}.get(op, (op,)))
     kernel_moments = tuple(tuple(sorted(ms)) for ms in moments)
+
+    # sharded route: arg payloads are gathered shard-locally inside the
+    # all-reduce, so hand the payload columns to the launcher
+    payload_specs = []
+    payload_slot = {}
+    if shard_route is not None:
+        for name, op, col in fused_aggs:
+            if op in _ARG_OPS:
+                payload_slot[name] = len(payload_specs)
+                payload_specs.append((col_idx[col[0]], op == "argmin",
+                                      (st.columns[col[1]],)))
+
     # segment_ids_for sorted the rows, so the band-pruned kernel may
     # assume the sorted-segs precondition
+    payload_picks = ()
     if shard_route is not None:
         from repro.launch.sharded_agg import sharded_fused_segment_agg
-        fused = sharded_fused_segment_agg(
+        res = sharded_fused_segment_agg(
             vals, seg.astype(jnp.int32), m[:, None], num_segments,
             mesh=shard_route[0], axis=shard_route[1], backend=backend,
-            moments=kernel_moments, assume_sorted=True)
+            moments=kernel_moments, assume_sorted=True,
+            payloads=tuple(payload_specs))
+        fused, payload_picks = res if payload_specs else (res, ())
     else:
         fused = fused_segment_agg(vals, seg.astype(jnp.int32), m[:, None],
                                   num_segments, backend=backend,
@@ -340,6 +403,21 @@ def _group_agg_fused(st: Table, seg: jax.Array, m: jax.Array,
         if op == "count":
             out[name] = count.astype(
                 jnp.int64 if jax.config.jax_enable_x64 else jnp.int32)
+            continue
+        if op in _ARG_OPS:
+            minimize = op == "argmin"
+            i = col_idx[col[0]]
+            pv = st.columns[col[1]]
+            pick = _index_row_to_pick(
+                fused[i, ARGMIN_ROW if minimize else ARGMAX_ROW], cap,
+                tie_first=True)
+            got = (pick >= 0) & (pick < cap)
+            if name in payload_slot:
+                pv_pick = payload_picks[payload_slot[name]][0].astype(
+                    pv.dtype)
+            else:
+                pv_pick = jnp.take(pv, jnp.clip(pick, 0, cap - 1))
+            out[name] = jnp.where(got, pv_pick, jnp.zeros((), pv.dtype))
             continue
         i = col_idx[col]
         d = st.columns[col].dtype

@@ -157,11 +157,15 @@ class Limit(Plan):
 @dataclass(frozen=True)
 class GroupAgg(Plan):
     """Built-in grouped aggregation: aggs = ((out, op, col), ...) with op in
-    {sum,min,max,count,mean,prod}.  ``max_groups`` declares a dense bound
-    on the group count (see relational/group_bound.py): segment tensors are
-    sized by its power-of-two bucket plus an overflow slot instead of the
-    input row capacity, and the bound is validated (concrete overflow
-    raises; traced overflow NaN-poisons the outputs)."""
+    {sum,min,max,count,mean,prod,argmin,argmax}.  For the arg-extremum
+    ops ``col`` is a ``(key_col, payload_col)`` pair: the output is the
+    payload value of the FIRST row attaining the group's key extremum
+    (strict-comparison tie order — the cursor loop's ``If(key < best)``).
+    ``max_groups`` declares a dense bound on the group count (see
+    relational/group_bound.py): segment tensors are sized by its
+    power-of-two bucket plus an overflow slot instead of the input row
+    capacity, and the bound is validated (concrete overflow raises;
+    traced overflow NaN-poisons the outputs)."""
     child: Plan
     keys: tuple[str, ...]
     aggs: tuple[tuple[str, str, Optional[str]], ...]

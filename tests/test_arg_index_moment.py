@@ -1,0 +1,464 @@
+"""The in-kernel arg-extremum INDEX MOMENT (ISSUE 4 tentpole).
+
+Four layers:
+
+1. kernel — index rows (4/5) vs the hit-detection oracle for every tie
+   order, including duplicate extremal keys *straddling a row-block
+   boundary* (the lexicographic block merge), pruned == unpruned, and the
+   moment-contract validation;
+2. grouped ``AggCall`` — ``mode='fused'`` must match ``mode='stream'``
+   (the sequential per-group semantics) BIT-FOR-BIT for all four
+   comparison ops, with duplicate extremal keys inside a segment and
+   across the executor's default 256-row kernel blocks; the wide-int
+   key-expression bugfix routes to the exact jnp path;
+3. engine ``GroupAgg`` — the new argmin/argmax built-in ops;
+4. structure — the fused arg lowering issues NO row-capacity-sized gather
+   (jaxpr spies shared with ``benchmarks/arg_gather_spy.py``), and the
+   sharded arg-merge keeps every collective O(num_segments) (subprocess
+   8-way mesh, duplicate extrema straddling shard boundaries).
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (Assign, BinOp, Const, CursorLoop, If, Program, Var,
+                        aggify, let)
+from repro.kernels import ref
+from repro.kernels.segment_agg import (INDEX_EXACT_ROWS, fused_segment_agg,
+                                       normalize_moments)
+from repro.relational import GroupAgg, Scan, Table, execute
+from repro.relational.plan import AggCall
+
+TIES = (("argmin_first", True, True), ("argmin_last", True, False),
+        ("argmax_first", False, True), ("argmax_last", False, False))
+
+
+def _pick(idx_row, n, tie_first):
+    idx_row = np.asarray(idx_row)
+    if tie_first:
+        return np.where(idx_row < n, idx_row, n).astype(np.int32)
+    return np.where(idx_row >= 0, idx_row, -1).astype(np.int32)
+
+
+# --------------------------------------------------------------------------
+# 1. kernel: index rows vs oracle
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", ["jnp", "interpret"])
+@pytest.mark.parametrize("mname,minimize,tie_first", TIES)
+def test_kernel_index_moment_vs_oracle(backend, mname, minimize, tie_first):
+    rng = np.random.default_rng(3)
+    n, nseg = 500, 60
+    segs = np.sort(rng.integers(0, nseg, n)).astype(np.int32)
+    vals = rng.integers(-5, 5, (n, 2)).astype(np.float32)   # dense ties
+    valid = rng.random((n, 2)) < 0.8
+    out = fused_segment_agg(jnp.asarray(vals), jnp.asarray(segs),
+                            jnp.asarray(valid), nseg, block_rows=64,
+                            block_segs=16, backend=backend,
+                            moments=("sum", "count", mname))
+    assert out.shape == (2, 6, nseg)
+    for c in range(2):
+        want = ref.segment_arg_index_ref(
+            jnp.asarray(vals[:, c]), jnp.asarray(segs),
+            jnp.asarray(valid[:, c]), nseg, minimize=minimize,
+            tie_first=tie_first)
+        got = _pick(out[c, 4 if minimize else 5], n, tie_first)
+        assert np.array_equal(got, np.asarray(want))
+
+
+@pytest.mark.parametrize("backend", ["jnp", "interpret"])
+def test_kernel_ties_straddle_row_block_boundary(backend):
+    """One segment spans several 16-row kernel blocks; the extremal key
+    repeats at rows 14 and 18 — across the block boundary.  First-
+    attaining must pick 14, last-attaining 18 (the lexicographic merge of
+    resident vs block extremum, not whichever block came last)."""
+    n = 48
+    segs = np.zeros(n, np.int32)
+    vals = np.full((n, 1), 5.0, np.float32)
+    vals[14] = vals[18] = -3.0
+    valid = np.ones((n, 1), bool)
+    for mname, tie_first in (("argmin_first", True), ("argmin_last", False)):
+        out = fused_segment_agg(jnp.asarray(vals), jnp.asarray(segs),
+                                jnp.asarray(valid), 1, block_rows=16,
+                                block_segs=128, backend=backend,
+                                moments=(mname,))
+        got = _pick(out[0, 4], n, tie_first)
+        assert got[0] == (14 if tie_first else 18), (mname, got[0])
+
+
+def test_kernel_pruned_equals_unpruned_with_index():
+    rng = np.random.default_rng(11)
+    n, nseg = 3000, 600     # multiple segment tiles at block_segs=128
+    segs = np.sort(rng.integers(0, nseg, n)).astype(np.int32)
+    vals = rng.integers(-4, 4, (n, 1)).astype(np.float32)
+    valid = rng.random((n, 1)) < 0.9
+    kw = dict(block_rows=128, block_segs=128, backend="interpret",
+              moments=("argmin_first", "argmax_last"))
+    pr = fused_segment_agg(jnp.asarray(vals), jnp.asarray(segs),
+                           jnp.asarray(valid), nseg, **kw)
+    un = fused_segment_agg(jnp.asarray(vals), jnp.asarray(segs),
+                           jnp.asarray(valid), nseg, prune=False, **kw)
+    assert np.array_equal(np.asarray(pr), np.asarray(un))
+    want = fused_segment_agg(jnp.asarray(vals), jnp.asarray(segs),
+                             jnp.asarray(valid), nseg, backend="jnp",
+                             moments=("argmin_first", "argmax_last"))
+    assert np.array_equal(np.asarray(pr[:, 4:]), np.asarray(want[:, 4:]))
+
+
+def test_moment_contract_validation():
+    v = jnp.zeros((8, 1), jnp.float32)
+    s = jnp.zeros(8, jnp.int32)
+    g = jnp.ones((8, 1), bool)
+    with pytest.raises(ValueError, match="tie|direction|columns"):
+        fused_segment_agg(v, s, g, 2, backend="jnp",
+                          moments=("argmin_first", "argmin_last"))
+    with pytest.raises(ValueError, match="unknown"):
+        fused_segment_agg(v, s, g, 2, backend="jnp", moments=("argmin",))
+    # index moments imply the matching extremum row
+    ms = normalize_moments(("argmax_first",), 1)
+    assert "max" in ms[0]
+    # row counts beyond f32-exact indices are refused (shape-level check,
+    # so eval_shape suffices — no 2^24-row array is materialized)
+    big = INDEX_EXACT_ROWS + 8
+    with pytest.raises(ValueError, match="2\\^24"):
+        jax.eval_shape(
+            lambda v, sg, gd: fused_segment_agg(
+                v, sg, gd, 2, backend="jnp", moments=("argmin_first",)),
+            jax.ShapeDtypeStruct((big, 1), jnp.float32),
+            jax.ShapeDtypeStruct((big,), jnp.int32),
+            jax.ShapeDtypeStruct((big, 1), jnp.bool_))
+
+
+def test_index_gate_matches_kernel_padding():
+    """The executors' use-index gate and the kernel's raise share ONE
+    predicate over the PADDED row count: a count just under 2^24 whose
+    block padding reaches the ceiling must fall back to the legacy pick,
+    not trip the kernel's ValueError mid-trace."""
+    from repro.kernels.segment_agg import index_moment_ok
+    assert index_moment_ok(INDEX_EXACT_ROWS - 256)
+    assert not index_moment_ok(INDEX_EXACT_ROWS - 100)  # pads up to 2^24
+    assert not index_moment_ok(INDEX_EXACT_ROWS)
+
+    def shape_only(n):
+        return jax.eval_shape(
+            lambda v, sg, gd: fused_segment_agg(
+                v, sg, gd, 2, backend="jnp", moments=("argmin_first",)),
+            jax.ShapeDtypeStruct((n, 1), jnp.float32),
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+            jax.ShapeDtypeStruct((n, 1), jnp.bool_))
+
+    shape_only(INDEX_EXACT_ROWS - 256)          # largest admissible count
+    with pytest.raises(ValueError, match="2\\^24"):
+        shape_only(INDEX_EXACT_ROWS - 100)
+
+
+# --------------------------------------------------------------------------
+# 2. grouped AggCall: fused == stream bit-for-bit, all four ops
+# --------------------------------------------------------------------------
+
+
+_SCHEMA = ("ps_partkey", "ps_suppkey", "ps_supplycost")
+
+
+def _arg_prog(op, init):
+    cond = {"<": Var("c") < Var("mc"), "<=": Var("c") <= Var("mc"),
+            ">": Var("c") > Var("mc"), ">=": Var("c") >= Var("mc")}[op]
+    return Program(
+        "argx", params=(),
+        pre=[let("mc", Const(init)), let("bs", Const(-1))],
+        loop=CursorLoop(Scan("PARTSUPP", _SCHEMA),
+                        fetch=[("c", "ps_supplycost"),
+                               ("s", "ps_suppkey")],
+                        body=[If(cond, [Assign("mc", Var("c")),
+                                        Assign("bs", Var("s"))])]),
+        post=[], returns=("mc", "bs"), var_dtypes={"bs": jnp.int32})
+
+
+def _grouped(prog, mode):
+    rp = aggify(prog)
+    return AggCall(rp.agg_call.child, rp.agg_call.aggregate,
+                   rp.agg_call.param_binding, rp.agg_call.ordered,
+                   rp.agg_call.sort_keys, rp.agg_call.sort_desc,
+                   group_keys=("ps_partkey",), mode=mode)
+
+
+def _tie_catalog(n=600, ngroups=23, seed=5):
+    """Integer-valued costs in a narrow range: every group has duplicate
+    extremal keys, and at n=600 the duplicates straddle the executor's
+    default 256-row kernel blocks.  Payloads are unique row ids, so a
+    wrong tie pick cannot cancel out."""
+    rng = np.random.default_rng(seed)
+    return {"PARTSUPP": Table.from_columns(
+        ps_partkey=np.sort(rng.integers(0, ngroups, n)).astype(np.int32),
+        ps_suppkey=np.arange(n, dtype=np.int32),
+        ps_supplycost=rng.integers(1, 5, n).astype(np.float32))}
+
+
+@pytest.mark.parametrize("backend", ["jnp", "interpret"])
+@pytest.mark.parametrize("op", ["<", "<=", ">", ">="])
+def test_grouped_arg_parity_bitwise(op, backend, monkeypatch):
+    monkeypatch.setenv("REPRO_SEGAGG_BACKEND", backend)
+    cat = _tie_catalog()
+    init = 1e9 if op in ("<", "<=") else -1e9
+    env = {"mc": jnp.float32(init), "bs": jnp.int32(-1)}
+    prog = _arg_prog(op, init)
+    want = execute(_grouped(prog, "stream"), cat, env).to_numpy()
+    got = execute(_grouped(prog, "fused"), cat, env).to_numpy()
+    assert set(want) == set(got)
+    for k in want:
+        assert np.array_equal(np.asarray(want[k]), np.asarray(got[k])), k
+
+
+def test_grouped_arg_empty_contribution_groups(monkeypatch):
+    """A guard that excludes every row of some groups: the pre-loop state
+    must survive (the index row's empty sentinel gates the beat)."""
+    monkeypatch.setenv("REPRO_SEGAGG_BACKEND", "interpret")
+    n = 60
+    rng = np.random.default_rng(9)
+    key = np.sort(rng.integers(0, 6, n)).astype(np.int32)
+    cost = rng.integers(1, 5, n).astype(np.float32)
+    cat = {"PARTSUPP": Table.from_columns(
+        ps_partkey=key, ps_suppkey=np.arange(n, dtype=np.int32),
+        ps_supplycost=cost)}
+    prog = Program(
+        "guardedArg", params=(),
+        pre=[let("mc", Const(1e9)), let("bs", Const(-7))],
+        loop=CursorLoop(Scan("PARTSUPP", _SCHEMA),
+                        fetch=[("c", "ps_supplycost"),
+                               ("s", "ps_suppkey")],
+                        body=[If(BinOp("and", Var("c") > Const(100.0),
+                                       Var("c") < Var("mc")),
+                                 [Assign("mc", Var("c")),
+                                  Assign("bs", Var("s"))])]),
+        post=[], returns=("mc", "bs"), var_dtypes={"bs": jnp.int32})
+    env = {"mc": jnp.float32(1e9), "bs": jnp.int32(-7)}
+    want = execute(_grouped(prog, "stream"), cat, env).to_numpy()
+    got = execute(_grouped(prog, "fused"), cat, env).to_numpy()
+    for k in want:
+        assert np.array_equal(np.asarray(want[k]), np.asarray(got[k])), k
+    assert np.all(got["bs"] == -7)      # nothing ever passes the guard
+
+
+def test_wide_int_key_expression_routes_to_exact_path(monkeypatch):
+    """Bugfix: the kernel casts key expressions to f32 before comparing;
+    an int32 key column (values may exceed 2^24) must therefore route to
+    the jnp path even when the key FIELD is f32 — the kernel must never
+    see an arg-extremum over a wide-int key."""
+    monkeypatch.setenv("REPRO_SEGAGG_BACKEND", "jnp")
+    import importlib
+    sk = importlib.import_module("repro.kernels.segment_agg")
+    seen = []
+    orig = sk.fused_segment_agg
+
+    def spy(*a, **k):
+        seen.append(k.get("moments"))
+        return orig(*a, **k)
+
+    monkeypatch.setattr(sk, "fused_segment_agg", spy)
+    n = 40
+    cat = {"PARTSUPP": Table.from_columns(
+        ps_partkey=np.sort(np.arange(n) % 4).astype(np.int32),
+        ps_suppkey=((1 << 24) + np.arange(n)).astype(np.int32),  # wide key
+        ps_supplycost=np.arange(n, dtype=np.float32))}
+    prog = Program(
+        "argWide", params=(),
+        pre=[let("mk", Const(1e18)), let("bc", Const(-1.0)),
+             let("tot", Const(0.0))],
+        loop=CursorLoop(Scan("PARTSUPP", _SCHEMA),
+                        fetch=[("k", "ps_suppkey"),
+                               ("c", "ps_supplycost")],
+                        body=[Assign("tot", Var("tot") + Var("c")),
+                              If(Var("k") < Var("mk"),
+                                 [Assign("mk", Var("k")),
+                                  Assign("bc", Var("c"))])]),
+        post=[], returns=("mk", "bc", "tot"))
+    env = {"mk": jnp.float32(1e18), "bc": jnp.float32(-1.0),
+           "tot": jnp.float32(0.0)}
+    want = execute(_grouped(prog, "stream"), cat, env).to_numpy()
+    got = execute(_grouped(prog, "fused"), cat, env).to_numpy()
+    for k in want:
+        np.testing.assert_allclose(np.asarray(want[k]), np.asarray(got[k]),
+                                   rtol=1e-6), k
+    # the sum update still went through the kernel; the arg update did not
+    assert seen, "fused path never reached the kernel"
+    flat = [m for ms in seen for m in ms]
+    assert any("sum" in ms for ms in flat)
+    assert not any("argmin" in m or "argmax" in m or m in ("min", "max")
+                   for ms in flat for m in ms), flat
+
+
+# --------------------------------------------------------------------------
+# 3. engine GroupAgg argmin/argmax
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", ["off", "jnp", "interpret"])
+def test_groupagg_arg_ops(backend, monkeypatch):
+    monkeypatch.setenv("REPRO_GROUPAGG_FUSED", backend)
+    rng = np.random.default_rng(3)
+    n = 300
+    key = np.sort(rng.integers(0, 19, n)).astype(np.int32)
+    cost = rng.integers(-4, 4, n).astype(np.float32)
+    pay = np.arange(n, dtype=np.int32)
+    t = Table.from_columns(k=key, c=cost, p=pay)
+    plan = GroupAgg(Scan("L", ("k", "c", "p")), ("k",),
+                    (("best", "argmin", ("c", "p")),
+                     ("worst", "argmax", ("c", "p")),
+                     ("n", "count", None)))
+    got = execute(plan, {"L": t}).to_numpy()
+    best, worst = {}, {}
+    for i in range(n):
+        g = key[i]
+        if g not in best or cost[i] < best[g][0]:
+            best[g] = (cost[i], pay[i])
+        if g not in worst or cost[i] > worst[g][0]:
+            worst[g] = (cost[i], pay[i])
+    groups = sorted(best)
+    assert np.array_equal(got["best"],
+                          np.array([best[g][1] for g in groups]))
+    assert np.array_equal(got["worst"],
+                          np.array([worst[g][1] for g in groups]))
+
+
+def test_groupagg_wide_int_key_exact(monkeypatch):
+    """Keys above 2^24 that collide in f32 stay on the exact per-op path:
+    the true (integer-compared) extremum row wins."""
+    monkeypatch.setenv("REPRO_GROUPAGG_FUSED", "jnp")
+    t = Table.from_columns(
+        k=np.array([0, 0, 1, 1], np.int32),
+        c=np.array([(1 << 24) + 2, (1 << 24) + 1, 5, 3], np.int32),
+        p=np.array([10, 20, 30, 40], np.int32))
+    plan = GroupAgg(Scan("L", ("k", "c", "p")), ("k",),
+                    (("b", "argmin", ("c", "p")),))
+    got = execute(plan, {"L": t}).to_numpy()
+    assert np.array_equal(got["b"], [20, 40])
+
+
+# --------------------------------------------------------------------------
+# 4. structure: no row-sized gathers; sharded arg-merge O(num_segments)
+# --------------------------------------------------------------------------
+
+
+def test_arg_select_tail_has_no_row_sized_gather():
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+    from benchmarks.arg_gather_spy import tail_gather_sizes
+    n = 4096
+    sizes = tail_gather_sizes(n=n, num_segments=129)
+    assert sizes, "expected the payload take in the tail"
+    assert all(s < n for s in sizes), sizes
+
+
+def test_whole_program_gathers_match_no_arg_baseline():
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+    from benchmarks.arg_gather_spy import whole_program_row_gathers
+    counts = whole_program_row_gathers(2_000, 64, "interpret")
+    assert counts["fused_argmin"] == counts["fused_minmax_baseline"], counts
+    assert counts["fused_argmin_legacy_select"] > counts["fused_argmin"], \
+        counts
+
+
+def test_sharded_arg_merge_in_subprocess_8way_mesh():
+    """8-way host mesh in a subprocess (plain tier-1 has one device):
+    duplicate extremal keys STRADDLE SHARD BOUNDARIES, first- and last-
+    attaining picks must match the stream executor bit-for-bit, payloads
+    come back from the shard-local gather, and every collective in the
+    sharded program is O(num_segments) — never row-sized."""
+    code = """
+import numpy as np, jax, jax.numpy as jnp, os
+assert jax.device_count() == 8, jax.device_count()
+from jax.sharding import Mesh
+from repro.core import Assign, Const, CursorLoop, If, Program, Var, aggify, let
+from repro.relational import GroupAgg, Scan, Table, execute
+from repro.relational.plan import AggCall
+
+mesh = Mesh(np.asarray(jax.devices()).reshape(8), ("data",))
+n, ngroups = 640, 7          # ~91 rows per group: every group straddles shards
+rng = np.random.default_rng(13)
+key = np.sort(rng.integers(0, ngroups, n)).astype(np.int32)
+cost = rng.integers(1, 4, n).astype(np.float32)     # duplicate extrema
+supp = np.arange(n, dtype=np.int32)
+schema = ("ps_partkey", "ps_suppkey", "ps_supplycost")
+cat = {"PARTSUPP": Table.from_columns(ps_partkey=key, ps_suppkey=supp,
+                                      ps_supplycost=cost)}
+cat_sh = {"PARTSUPP": cat["PARTSUPP"].shard_rows(mesh, "data")}
+
+def prog(op, init):
+    cond = {"<": Var("c") < Var("mc"), "<=": Var("c") <= Var("mc"),
+            ">": Var("c") > Var("mc"), ">=": Var("c") >= Var("mc")}[op]
+    return Program("argx", params=(),
+        pre=[let("mc", Const(init)), let("bs", Const(-1))],
+        loop=CursorLoop(Scan("PARTSUPP", schema),
+                        fetch=[("c", "ps_supplycost"), ("s", "ps_suppkey")],
+                        body=[If(cond, [Assign("mc", Var("c")),
+                                        Assign("bs", Var("s"))])]),
+        post=[], returns=("mc", "bs"), var_dtypes={"bs": jnp.int32})
+
+import repro.launch.sharded_agg as sa
+for op in ("<", "<=", ">", ">="):
+    init = 1e9 if op in ("<", "<=") else -1e9
+    p = prog(op, init)
+    rp = aggify(p)
+    env = {"mc": jnp.float32(init), "bs": jnp.int32(-1)}
+    def call(mode):
+        return AggCall(rp.agg_call.child, rp.agg_call.aggregate,
+                       rp.agg_call.param_binding, rp.agg_call.ordered,
+                       rp.agg_call.sort_keys, rp.agg_call.sort_desc,
+                       group_keys=("ps_partkey",), mode=mode)
+    want = execute(call("stream"), cat, env).to_numpy()
+    calls = []
+    orig = sa.sharded_fused_segment_agg
+    sa.sharded_fused_segment_agg = lambda *a, **k: (
+        calls.append(len(k.get("payloads", ()))), orig(*a, **k))[1]
+    got = execute(call("fused"), cat_sh, env).to_numpy()
+    sa.sharded_fused_segment_agg = orig
+    assert calls and calls[0] == 1, (op, calls)
+    for k in want:
+        assert np.array_equal(np.asarray(want[k]), np.asarray(got[k])), (op, k)
+
+# GroupAgg argmin/argmax over the sharded table
+t = Table.from_columns(k=key, c=cost, p=supp)
+plan = GroupAgg(Scan("L", ("k", "c", "p")), ("k",),
+                (("best", "argmin", ("c", "p")),
+                 ("worst", "argmax", ("c", "p"))))
+want = execute(plan, {"L": t}).to_numpy()
+got = execute(plan, {"L": t.shard_rows(mesh, "data")}).to_numpy()
+for k in want:
+    assert np.array_equal(np.asarray(want[k]), np.asarray(got[k])), k
+
+# every collective of the sharded arg program is O(num_segments)
+from repro.analysis.jaxpr_spy import iter_eqns
+from repro.kernels.segment_agg import fused_segment_agg
+import math
+segs = np.cumsum(np.concatenate([[1], key[1:] != key[:-1]])) - 1
+nseg = 129   # bucketed bound + overflow
+def run(v, s, g, pv):
+    return sa.sharded_fused_segment_agg(
+        v, s, g, nseg, mesh=mesh, axis="data", backend="jnp",
+        moments=("argmin_first",), assume_sorted=True,
+        payloads=((0, True, (pv,)),))
+closed = jax.make_jaxpr(run)(
+    jnp.asarray(cost[:, None]), jnp.asarray(segs.astype(np.int32)),
+    jnp.ones((n, 1), bool), jnp.asarray(supp))
+psum_sizes = [math.prod(eqn.outvars[0].aval.shape)
+              for eqn in iter_eqns(closed)
+              if eqn.primitive.name in ("psum", "pmin", "pmax")]
+assert psum_sizes, "no collectives traced"
+assert max(psum_sizes) < n, (max(psum_sizes), n)   # O(S), never O(rows)
+print("OK")
+"""
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env = {**os.environ,
+           "JAX_PLATFORMS": "cpu",
+           "XLA_FLAGS": (os.environ.get("XLA_FLAGS", "") +
+                         " --xla_force_host_platform_device_count=8"),
+           "PYTHONPATH": os.path.abspath(src) + os.pathsep +
+                         os.environ.get("PYTHONPATH", "")}
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, env=env)
+    assert r.returncode == 0 and "OK" in r.stdout, r.stderr

@@ -13,7 +13,7 @@ X = RNG.uniform(-5, 5, 97).astype(np.float32)
 
 
 def _rows(name):
-    if name == "argmin":
+    if name in ("argmin", "argmax"):
         return {"key": jnp.asarray(X),
                 "payload": jnp.arange(97, dtype=jnp.int32)}
     return {"x": jnp.asarray(X)}
@@ -23,7 +23,7 @@ def _expect(name):
     return {
         "sum": X.sum(), "count": 97, "min": X.min(), "max": X.max(),
         "avg": X.mean(), "argmin": int(X.argmin()),
-        "var": X.var(),
+        "argmax": int(X.argmax()), "var": X.var(),
     }[name]
 
 
@@ -47,6 +47,15 @@ def test_argmin_tie_prefers_first():
     x = jnp.asarray(np.array([3.0, 1.0, 1.0, 2.0], np.float32))
     rows = {"key": x, "payload": jnp.arange(4, dtype=jnp.int32)}
     agg = BUILTINS["argmin"]()
+    for nc in (1, 2, 4):
+        got = chunked(agg, rows, num_chunks=nc)
+        assert int(got) == 1, f"nc={nc}: first attaining row must win"
+
+
+def test_argmax_tie_prefers_first():
+    x = jnp.asarray(np.array([1.0, 3.0, 3.0, 2.0], np.float32))
+    rows = {"key": x, "payload": jnp.arange(4, dtype=jnp.int32)}
+    agg = BUILTINS["argmax"]()
     for nc in (1, 2, 4):
         got = chunked(agg, rows, num_chunks=nc)
         assert int(got) == 1, f"nc={nc}: first attaining row must win"
