@@ -26,7 +26,6 @@ Run as a module (the CI step) or import the helpers from tests:
 """
 from __future__ import annotations
 
-import os
 import sys
 
 import jax
@@ -43,7 +42,10 @@ def trace_grouped(prog, env, cat, mode, backend, max_groups):
     A dense group bound is declared so segment-sized tensors (the legal
     num_segments-scale takes) are statically distinguishable from
     row-capacity-sized ones (the scale the spy forbids) — without it
-    ``num_segments == capacity`` and the two coincide."""
+    ``num_segments == capacity`` and the two coincide.  The SORTED route
+    is pinned (``REPRO_GROUPAGG_SORTFREE=off``): this spy's claim is
+    about the sorted fused lowering; the sort-free lowering has its own
+    census (``benchmarks/sortfree_spy.py``)."""
     from repro.core import aggify
     from repro.relational.plan import AggCall
     rp = aggify(prog)
@@ -52,18 +54,15 @@ def trace_grouped(prog, env, cat, mode, backend, max_groups):
                    rp.agg_call.sort_keys, rp.agg_call.sort_desc,
                    group_keys=("ps_partkey",), mode=mode,
                    max_groups=max_groups)
-    prev = os.environ.get("REPRO_SEGAGG_BACKEND")
-    os.environ["REPRO_SEGAGG_BACKEND"] = backend
-    try:
-        def run():
-            t = execute(call, cat, env)
-            return tuple(t.columns.values()) + (t.valid,)
+    from benchmarks.util import pin_env
+
+    def run():
+        t = execute(call, cat, env)
+        return tuple(t.columns.values()) + (t.valid,)
+
+    with pin_env(REPRO_SEGAGG_BACKEND=backend,
+                 REPRO_GROUPAGG_SORTFREE="off"):
         return jax.make_jaxpr(run)()
-    finally:
-        if prev is None:
-            os.environ.pop("REPRO_SEGAGG_BACKEND", None)
-        else:
-            os.environ["REPRO_SEGAGG_BACKEND"] = prev
 
 
 def whole_program_row_gathers(n: int = 50_000, ngroups: int = 512,

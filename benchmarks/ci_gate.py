@@ -13,6 +13,11 @@ Compares a freshly produced ``bench_group_agg.json`` (``benchmarks/run.py
   must keep ``bounded < capacity`` on both the launched-grid and
   moment-bytes axes (previously a one-off inline assert in the
   workflow);
+* the sort-free acceptance pair: ``groupagg_sumcount_fused_sortfree``
+  must beat ``groupagg_sumcount_fused_sorted`` *within the same fresh
+  run* (same machine, same warm cache — run-to-run noise cancels), and
+  the ``groupagg_sortfree_sort_census`` row must report zero row-sized
+  sorts on the sort-free lowering;
 * a delta table of every row is printed so the perf trajectory is
   readable from the CI log.
 
@@ -31,6 +36,15 @@ TIMED_FLOOR_US = 100.0
 #: accounting rows whose ``derived`` field must keep bounded < capacity
 DENSE_BOUND_ROWS = ("groupagg_dense_bound_grid_steps",
                     "groupagg_dense_bound_moment_bytes")
+
+#: (sort-free row, sorted row) pairs: the sort-free time must win within
+#: the fresh artifact itself
+SORTFREE_PAIRS = (("groupagg_sumcount_fused_sortfree",
+                   "groupagg_sumcount_fused_sorted"),)
+
+#: sort-census row: the sort-free lowering must trace to zero row-sized
+#: sorts (and the sorted route to at least one, so the census works)
+SORT_CENSUS_ROW = "groupagg_sortfree_sort_census"
 
 
 def load_rows(path: str) -> dict[str, dict]:
@@ -57,6 +71,44 @@ def check_dense_bound(fresh: dict[str, dict]) -> list[str]:
                           f"capacity={capacity}")
         else:
             print(f"{name}: bounded={bounded} < capacity={capacity}")
+    return errors
+
+
+def check_sortfree(fresh: dict[str, dict]) -> list[str]:
+    errors = []
+    for free_name, sorted_name in SORTFREE_PAIRS:
+        free, sort = fresh.get(free_name), fresh.get(sorted_name)
+        if free is None or sort is None:
+            errors.append(f"{free_name} vs {sorted_name}: acceptance pair "
+                          f"missing from fresh run")
+            continue
+        f_us = float(free.get("us_per_call", 0.0))
+        s_us = float(sort.get("us_per_call", 0.0))
+        if f_us >= s_us:
+            errors.append(f"{free_name}: {f_us:.1f}us does not beat "
+                          f"{sorted_name}: {s_us:.1f}us")
+        else:
+            print(f"{free_name}: {f_us:.1f}us beats {sorted_name}: "
+                  f"{s_us:.1f}us ({s_us / max(f_us, 1e-9):.2f}x)")
+    row = fresh.get(SORT_CENSUS_ROW)
+    if row is None:
+        errors.append(f"{SORT_CENSUS_ROW}: census row missing from fresh "
+                      f"run")
+    else:
+        m = re.search(r"sortfree=(\d+)_sorted=(\d+)",
+                      row.get("derived", ""))
+        if not m:
+            errors.append(f"{SORT_CENSUS_ROW}: derived field not "
+                          f"parseable: {row.get('derived')!r}")
+        elif int(m.group(1)) != 0:
+            errors.append(f"{SORT_CENSUS_ROW}: sort-free lowering traces "
+                          f"to {m.group(1)} row-sized sorts (want 0)")
+        elif int(m.group(2)) < 1:
+            errors.append(f"{SORT_CENSUS_ROW}: sorted route traces to no "
+                          f"row-sized sort — census detector is broken")
+        else:
+            print(f"{SORT_CENSUS_ROW}: sortfree=0, sorted="
+                  f"{m.group(2)} (detector live)")
     return errors
 
 
@@ -108,13 +160,15 @@ def main(argv=None) -> int:
     baseline = load_rows(args.baseline)
     errors = gate(fresh, baseline, args.threshold)
     errors += check_dense_bound(fresh)
+    errors += check_sortfree(fresh)
     if errors:
         print()
         for e in errors:
             print("FAIL:", e, file=sys.stderr)
         return 1
     print("\nOK: no timed row regressed beyond "
-          f"{args.threshold:.1f}x; dense-bound accounting holds")
+          f"{args.threshold:.1f}x; dense-bound accounting holds; "
+          "sort-free beats sorted with a sort-free lowering")
     return 0
 
 

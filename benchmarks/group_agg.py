@@ -26,10 +26,18 @@ The ``groupagg_dense_bound_*`` rows account for the dense group bound
 moment-tensor bytes with ``max_groups`` declared vs the legacy
 capacity-sized segment range — CI asserts the bounded variant stays
 smaller on both axes.
+
+The SORT-FREE rows split the grouped pre-kernel stage and time the new
+route end to end: ``groupagg_sort_us`` (the sorted route's
+sort-and-derive stage — what sort-free deletes) vs ``groupagg_slot_us``
+(the hash-slotting replacement, relational/keyslot.py), and
+``groupagg_sumcount_fused_sorted`` vs ``groupagg_sumcount_fused_sortfree``
+— the same bounded fused sum/count GroupAgg with the route pinned off/on.
+``benchmarks/ci_gate.py`` asserts sort-free beats sorted on the fresh
+artifact, and ``benchmarks/sortfree_spy.py`` asserts the lowering stays
+sort-free structurally.
 """
 from __future__ import annotations
-
-import os
 
 import jax
 import jax.numpy as jnp
@@ -40,7 +48,7 @@ from repro.relational import execute
 from repro.relational.plan import AggCall, GroupAgg, Scan
 from repro.relational.table import Table
 
-from .util import emit, time_fn
+from .util import emit, pin_env, time_fn
 
 
 def _catalog(n: int, ngroups: int, seed: int = 0):
@@ -102,18 +110,10 @@ def _grouped(prog, mode):
 
 
 def _run_mode(call, cat, env, backend=None, repeats=3):
-    prev = os.environ.get("REPRO_SEGAGG_BACKEND")
-    if backend is not None:
-        os.environ["REPRO_SEGAGG_BACKEND"] = backend
-    try:
+    pins = {} if backend is None else {"REPRO_SEGAGG_BACKEND": backend}
+    with pin_env(**pins):
         fn = jax.jit(lambda: execute(call, cat, env))
         return time_fn(lambda: fn().columns, repeats=repeats, warmup=1)
-    finally:
-        if backend is not None:
-            if prev is None:
-                os.environ.pop("REPRO_SEGAGG_BACKEND", None)
-            else:
-                os.environ["REPRO_SEGAGG_BACKEND"] = prev
 
 
 def run(n: int = 50_000, ngroups: int = 512, repeats: int = 3,
@@ -156,6 +156,35 @@ def run(n: int = 50_000, ngroups: int = 512, repeats: int = 3,
          f"capacity={moment_tensor_bytes(1, n)}_"
          f"max_groups={ngroups}")
 
+    # sort-free split: the sorted route's pre-kernel stage (ONE variadic
+    # lax.sort + row gathers + adjacent-difference ids) vs the hash
+    # slotting that replaces it — and a structural census proving the
+    # sort-free lowering traces to ZERO row-sized sorts (sortfree_spy
+    # gates it; the row keeps the trajectory visible)
+    from repro.analysis.jaxpr_spy import count_row_sized_sorts
+    from repro.relational.engine import segment_ids_for
+    from repro.relational.group_bound import bucket_group_bound
+    from repro.relational.keyslot import slot_segment_ids
+    t_ps = cat["PARTSUPP"]
+    # the slot table needs the power-of-two bucket itself — s_bounded - 1
+    # would be the row capacity minus one on shapes where the bound
+    # degrades to capacity (small n), which is no bucket at all
+    bound = bucket_group_bound(ngroups)
+    sort_fn = jax.jit(lambda: segment_ids_for(
+        t_ps, ("ps_partkey",), num_segments=s_bounded)[1])
+    us_sort = time_fn(lambda: sort_fn(), repeats=repeats, warmup=1)
+    emit("groupagg_sort_us", us_sort, f"rows={n}_sorted_route_prestage")
+    slot_fn = jax.jit(lambda: slot_segment_ids(
+        t_ps, ("ps_partkey",), bound)[0])
+    us_slot = time_fn(lambda: slot_fn(), repeats=repeats, warmup=1)
+    emit("groupagg_slot_us", us_slot,
+         f"rows={n}_sortfree_replacement_speedup={us_sort / us_slot:.2f}x")
+    from benchmarks.sortfree_spy import trace_groupagg
+    census = (count_row_sized_sorts(trace_groupagg(n, ngroups, True), n),
+              count_row_sized_sorts(trace_groupagg(n, ngroups, False), n))
+    emit("groupagg_sortfree_sort_census", 0.0,
+         f"sortfree={census[0]}_sorted={census[1]}")
+
     # arg-extremum structure: with the kernel's index moment, the fused
     # argmin lowering adds NO row-sized gathers over the no-arg baseline
     # (the group sort owns them all); the legacy hit-detection select
@@ -186,9 +215,11 @@ def run(n: int = 50_000, ngroups: int = 512, repeats: int = 3,
 
         # correctness + kernel-path timing on a size the interpreter can
         # handle; on TPU this is the same compiled path as above
+        # (median-of-3: single-shot interpreter timings swing several x
+        # on shared runners, which would poison the committed baseline)
         us_interp = _run_mode(_grouped(prog, "fused"), small_cat, env,
                               backend="pallas" if on_tpu else "interpret",
-                              repeats=1)
+                              repeats=3)
         emit(f"groupagg_{name}_fused_kernel", us_interp,
              f"rows={interpret_rows}_interpret={not on_tpu}")
 
@@ -200,12 +231,10 @@ def run(n: int = 50_000, ngroups: int = 512, repeats: int = 3,
                      ("mn", "min", "ps_supplycost"),
                      ("mx", "max", "ps_supplycost"),
                      ("avg", "mean", "ps_supplycost")))
-    prev = os.environ.get("REPRO_GROUPAGG_FUSED")
-    try:
-        os.environ["REPRO_GROUPAGG_FUSED"] = "off"
+    with pin_env(REPRO_GROUPAGG_FUSED="off"):
         fn = jax.jit(lambda: execute(plan, cat))
         us_off = time_fn(lambda: fn().columns, repeats=repeats, warmup=1)
-        os.environ["REPRO_GROUPAGG_FUSED"] = "pallas" if on_tpu else "jnp"
+    with pin_env(REPRO_GROUPAGG_FUSED="pallas" if on_tpu else "jnp"):
         fn2 = jax.jit(lambda: execute(plan, cat))
         us_on = time_fn(lambda: fn2().columns, repeats=repeats, warmup=1)
         plan_b = GroupAgg(plan.child, plan.keys, plan.aggs,
@@ -213,17 +242,31 @@ def run(n: int = 50_000, ngroups: int = 512, repeats: int = 3,
         fn3 = jax.jit(lambda: execute(plan_b, cat))
         us_bounded = time_fn(lambda: fn3().columns, repeats=repeats,
                              warmup=1)
-    finally:
-        if prev is None:
-            os.environ.pop("REPRO_GROUPAGG_FUSED", None)
-        else:
-            os.environ["REPRO_GROUPAGG_FUSED"] = prev
+        # the acceptance pair: the SAME bounded fused sum/count GroupAgg
+        # with the sort-free route pinned off vs on — ci_gate.py asserts
+        # sortfree < sorted on every fresh artifact
+        plan_sc = GroupAgg(plan.child, plan.keys,
+                           (("s", "sum", "ps_supplycost"),
+                            ("c", "count", None)), max_groups=ngroups)
+        with pin_env(REPRO_GROUPAGG_SORTFREE="off"):
+            fn4 = jax.jit(lambda: execute(plan_sc, cat))
+            us_sc_sorted = time_fn(lambda: fn4().columns, repeats=repeats,
+                                   warmup=1)
+        with pin_env(REPRO_GROUPAGG_SORTFREE="on"):
+            fn5 = jax.jit(lambda: execute(plan_sc, cat))
+            us_sc_free = time_fn(lambda: fn5().columns, repeats=repeats,
+                                 warmup=1)
     emit("groupagg_builtin_per_op", us_off, "5_aggs_per_op_segment_ops")
     emit("groupagg_builtin_fused", us_on,
          f"speedup={us_off / us_on:.2f}x_one_pass")
     emit("groupagg_builtin_fused_bounded", us_bounded,
          f"speedup_vs_per_op={us_off / us_bounded:.2f}x_"
-         f"max_groups={ngroups}")
+         f"max_groups={ngroups}_route=sortfree_auto")
+    emit("groupagg_sumcount_fused_sorted", us_sc_sorted,
+         f"max_groups={ngroups}_route_pinned_sorted")
+    emit("groupagg_sumcount_fused_sortfree", us_sc_free,
+         f"beats_sorted={us_sc_sorted / us_sc_free:.2f}x_"
+         f"gated_by_ci_gate")
 
 
 if __name__ == "__main__":

@@ -1,11 +1,31 @@
 """Benchmark timing helpers + machine-readable result collection."""
 from __future__ import annotations
 
+import contextlib
 import json
+import os
 import time
 from typing import Callable
 
 import jax
+
+
+@contextlib.contextmanager
+def pin_env(**env: str):
+    """Temporarily pin routing env vars (REPRO_* kill switches / backend
+    overrides) and restore the previous values — shared by every bench /
+    spy that compares execution routes, so no hand-rolled save/restore
+    block can leak a pinned route into later rows."""
+    prev = {k: os.environ.get(k) for k in env}
+    os.environ.update(env)
+    try:
+        yield
+    finally:
+        for k, v in prev.items():
+            if v is None:
+                os.environ.pop(k, None)
+            else:
+                os.environ[k] = v
 
 #: every emit() lands here so the driver can dump a JSON artifact
 #: (benchmarks/run.py --json PATH); cleared per driver invocation

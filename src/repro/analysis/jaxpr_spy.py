@@ -11,11 +11,21 @@ no-arg baseline program rather than demanding zero: the arg-extremum must
 add nothing row-sized (``benchmarks/arg_gather_spy.py``, a tier-1 test,
 and a dedicated CI step all assert it).
 
+The second client is the SORT census of the sort-free grouped route
+(hash-slotted segment ids, relational/keyslot.py): its acceptance bound
+is that the traced program contains ZERO row-capacity-sized ``sort``
+equations — the group sort, its per-key argsorts, and ``compress`` all
+lower to the ``sort`` primitive, so ``count_row_sized_sorts`` pins "the
+sort stays deleted" structurally (``benchmarks/sortfree_spy.py``, a
+tier-1 test, and a CI step).
+
 Counting is done on the CLOSED jaxpr, pre-optimization: every ``jnp.take``
-/ advanced-index lowers to the ``gather`` primitive there, the counts are
+/ advanced-index lowers to the ``gather`` primitive there, every
+``jnp.argsort`` / ``lax.sort`` to the ``sort`` primitive, the counts are
 deterministic (no backend fusion heuristics), and sub-jaxprs — jit calls,
-scan bodies, shard_map bodies, and interpret-mode ``pallas_call`` kernels
-— are walked recursively, so nothing hides inside a call boundary.
+scan bodies, while bodies, shard_map bodies, and interpret-mode
+``pallas_call`` kernels — are walked recursively, so nothing hides inside
+a call boundary.
 """
 from __future__ import annotations
 
@@ -61,6 +71,31 @@ def gather_output_sizes(jaxpr) -> list[int]:
             shape = getattr(eqn.outvars[0].aval, "shape", ())
             sizes.append(int(math.prod(shape)))
     return sizes
+
+
+def sort_output_sizes(jaxpr) -> list[int]:
+    """Largest flattened output element count of every ``sort`` equation
+    in the (closed) jaxpr, recursing through call boundaries.  A variadic
+    sort (``lax.sort`` with several operands, e.g. ``Table.sort_by``'s
+    keys + iota permutation) is ONE equation — its widest output is the
+    size that matters, and fusing K argsorts into one variadic sort is
+    visible as K equations collapsing to one."""
+    sizes = []
+    for eqn in iter_eqns(jaxpr):
+        if eqn.primitive.name == "sort":
+            sizes.append(max(
+                int(math.prod(getattr(v.aval, "shape", ())))
+                for v in eqn.outvars))
+    return sizes
+
+
+def count_row_sized_sorts(jaxpr, n: int) -> int:
+    """Number of sort equations whose output is at least row-set-sized —
+    the acceptance metric of the sort-free grouped route: hash-slotted
+    segment assignment must leave ZERO of these in the traced program
+    (segment-sized sorts, should any appear, are legal — O(num_segments)
+    work was never the problem)."""
+    return sum(1 for s in sort_output_sizes(jaxpr) if s >= n)
 
 
 def count_row_sized_gathers(jaxpr, n: int) -> int:

@@ -286,6 +286,29 @@ def execute_agg_call(call: AggCall, catalog, env,
 # ---------------------------------------------------------------------------
 
 
+#: recognized update kinds whose merge algebra is commutative — the
+#: sort-free grouped route only fires when every update is one of these
+#: ('last' is positional over the *iteration* order, so it stays sorted)
+_ORDER_INSENSITIVE_KINDS = ("sum", "prod", "min", "max", "arg_group")
+
+
+def _sortfree_eligible(call: AggCall, agg: CustomAggregate, mode: str,
+                       bound) -> bool:
+    """True when the grouped call may skip the group sort entirely: a
+    dense bound is declared (the hash slot table is bucket-sized), the
+    call is order-insensitive (no Eq.-6 ordering, no sort keys), the
+    physical mode is set-oriented (the segmented scan IS sequential
+    semantics), and every recognized update folds with a commutative
+    merge."""
+    from repro.relational.keyslot import sortfree_enabled
+    return (bound is not None and sortfree_enabled()
+            and not call.ordered and not call.sort_keys
+            and mode in ("fused", "recognized")
+            and agg.recognized is not None
+            and all(u.kind in _ORDER_INSENSITIVE_KINDS
+                    for u in agg.recognized))
+
+
 def grouped_agg_call(call: AggCall, catalog, env,
                      var_dtypes=None) -> Table:
     agg: CustomAggregate = call.aggregate
@@ -295,40 +318,98 @@ def grouped_agg_call(call: AggCall, catalog, env,
     # columns the caller committed
     from repro.launch.sharded_agg import row_sharded_mesh
     shard_route = row_sharded_mesh(*t.columns.values(), t.valid)
-    sort_keys = tuple(call.group_keys) + tuple(call.sort_keys)
-    sort_desc = (False,) * len(call.group_keys) + tuple(
-        call.sort_desc or (False,) * len(call.sort_keys))
     from repro.relational.engine import segment_ids_for
     from repro.relational.group_bound import (check_group_overflow,
                                               poison_overflow,
                                               resolve_group_bound)
+    from repro.relational.keyslot import (overflow_extended,
+                                          slot_segment_ids,
+                                          sortfree_result)
     # dense segment range: AggCall-declared max_groups beats the table
     # hint; every segment tensor below (and the kernel / all-reduce
     # payload) is sized by it instead of the row capacity
     declared = call.max_groups if call.max_groups is not None \
         else t.group_bound
     nsegments, bound = resolve_group_bound(declared, t.capacity)
+    cap = t.capacity
+    mode = _resolve_grouped_mode(call, agg)
+
+    # bind params against the unsorted table first: routing only consults
+    # dtypes, and the sort-free route consumes these bindings as-is
+    rows: dict[str, jax.Array] = {}
+    outer_vals: dict[str, Any] = {}
+    for name, e in call.param_binding:
+        if isinstance(e, Col):
+            rows[name] = t.columns[e.name]
+        else:
+            outer_vals[name] = eval_expr(e, env)
+    _default_missing_fields(agg, env, outer_vals, var_dtypes)
+
+    sortfree = _sortfree_eligible(call, agg, mode, bound)
+    updates_split = None
+    if sortfree and shard_route is not None:
+        # sharded sort-free assigns slots per shard inside the launcher —
+        # only viable when the WHOLE aggregate lowers to the kernel pass
+        # (jnp-routed leftovers would need global segment ids), arg
+        # updates included: past the f32-exact index ceiling their
+        # legacy select tail needs global ids too
+        from repro.kernels.segment_agg import index_moment_ok
+        col_env = dict(outer_vals)
+        col_env.update(rows)
+        kernel_updates, rest = _split_kernel_updates(agg, outer_vals,
+                                                     col_env)
+        if (mode != "fused" or rest or not kernel_updates
+                or (any(u.kind == "arg_group" for u in kernel_updates)
+                    and not index_moment_ok(cap))):
+            sortfree = False
+        else:
+            updates_split = (kernel_updates, rest)
+
+    cols: dict[str, jax.Array] = {}
+    if sortfree:
+        st, m = t, t.mask()
+        if shard_route is not None:
+            out, (rep, out_valid, unplaced) = _grouped_fused(
+                agg, rows, outer_vals, m, None, nsegments,
+                backend=_segagg_backend(),
+                require_kernel=call.mode == "fused",
+                shard_route=shard_route,
+                sortfree_keys=tuple(call.group_keys), table=st,
+                updates_split=updates_split)
+        else:
+            seg, owner, occupied, unplaced = slot_segment_ids(
+                t, call.group_keys, bound)
+            rep, out_valid = overflow_extended(owner, occupied, cap)
+            if mode == "fused":
+                out = _grouped_fused(agg, rows, outer_vals, m, seg,
+                                     nsegments, backend=_segagg_backend(),
+                                     require_kernel=call.mode == "fused",
+                                     layout="unsorted")
+            else:
+                out = _grouped_recognized(agg, rows, outer_vals, m, seg,
+                                          nsegments)
+        return sortfree_result(st, call.group_keys, rep, out_valid,
+                               unplaced, bound,
+                               {v: out[v] for v in agg.terminate_vars})
+
+    sort_keys = tuple(call.group_keys) + tuple(call.sort_keys)
+    sort_desc = (False,) * len(call.group_keys) + tuple(
+        call.sort_desc or (False,) * len(call.sort_keys))
     st, seg, starts = segment_ids_for(
         t.sort_by(sort_keys, sort_desc), call.group_keys,
         num_segments=nsegments)
     # note: sort_by in segment_ids_for re-sorts by group keys only (stable),
     # preserving the intra-group order established above.
-    cap = st.capacity
     m = st.mask()
     nseg = jnp.sum(starts.astype(jnp.int32))
     overflow_ok = check_group_overflow(nseg, bound)
     out_valid = jnp.arange(nsegments) < nseg
 
-    rows: dict[str, jax.Array] = {}
-    outer_vals: dict[str, Any] = {}
+    # re-bind fetch-derived params against the SORTED rows
     for name, e in call.param_binding:
         if isinstance(e, Col):
             rows[name] = st.columns[e.name]
-        else:
-            outer_vals[name] = eval_expr(e, env)
-    _default_missing_fields(agg, env, outer_vals, var_dtypes)
 
-    cols: dict[str, jax.Array] = {}
     first_idx = jnp.where(starts, jnp.arange(cap), cap)
     first_of_seg = jax.ops.segment_min(first_idx, seg,
                                        num_segments=nsegments)
@@ -336,7 +417,6 @@ def grouped_agg_call(call: AggCall, catalog, env,
     for k in call.group_keys:
         cols[k] = jnp.take(st.columns[k], safe_first)
 
-    mode = _resolve_grouped_mode(call, agg)
     if mode == "fused":
         out = _grouped_fused(agg, rows, outer_vals, m, seg, nsegments,
                              backend=_segagg_backend(),
@@ -411,40 +491,12 @@ def _f32_exact_key_dtype(dt) -> bool:
     return False
 
 
-def _grouped_fused(agg, rows, outer_vals, valid, seg, num_segments, backend="auto",
-                   require_kernel=False, shard_route=None):
-    """Fused grouped aggregation: every recognized sum/min/max/arg-extremum
-    update over a ≤32-bit floating field is batched into ONE fused
-    segment-aggregate pass (each column carries its own guard mask, so
-    differently-guarded updates still share the traversal); remaining
-    updates (prod/last, float64/integer fields, wide-int/f64 arg-extremum
-    keys) run on the jnp segment path in the same XLA program.
-
-    Arg-extremum updates additionally request the kernel's INDEX MOMENT:
-    the attaining row index comes back as output rows 4/5 with the loop's
-    tie order, so the whole update is consumed with a num_segments-sized
-    payload take — no hit-detection equality scan, no full-row candidate
-    reduce, no row-capacity-sized gather (``_arg_select_from_index``).
-
-    ``require_kernel`` (an explicit ``mode='fused'`` request) raises
-    instead of silently running a kernel-free pass when every update is
-    dtype-routed to jnp.  ``shard_route`` = (mesh, axis) routes the kernel
-    pass through ``launch.sharded_agg.sharded_fused_segment_agg`` — one
-    kernel launch per row shard, moments all-reduced over the mesh axis,
-    arg-extremum payloads gathered shard-locally and merged as
-    O(num_segments) collectives (never O(rows))."""
-    from repro.kernels.segment_agg import (ARGMAX_ROW, ARGMIN_ROW,
-                                           fused_segment_agg,
-                                           index_moment_ok)
-
-    col_env = dict(outer_vals)
-    col_env.update(rows)
-    n = valid.shape[0]
-    # f32 row indices are exact below 2^24 PADDED rows (the same gate the
-    # kernel validates); beyond that the arg-extremum keeps the kernel
-    # key extremum but falls back to the legacy jnp pick
-    use_index = index_moment_ok(n)
-
+def _split_kernel_updates(agg, outer_vals, col_env):
+    """Partition the recognized updates into (kernel_updates, rest): the
+    fused kernel accumulates in f32, so only sum/min/max/arg_group
+    updates over ≤32-bit floating fields — with f32-exactly-embeddable
+    arg keys — take the kernel pass; everything else stays on the jnp
+    segment ops (in the same XLA program)."""
     kernel_updates = []
     rest = []
     for u in agg.recognized:
@@ -464,6 +516,56 @@ def _grouped_fused(agg, rows, outer_vals, valid, seg, num_segments, backend="aut
                 jax.eval_shape(lambda u=u: jnp.asarray(
                     eval_expr(u.exprs[0], col_env))).dtype)
         (kernel_updates if ok else rest).append(u)
+    return kernel_updates, rest
+
+
+def _grouped_fused(agg, rows, outer_vals, valid, seg, num_segments, backend="auto",
+                   require_kernel=False, shard_route=None,
+                   layout="sorted", sortfree_keys=None, table=None,
+                   updates_split=None):
+    """Fused grouped aggregation: every recognized sum/min/max/arg-extremum
+    update over a ≤32-bit floating field is batched into ONE fused
+    segment-aggregate pass (each column carries its own guard mask, so
+    differently-guarded updates still share the traversal); remaining
+    updates (prod/last, float64/integer fields, wide-int/f64 arg-extremum
+    keys) run on the jnp segment path in the same XLA program.
+
+    Arg-extremum updates additionally request the kernel's INDEX MOMENT:
+    the attaining row index comes back as output rows 4/5 with the loop's
+    tie order, so the whole update is consumed with a num_segments-sized
+    payload take — no hit-detection equality scan, no full-row candidate
+    reduce, no row-capacity-sized gather (``_arg_select_from_index``).
+
+    ``require_kernel`` (an explicit ``mode='fused'`` request) raises
+    instead of silently running a kernel-free pass when every update is
+    dtype-routed to jnp.  ``shard_route`` = (mesh, axis) routes the kernel
+    pass through ``launch.sharded_agg.sharded_fused_segment_agg`` — one
+    kernel launch per row shard, moments all-reduced over the mesh axis,
+    arg-extremum payloads gathered shard-locally and merged as
+    O(num_segments) collectives (never O(rows)).
+
+    SORT-FREE variants: ``layout='unsorted'`` runs the identical pass on
+    hash-slotted segment ids (no pre-sort happened).  ``sortfree_keys``
+    (+ ``table``, sharded only) hands slotting to the launcher itself —
+    each shard slots its own rows and the merge is key-aligned; ``seg``
+    is unused and the return value becomes ``(out, (rep_rows, out_valid,
+    unplaced))`` so the caller recovers representatives and validity
+    without global segment ids."""
+    from repro.kernels.segment_agg import (ARGMAX_ROW, ARGMIN_ROW,
+                                           fused_segment_agg,
+                                           index_moment_ok)
+
+    col_env = dict(outer_vals)
+    col_env.update(rows)
+    n = valid.shape[0]
+    # f32 row indices are exact below 2^24 PADDED rows (the same gate the
+    # kernel validates); beyond that the arg-extremum keeps the kernel
+    # key extremum but falls back to the legacy jnp pick
+    use_index = index_moment_ok(n)
+
+    kernel_updates, rest = (updates_split if updates_split is not None
+                            else _split_kernel_updates(agg, outer_vals,
+                                                       col_env))
     if require_kernel and not kernel_updates:
         raise ValueError(
             f"aggregate {agg.name!r}: no recognized update targets a ≤32-bit "
@@ -531,10 +633,25 @@ def _grouped_fused(agg, rows, outer_vals, valid, seg, num_segments, backend="aut
                 payload_slot[j] = len(payload_specs)
                 payload_specs.append((c, u.op in ("<", "<="), pvals))
 
-        # the grouped sort established the sorted-segs precondition by
-        # construction, so the band-pruned kernel skips its guard
+        # sorted layout: the grouped sort established the sorted-segs
+        # precondition by construction, so the band-pruned kernel skips
+        # its guard; unsorted layout (sort-free) never had an order
         payload_picks = ()
-        if shard_route is not None:
+        sortfree_extras = None
+        if sortfree_keys is not None:
+            from repro.launch.sharded_agg import \
+                sharded_sortfree_segment_agg
+            from repro.relational.keyslot import key_words_for
+            kw = key_words_for(table.columns[k] for k in sortfree_keys)
+            fused, payload_picks, rep, occupied, unplaced = \
+                sharded_sortfree_segment_agg(
+                    jnp.stack(cols, axis=1), kw, jnp.stack(masks, axis=1),
+                    valid, num_segments, num_segments - 1,
+                    mesh=shard_route[0], axis=shard_route[1],
+                    backend=backend, moments=kernel_moments,
+                    payloads=tuple(payload_specs))
+            sortfree_extras = (rep, occupied, unplaced)
+        elif shard_route is not None:
             from repro.launch.sharded_agg import sharded_fused_segment_agg
             res = sharded_fused_segment_agg(
                 jnp.stack(cols, axis=1), seg.astype(jnp.int32),
@@ -547,7 +664,7 @@ def _grouped_fused(agg, rows, outer_vals, valid, seg, num_segments, backend="aut
             fused = fused_segment_agg(
                 jnp.stack(cols, axis=1), seg.astype(jnp.int32),
                 jnp.stack(masks, axis=1), num_segments, backend=backend,
-                moments=kernel_moments, assume_sorted=True)
+                moments=kernel_moments, assume_sorted=True, layout=layout)
         for j, (u, c) in enumerate(zip(kernel_updates, upd_col)):
             f = u.fields[0]
             d = jnp.asarray(outer_vals[f]).dtype
@@ -580,6 +697,10 @@ def _grouped_fused(agg, rows, outer_vals, valid, seg, num_segments, backend="aut
     if rest:
         out.update(_grouped_recognized(agg, rows, outer_vals, valid, seg,
                                        num_segments, updates=tuple(rest)))
+    if sortfree_keys is not None:
+        # the caller pre-checked rest == [] and kernel_updates != [], so
+        # sortfree_extras was always produced on this path
+        return out, sortfree_extras
     return out
 
 

@@ -562,6 +562,31 @@ _MOMENT_ROW = {"sum": 0, "count": 1, "min": 2, "max": 3}
 _MOMENT_FILL = {"sum": 0.0, "count": 0.0, "min": POS_INF, "max": NEG_INF}
 
 
+def _segment_arg_index_unsorted(key: jax.Array, idx_cand: jax.Array,
+                                seg: jax.Array, num_segments: int, *,
+                                minimize: bool,
+                                tie_first: bool) -> jax.Array:
+    """Per-segment attaining row index for ARBITRARY (unsorted) segment
+    ids — the ``layout='unsorted'`` jnp formulation.  The associative-scan
+    trick of ``_segment_arg_index_scan`` needs segment-contiguous rows, so
+    this uses the hit-detection form instead: one segment extremum, one
+    row-sized ``best[seg]`` gather (the single row-sized gather of the
+    whole sort-free jnp route — still far below the sort it replaces),
+    and a tie-ordered index reduce.  Invalid rows carry the worst key and
+    the tie-identity index, so an empty segment's ``best`` (reduce
+    identity) only ever "hits" rows that resolve to the tie identity —
+    matching the sorted formulation bit for bit."""
+    segf = jax.ops.segment_min if minimize else jax.ops.segment_max
+    best = segf(key, seg, num_segments=num_segments)
+    hit = key == jnp.take(best, seg, mode="clip")
+    ident = POS_INF if tie_first else NEG_INF
+    cand = jnp.where(hit, idx_cand, jnp.float32(ident))
+    redf = jax.ops.segment_min if tie_first else jax.ops.segment_max
+    # empty segments reduce to the tie identity (the redf identity IS the
+    # tie identity for each order), so no extra emptiness gate is needed
+    return redf(cand, seg, num_segments=num_segments)
+
+
 def _segment_arg_index_scan(key: jax.Array, idx_cand: jax.Array,
                             seg: jax.Array, num_segments: int, *,
                             minimize: bool, tie_first: bool) -> jax.Array:
@@ -597,13 +622,18 @@ def _segment_arg_index_scan(key: jax.Array, idx_cand: jax.Array,
 
 def _segment_agg_jnp(vals: jax.Array, segs: jax.Array, valid: jax.Array,
                      num_segments: int,
-                     moments: tuple[tuple[str, ...], ...]) -> jax.Array:
+                     moments: tuple[tuple[str, ...], ...],
+                     sorted_segs: bool = True) -> jax.Array:
     """Pure-JAX fallback, identical math: (N, C) → (C, R, num_segments).
     ``moments`` is per-column; moment rows a column does not request hold
     their init identity (0 / 0 / ±inf, tie identity for index rows).
     Unlike the kernel (where the fused pass makes extra moments nearly
     free), each jnp moment is a separate segment op, so it runs once per
-    moment over exactly the columns that need it."""
+    moment over exactly the columns that need it.  The value moments are
+    order-independent (``jax.ops.segment_*`` scatter); only the index
+    moments care about ``sorted_segs`` — contiguous sorted segments get
+    the gather-free associative scan, arbitrary ids the hit-detection
+    form."""
     v = vals.astype(jnp.float32)
     seg = segs.astype(jnp.int32)
     num_cols = vals.shape[1]
@@ -647,9 +677,10 @@ def _segment_agg_jnp(vals: jax.Array, segs: jax.Array, valid: jax.Array,
                 key = jnp.where(valid[:, c], v[:, c], worst)
                 cand = jnp.where(valid[:, c], rowidx,
                                  POS_INF if tie else NEG_INF)
-                r = _segment_arg_index_scan(key, cand, seg, num_segments,
-                                            minimize=minimize,
-                                            tie_first=tie)
+                argf = (_segment_arg_index_scan if sorted_segs
+                        else _segment_arg_index_unsorted)
+                r = argf(key, cand, seg, num_segments,
+                         minimize=minimize, tie_first=tie)
                 out = out.at[c, row, :].set(r)
     return out
 
@@ -660,11 +691,13 @@ def fused_segment_agg(vals: jax.Array, segs: jax.Array, valid: jax.Array,
                       backend: str = "auto",
                       moments: tuple[str, ...] = MOMENTS,
                       prune: bool = True,
-                      assume_sorted: bool = False) -> jax.Array:
+                      assume_sorted: bool = False,
+                      layout: str = "sorted") -> jax.Array:
     """Fused multi-column segmented aggregation.
 
     ``vals``  (N,) or (N, C) — C value columns over the same row stream.
-    ``segs``  (N,) int, sorted ascending, in [0, num_segments).
+    ``segs``  (N,) int in [0, num_segments); sorted ascending under the
+    default ``layout='sorted'``, arbitrary under ``layout='unsorted'``.
     ``valid`` (N,) or (N, C) bool — per-column row validity (guards).
     ``moments`` restricts which of [sum, count, min, max] (plus the
     optional index moments ``argmin_first``/``argmin_last``/
@@ -687,10 +720,28 @@ def fused_segment_agg(vals: jax.Array, segs: jax.Array, valid: jax.Array,
     order by construction (the grouped executors sort first) pass
     ``assume_sorted=True`` to skip both checks.
 
+    ``layout='unsorted'`` is the sort-free grouped route's accumulation
+    mode: segment ids may arrive in ANY order (hash-slotted, see
+    relational/keyslot.py), so band pruning is disabled — the kernel
+    backends run the order-independent cross-product grid (whose one-hot
+    membership reduce never assumed an order; with a dense group bound
+    the segment range fits one tile and the "cross product" degenerates
+    to the plain row walk), the sorted-``segs`` validation is skipped
+    outright, and the jnp index moments switch from the contiguity-
+    dependent associative scan to the hit-detection form.  Every moment
+    — including the lexicographic (key, row) index merge — is a
+    commutative monoid, so results match the sorted layout exactly up to
+    f32 re-association of sums.
+
     Returns (C, R, num_segments) f32 with moment rows [sum, count, min,
     max(, argmin-index, argmax-index)]; empty segments read the
     identities [0, 0, +inf, -inf(, ±inf, ±inf)].
     """
+    if layout not in ("sorted", "unsorted"):
+        raise ValueError(f"unknown segment_agg layout {layout!r}; expected "
+                         "'sorted' or 'unsorted'")
+    if layout == "unsorted":
+        prune = False            # band pruning is meaningless out of order
     vals, valid = _normalize(jnp.asarray(vals), jnp.asarray(valid))
     num_cols = vals.shape[1]
     moments = normalize_moments(moments, num_cols)
@@ -703,12 +754,15 @@ def fused_segment_agg(vals: jax.Array, segs: jax.Array, valid: jax.Array,
     if backend == "auto":
         backend = "pallas" if jax.default_backend() == "tpu" else "jnp"
     if backend == "jnp":
-        return _segment_agg_jnp(vals, segs, valid, num_segments, moments)
+        return _segment_agg_jnp(vals, segs, valid, num_segments, moments,
+                                sorted_segs=layout == "sorted")
     if backend not in ("pallas", "interpret"):
         raise ValueError(f"unknown segment_agg backend {backend!r}")
     if block_segs is None:
         block_segs = default_block_segs(num_segments, block_rows)
-    check_sorted = _validate_sorted(segs, prune, assume_sorted, backend)
+    check_sorted = (layout == "sorted"
+                    and _validate_sorted(segs, prune, assume_sorted,
+                                         backend))
     return _segment_agg_pallas(vals, jnp.asarray(segs), valid, num_segments,
                                block_rows, int(block_segs),
                                interpret=backend == "interpret",

@@ -37,6 +37,20 @@ segment ids), so every contiguous row shard is itself sorted — the band
 pruning of ``kernels/segment_agg.py`` applies per shard, and each shard's
 pruned grid only walks the segment tiles its band actually touches.
 
+``sharded_sortfree_segment_agg`` is the SORT-FREE counterpart: rows
+arrive in arbitrary order and each shard hash-slots its own rows
+(relational/keyslot.py) before running the kernel in
+``layout='unsorted'``.  Shard-local slot numbers are hash-order and
+therefore NOT aligned across shards, so the merge is key-aligned
+instead: every shard publishes its (num_segments,)-sized slot→key table
+with one all-gather, re-slots the gathered (replicated) key set into one
+global table — a deterministic computation every shard repeats
+identically, no further collective — scatters its local (C, R, S) moment
+tensor onto the global slots, and only then runs the same
+psum/pmin/pmax + lexicographic arg-merge as the sorted path.  Every
+collective still moves O(num_segments) elements per shard; no sort, no
+row-sized exchange.
+
 ``num_segments`` sizes the all-reduce payload: the grouped executors pass
 the dense group bound (relational/group_bound.py) when one is declared, so
 the per-moment collectives move (C, 4, ~group count) elements instead of
@@ -60,10 +74,10 @@ from jax.sharding import PartitionSpec as P
 from repro.core.aggregate import Aggregate
 from repro.kernels.segment_agg import (ARGMAX_ROW, ARGMIN_ROW, MOMENTS,
                                        NEG_INF, POS_INF, _index_tie,
-                                       _normalize, _pad_rows,
+                                       _normalize, _pad_rows, _row_fills,
                                        _validate_sorted, fused_segment_agg,
                                        has_index_moments, index_moment_ok,
-                                       normalize_moments)
+                                       moment_rows, normalize_moments)
 
 
 def row_sharded_mesh(*arrays) -> Optional[tuple[Mesh, str]]:
@@ -289,3 +303,169 @@ def sharded_fused_segment_agg(vals: jax.Array, segs: jax.Array,
     if payloads:
         return out, picks
     return out
+
+
+def sharded_sortfree_segment_agg(vals: jax.Array, key_words: jax.Array,
+                                 valid: jax.Array, rowm: jax.Array,
+                                 num_segments: int, bucket: int, *,
+                                 mesh: Mesh, axis: str = "data",
+                                 backend: str = "auto",
+                                 block_rows: int = 256,
+                                 block_segs: int | None = None,
+                                 moments=MOMENTS, payloads=()):
+    """Sort-free row-sharded fused segmented aggregation: hash-slotted
+    segment ids per shard, key-aligned cross-shard merge.
+
+    ``key_words`` is the (N, K) canonical uint32 key matrix
+    (``keyslot.key_words_for``) and ``rowm`` the (N,) row-validity mask
+    the slotting honors (per-column guards still arrive via ``valid``).
+    Each shard assigns its rows slots in ``[0, bucket)`` independently
+    (``slot_ids_from_words``), runs ``fused_segment_agg`` in
+    ``layout='unsorted'`` on its slice, then aligns slots globally:
+    the shard-local slot→key tables are all-gathered (one
+    O(num_segments·K) collective), every shard re-slots the identical
+    gathered key set into one global table (replicated compute, so no
+    further exchange), and the local moment tensor is scattered onto the
+    global slots — unoccupied and unplaced slots park on the overflow
+    slot, whose merged content is never read as valid output.  From
+    there the merge algebra is exactly ``sharded_fused_segment_agg``'s:
+    psum/pmin/pmax per moment row, the lexicographic (key, global_row)
+    arg-merge for index rows, shard-local O(num_segments) payload
+    gathers combined by masked psum.
+
+    Returns ``(moments, picks, rep_rows, occupied, unplaced)``:
+    ``moments`` the merged (C, R, num_segments) tensor, ``picks`` the
+    per-payload (S,)-sized winner values (empty tuple without
+    ``payloads``), ``rep_rows`` (S,) int32 global representative row per
+    global slot (input-row indexing; ``N``-sentinel where unoccupied),
+    ``occupied`` (S,) bool, and ``unplaced`` the total count of valid
+    rows (plus gathered keys) the bucket could not hold — the caller
+    validates it with ``keyslot.check_slot_overflow``.
+    """
+    from repro.relational.keyslot import slot_ids_from_words
+
+    vals, valid = _normalize(jnp.asarray(vals), jnp.asarray(valid))
+    kw = jnp.asarray(key_words)
+    rowm = jnp.asarray(rowm, bool)
+    nshards = mesh.shape[axis]
+    num_cols = vals.shape[1]
+    norm_moments = normalize_moments(moments, num_cols)
+    indexed = has_index_moments(norm_moments)
+    if payloads and not indexed:
+        raise ValueError("shard-local payload gathering requires an index "
+                         "moment on the key column (argmin_*/argmax_*)")
+
+    n = vals.shape[0]
+    pad = (-n) % nshards
+    if pad:
+        # pad rows are invalid everywhere: they never slot, never
+        # contribute, and keep padded-space row indices == input indices
+        vals = jnp.pad(vals, ((0, pad), (0, 0)))
+        kw = jnp.pad(kw, ((0, pad), (0, 0)))
+        valid = jnp.pad(valid, ((0, pad), (0, 0)))
+        rowm = jnp.pad(rowm, (0, pad))
+    n_p = vals.shape[0]
+    if indexed and not index_moment_ok(n_p, block_rows):
+        raise ValueError(
+            f"index moments accumulate f32 row indices, exact only below "
+            f"2^24 (padded) total rows; got {n_p}")
+    shard_n = n_p // nshards
+    sh = NamedSharding(mesh, P(axis))
+    vals = jax.device_put(vals.astype(jnp.float32), sh)
+    kw = jax.device_put(kw, sh)
+    valid = jax.device_put(valid, sh)
+    rowm = jax.device_put(rowm, sh)
+    pv_flat: list[jax.Array] = []
+    for _c, _minimize, pvs in payloads:
+        for a in pvs:
+            a = jnp.asarray(a)
+            if a.shape[0] != n_p:
+                a = jnp.concatenate(
+                    [a, jnp.zeros((n_p - a.shape[0],), a.dtype)])
+            pv_flat.append(jax.device_put(a, sh))
+
+    nrows_m = moment_rows(norm_moments)
+    fills = jnp.asarray(_row_fills(norm_moments),
+                        jnp.float32).reshape(num_cols, nrows_m, 1)
+
+    def local(v, k, g, rm, *pv):
+        seg, owner, occ, unpl = slot_ids_from_words(k, rm, bucket)
+        out = fused_segment_agg(v, seg, g, num_segments,
+                                block_rows=block_rows,
+                                block_segs=block_segs, backend=backend,
+                                moments=norm_moments, layout="unsorted")
+        # publish this shard's slot→key table; re-slot the gathered set
+        # into ONE global table (identical on every shard — replicated
+        # compute over all-gathered data, not another collective)
+        ktab = jnp.take(k, jnp.clip(owner, 0, shard_n - 1), axis=0)
+        gk = lax.all_gather(ktab, axis)                # (nshards, S-1, K)
+        gocc = lax.all_gather(occ, axis)
+        gown = lax.all_gather(owner, axis)
+        eslot, eowner, gocc_glob, unpl_glob = slot_ids_from_words(
+            gk.reshape(nshards * bucket, k.shape[1]), gocc.reshape(-1),
+            bucket)
+        me = lax.axis_index(axis)
+        mine = lax.dynamic_slice_in_dim(eslot, me * bucket, bucket)
+        # scatter local moments onto global slots; unoccupied local slots
+        # (identity fills) and globally-unplaced keys park on overflow
+        tgt = jnp.concatenate([jnp.where(occ, mine, bucket),
+                               jnp.full((1,), bucket, jnp.int32)])
+        glocal = jnp.broadcast_to(fills, out.shape).at[:, :, tgt].set(out)
+
+        sm = lax.psum(glocal[:, 0], axis)
+        cnt = lax.psum(glocal[:, 1], axis)
+        mn = lax.pmin(glocal[:, 2], axis)
+        mx = lax.pmax(glocal[:, 3], axis)
+        if indexed:
+            offset = (me * shard_n).astype(out.dtype)
+            gi = _merge_index_rows(glocal, mn, mx, offset, norm_moments,
+                                   axis)
+            merged = jnp.concatenate(
+                [jnp.stack([sm, cnt, mn, mx], axis=1), gi], axis=1)
+        else:
+            merged = jnp.stack([sm, cnt, mn, mx], axis=1)
+
+        picks = []
+        it = iter(pv)
+        for c, minimize, pvs in payloads:
+            gkey = mn[c] if minimize else mx[c]
+            lkey = glocal[c, 2 if minimize else 3]
+            lp = glocal[c, ARGMIN_ROW if minimize else ARGMAX_ROW]
+            won = ((lkey == gkey)
+                   & (lp + offset == gi[c, 0 if minimize else 1])
+                   & (lp >= 0) & (lp < shard_n))
+            safe = jnp.clip(lp, 0, shard_n - 1).astype(jnp.int32)
+            per = []
+            for _ in pvs:
+                arr = next(it)
+                gathered = jnp.take(arr, safe)       # (S,)-sized, local rows
+                if gathered.dtype == jnp.bool_:
+                    r = lax.psum(jnp.where(won, gathered.astype(jnp.int32),
+                                           0), axis)
+                    per.append(r != 0)
+                else:
+                    per.append(lax.psum(
+                        jnp.where(won, gathered, jnp.zeros_like(gathered)),
+                        axis))
+            picks.append(tuple(per))
+
+        # global representative rows: decode each global slot's winning
+        # entry back to (shard, local slot) and globalize the local owner
+        # (padded-space indices == input-row indices: padding is a tail)
+        safe_e = jnp.clip(eowner, 0, nshards * bucket - 1)
+        rep = jnp.where(gocc_glob,
+                        (safe_e // bucket) * shard_n
+                        + jnp.take(gown.reshape(-1), safe_e), n_p)
+        rep_full = jnp.concatenate(
+            [rep.astype(jnp.int32), jnp.full((1,), n_p, jnp.int32)])
+        occ_full = jnp.concatenate([gocc_glob, jnp.zeros((1,), bool)])
+        unpl_tot = lax.psum(unpl, axis) + unpl_glob
+        return merged, tuple(picks), rep_full, occ_full, unpl_tot
+
+    out_specs = (P(), tuple(tuple(P() for _ in pvs)
+                            for _c, _m, pvs in payloads), P(), P(), P())
+    return shard_map(
+        local, mesh=mesh,
+        in_specs=(P(axis),) * (4 + len(pv_flat)),
+        out_specs=out_specs, check_rep=False)(vals, kw, valid, rowm,
+                                              *pv_flat)

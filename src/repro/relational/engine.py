@@ -110,7 +110,12 @@ def _gather_join(lt: Table, rt: Table, lkey: str, rkey: str, how: str) -> Table:
     rk = rt.columns[rkey]
     rvalid = rt.mask()
     rk_sortkey = _key_for_search(rk, rvalid)
-    order = jnp.argsort(rk_sortkey)
+    # stable, explicitly: searchsorted lands on the LEFTMOST equal sorted
+    # key, so with a stable order a (contract-violating) duplicate right
+    # key deterministically picks the smallest original row index —
+    # matching sort_by's stability contract instead of whatever an
+    # unstable sort happened to place first
+    order = jnp.argsort(rk_sortkey, stable=True)
     rk_sorted = jnp.take(rk_sortkey, order)
 
     lk = lt.columns[lkey]
@@ -224,6 +229,8 @@ def _group_agg(t: Table, keys: tuple[str, ...],
                max_groups: Optional[int] = None) -> Table:
     from .group_bound import (check_group_overflow, poison_overflow,
                               resolve_group_bound)
+    from .keyslot import (overflow_extended, slot_segment_ids,
+                          sortfree_enabled, sortfree_result)
     backend = _groupagg_fused_backend()
     # a row-sharded input table (Table.shard_rows) routes the fused pass
     # through the mesh — one kernel launch per row shard, moments
@@ -238,20 +245,7 @@ def _group_agg(t: Table, keys: tuple[str, ...],
     # without either, the row capacity is the only static bound available
     declared = max_groups if max_groups is not None else t.group_bound
     nsegments, bound = resolve_group_bound(declared, t.capacity)
-    st, seg, starts = segment_ids_for(t, keys, num_segments=nsegments)
-    cap = st.capacity
-    m = st.mask()
-    nseg = jnp.sum(starts.astype(jnp.int32))
-    overflow_ok = check_group_overflow(nseg, bound)
-    out_valid = jnp.arange(nsegments) < nseg
-
-    cols: dict[str, jax.Array] = {}
-    # representative key values: first row of each segment
-    first_idx = jnp.where(starts, jnp.arange(cap), cap)
-    first_of_seg = jax.ops.segment_min(first_idx, seg,
-                                       num_segments=nsegments)
-    for k in keys:
-        cols[k] = jnp.take(st.columns[k], jnp.clip(first_of_seg, 0, cap - 1))
+    cap = t.capacity
 
     def _fusable(op, col):
         # kernel accumulates in f32: float64 columns keep the exact per-op
@@ -269,18 +263,62 @@ def _group_agg(t: Table, keys: tuple[str, ...],
             from repro.core.executors import _f32_exact_key_dtype
             from repro.kernels.segment_agg import index_moment_ok
             return (index_moment_ok(cap)
-                    and _f32_exact_key_dtype(st.columns[col[0]].dtype))
+                    and _f32_exact_key_dtype(t.columns[col[0]].dtype))
         if col is None:
             return True
-        d = st.columns[col].dtype
+        d = t.columns[col].dtype
         return jnp.issubdtype(d, jnp.floating) and jnp.dtype(d).itemsize <= 4
 
     fused_aggs = [] if backend in (None, "off") else [
         (out, op, col) for out, op, col in aggs if _fusable(op, col)]
+    rest_aggs = tuple(a for a in aggs if a not in fused_aggs)
+
+    # SORT-FREE route: every GroupAgg op is an order-insensitive moment
+    # (commutative merge algebra), so whenever a dense bound is declared
+    # the hash-slotted segment assignment (relational/keyslot.py) replaces
+    # the group sort outright.  Sharded inputs additionally need every op
+    # on the fused pass — slots are assigned per shard inside the
+    # launcher, so the per-op segment fallbacks have no global ids.
+    sortfree = (bound is not None and sortfree_enabled()
+                and not (shard_route is not None
+                         and (rest_aggs or not fused_aggs)))
+
+    cols: dict[str, jax.Array] = {}
+    if sortfree and shard_route is not None:
+        out, (rep, out_valid, unplaced) = _group_agg_fused(
+            t, None, t.mask(), nsegments, fused_aggs, backend,
+            shard_route=shard_route, sortfree_keys=keys)
+        return sortfree_result(t, keys, rep, out_valid, unplaced, bound,
+                               out)
+
+    if sortfree:
+        st, m = t, t.mask()
+        seg, owner, occupied, unplaced = slot_segment_ids(t, keys, bound)
+        # occupied is a dense CLAIM-order prefix (not key order); key
+        # representatives, validation, and poisoning all happen in the
+        # shared sortfree_result epilogue after the aggregates compute
+        rep, out_valid = overflow_extended(owner, occupied, cap)
+        layout = "unsorted"
+    else:
+        st, seg, starts = segment_ids_for(t, keys, num_segments=nsegments)
+        m = st.mask()
+        nseg = jnp.sum(starts.astype(jnp.int32))
+        overflow_ok = check_group_overflow(nseg, bound)
+        out_valid = jnp.arange(nsegments) < nseg
+        # representative key values: first row of each segment
+        first_idx = jnp.where(starts, jnp.arange(cap), cap)
+        first_of_seg = jax.ops.segment_min(first_idx, seg,
+                                           num_segments=nsegments)
+        for k in keys:
+            cols[k] = jnp.take(st.columns[k],
+                               jnp.clip(first_of_seg, 0, cap - 1))
+        layout = "sorted"
+
     if fused_aggs:
         cols.update(_group_agg_fused(st, seg, m, nsegments, fused_aggs,
-                                     backend, shard_route=shard_route))
-        aggs = tuple(a for a in aggs if a not in fused_aggs)
+                                     backend, shard_route=shard_route,
+                                     layout=layout))
+    aggs = rest_aggs
 
     for out, op, col in aggs:
         if op == "count":
@@ -322,12 +360,16 @@ def _group_agg(t: Table, keys: tuple[str, ...],
             v = jnp.where(_bmask(m, v), v, jnp.zeros_like(v) if op == "sum" else jnp.ones_like(v))
         cols[out] = _SEG_OPS[op](v, seg, num_segments=nsegments)
 
+    if sortfree:
+        return sortfree_result(t, keys, rep, out_valid, unplaced, bound,
+                               cols)
     return Table(poison_overflow(cols, overflow_ok), out_valid)
 
 
 def _group_agg_fused(st: Table, seg: jax.Array, m: jax.Array,
                      num_segments: int, fused_aggs, backend: str,
-                     shard_route=None) -> dict[str, jax.Array]:
+                     shard_route=None, layout: str = "sorted",
+                     sortfree_keys=None):
     """Serve sum/count/min/max/mean/argmin/argmax GroupAgg ops from ONE
     fused segment-aggregate pass: each distinct value (or arg-extremum
     key) column is one kernel column; all requested moments come back
@@ -341,7 +383,15 @@ def _group_agg_fused(st: Table, seg: jax.Array, m: jax.Array,
     tensor.  ``shard_route`` = (mesh, axis): the pass runs per row shard
     with a cross-device moment merge, arg-extremum rows merged as
     lexicographic (key, global_row) collectives and payloads gathered
-    shard-locally (launch/sharded_agg.py)."""
+    shard-locally (launch/sharded_agg.py).
+
+    ``layout='unsorted'`` runs the same pass on hash-slotted (unsorted)
+    segment ids — the sort-free route.  ``sortfree_keys`` (the group-key
+    names, sharded sort-free only) makes the launcher slot each shard's
+    rows itself and merge key-aligned; ``seg`` is then unused and the
+    return value becomes ``(cols, (rep_rows, out_valid, unplaced))`` so
+    the caller can recover representatives/validity without global
+    segment ids."""
     from repro.core.executors import _index_row_to_pick
     from repro.kernels.segment_agg import (ARGMAX_ROW, ARGMIN_ROW,
                                            fused_segment_agg)
@@ -380,10 +430,23 @@ def _group_agg_fused(st: Table, seg: jax.Array, m: jax.Array,
                 payload_specs.append((col_idx[col[0]], op == "argmin",
                                       (st.columns[col[1]],)))
 
-    # segment_ids_for sorted the rows, so the band-pruned kernel may
-    # assume the sorted-segs precondition
+    # sorted layout: segment_ids_for sorted the rows, so the band-pruned
+    # kernel may assume the sorted-segs precondition; unsorted layout
+    # (sort-free) disables pruning and the check outright
     payload_picks = ()
-    if shard_route is not None:
+    sortfree_extras = None
+    if sortfree_keys is not None:
+        from repro.launch.sharded_agg import sharded_sortfree_segment_agg
+        from .keyslot import key_words_for
+        kw = key_words_for(st.columns[k] for k in sortfree_keys)
+        bucket = num_segments - 1
+        fused, payload_picks, rep, occupied, unplaced = \
+            sharded_sortfree_segment_agg(
+                vals, kw, m[:, None], m, num_segments, bucket,
+                mesh=shard_route[0], axis=shard_route[1], backend=backend,
+                moments=kernel_moments, payloads=tuple(payload_specs))
+        sortfree_extras = (rep, occupied, unplaced)
+    elif shard_route is not None:
         from repro.launch.sharded_agg import sharded_fused_segment_agg
         res = sharded_fused_segment_agg(
             vals, seg.astype(jnp.int32), m[:, None], num_segments,
@@ -395,7 +458,7 @@ def _group_agg_fused(st: Table, seg: jax.Array, m: jax.Array,
         fused = fused_segment_agg(vals, seg.astype(jnp.int32), m[:, None],
                                   num_segments, backend=backend,
                                   moments=kernel_moments,
-                                  assume_sorted=True)
+                                  assume_sorted=True, layout=layout)
 
     out: dict[str, jax.Array] = {}
     count = fused[0, 1]
@@ -429,6 +492,8 @@ def _group_agg_fused(st: Table, seg: jax.Array, m: jax.Array,
             out[name] = fused[i, 2].astype(d)
         else:  # max
             out[name] = fused[i, 3].astype(d)
+    if sortfree_extras is not None:
+        return out, sortfree_extras
     return out
 
 

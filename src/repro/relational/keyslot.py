@@ -1,0 +1,303 @@
+"""Sort-free dense group slotting: hash-slotted segment ids.
+
+The grouped executors historically derived segment ids by *sorting* the
+input on the group keys (``Table.sort_by`` + adjacent-difference,
+``engine.segment_ids_for``) — an O(N log N) materializing step the
+order-insensitive moment aggregates (sum/count/min/max and the
+arg-extremum index moment, all commutative merge algebras) never need.
+For those, grouping only requires a key → dense-segment *assignment*, not
+a total order.  This module is that assignment: a static-capacity,
+power-of-two, quadratic-probe hash table built entirely from XLA
+primitives (scatter-min claims + gathers inside one ``lax.while_loop``).
+The probe table is over-provisioned (``EXPAND ×`` the dense group bound
+of relational/group_bound.py, so the load factor is bounded at 1/EXPAND
+and probing terminates in a couple of O(N) rounds even at a full
+bucket); occupied probe slots then renumber densely into ``[0, bucket)``
+by one prefix sum, so everything segment-sized stays bucket-sized.
+
+Contract, mirroring the sorted route:
+
+* every valid row with the same group-key tuple gets the same slot in
+  ``[0, bucket)``; distinct tuples get distinct slots (hash collisions
+  are *resolved* by probing on full key equality, never assumed away);
+* invalid rows park in the dedicated overflow slot (``bucket`` — the
+  ``num_segments - 1`` slot ``resolve_group_bound`` reserves);
+* the bound is *validated, not assumed* (the ``check_group_overflow``
+  pattern): when the input carries more distinct keys than the bucket has
+  slots, probing exhausts the table and the unplaced rows are counted —
+  a concrete count raises eagerly, a traced one hands back a guard the
+  caller uses to poison its outputs.
+
+Unlike the sorted route, slot numbers are *probe-table order* (the
+order the keys' winning probe slots happen to sit in the table), not
+key order: the ``occupied`` mask is still a dense ``[0, #groups)``
+prefix — the densifying prefix sum guarantees it — but which group owns
+which slot is hash-determined, and the representative row of each group
+comes from the ``owner`` table rather than from segment starts.  Key
+equality is *bitwise on canonical words*:
+floats compare after a −0.0 → +0.0 normalization (so ±0 share a group,
+as value equality would), and NaN keys — which value equality would
+splinter into one group per row — share a group per bit pattern, the
+SQL-flavored choice.
+
+Probing cost: all rows of one key share one hash, so they probe in
+lockstep — the loop runs for the *maximum probe length over keys*, each
+round a handful of O(N) elementwise ops plus one table-sized
+scatter-min.  Quadratic probing (triangular increments, which visit
+every slot of a power-of-two table) plus the 1/EXPAND load bound keeps
+that maximum at a couple of rounds on real key sets; the bench shape
+(50k rows, a full 512-slot bucket) slots in well under the variadic
+sort it replaces.
+"""
+from __future__ import annotations
+
+import os
+from typing import Iterable
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+__all__ = [
+    "canonical_key_words", "key_words_for", "slot_ids_from_words",
+    "slot_segment_ids", "check_slot_overflow", "overflow_extended",
+    "sortfree_enabled", "sortfree_result",
+]
+
+
+def sortfree_enabled() -> bool:
+    """Kill switch for the sort-free grouped route (default: on).  The
+    route additionally requires a declared dense group bound and an
+    order-insensitive call — this only gates the dispatch.
+    ``REPRO_GROUPAGG_SORTFREE=off`` forces every grouped call back onto
+    the sorted route."""
+    return os.environ.get("REPRO_GROUPAGG_SORTFREE") != "off"
+
+
+# ---------------------------------------------------------------------------
+# Canonical key words: every key column becomes 1–2 uint32 words whose
+# bitwise equality coincides with group equality
+# ---------------------------------------------------------------------------
+
+
+def canonical_key_words(col: jax.Array) -> tuple[jax.Array, ...]:
+    """Lower one key column to uint32 words with group-equality semantics:
+    equal keys ⇒ equal words, distinct keys ⇒ distinct words (exactly —
+    no narrowing cast is ever taken, so wide-int/f64 keys slot exactly
+    where the f32 kernel arg path cannot).  Floats normalize −0.0 to
+    +0.0 first; 64-bit dtypes split into (hi, lo) words."""
+    col = jnp.asarray(col)
+    d = jnp.dtype(col.dtype)
+    if d == jnp.bool_:
+        return (col.astype(jnp.uint32),)
+    if jnp.issubdtype(d, jnp.unsignedinteger):
+        if d.itemsize <= 4:
+            return (col.astype(jnp.uint32),)
+        return ((col >> 32).astype(jnp.uint32), col.astype(jnp.uint32))
+    if jnp.issubdtype(d, jnp.integer):
+        if d.itemsize <= 4:
+            return (lax.bitcast_convert_type(col.astype(jnp.int32),
+                                             jnp.uint32),)
+        u = lax.bitcast_convert_type(col, jnp.uint64)
+        return ((u >> jnp.uint64(32)).astype(jnp.uint32),
+                u.astype(jnp.uint32))
+    if jnp.issubdtype(d, jnp.floating):
+        if d.itemsize <= 4:
+            f = col.astype(jnp.float32)          # f16/bf16 embed exactly
+            f = jnp.where(f == 0, jnp.float32(0.0), f)
+            return (lax.bitcast_convert_type(f, jnp.uint32),)
+        f = jnp.where(col == 0, jnp.zeros((), d), col)
+        u = lax.bitcast_convert_type(f, jnp.uint64)
+        return ((u >> jnp.uint64(32)).astype(jnp.uint32),
+                u.astype(jnp.uint32))
+    raise TypeError(f"unhashable group-key dtype {d} (expected bool, "
+                    "integer, or floating)")
+
+
+def key_words_for(columns: Iterable[jax.Array]) -> jax.Array:
+    """Stack the canonical words of every key column into one (N, K)
+    uint32 matrix — the unit the slotting, the hash, and the sharded
+    key-table exchange all operate on."""
+    words: list[jax.Array] = []
+    for c in columns:
+        words.extend(canonical_key_words(c))
+    return jnp.stack(words, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Hash + probe loop
+# ---------------------------------------------------------------------------
+
+
+def _rotl(x: jax.Array, r: int) -> jax.Array:
+    return (x << r) | (x >> (32 - r))
+
+
+def _hash_words(words: jax.Array) -> jax.Array:
+    """murmur3-style mix of the (N, K) word matrix into one uint32 hash
+    per row (uint32 arithmetic wraps in XLA, which is the point)."""
+    h = jnp.full(words.shape[:1], 0x9E3779B9, jnp.uint32)
+    for k in range(words.shape[1]):
+        w = words[:, k] * jnp.uint32(0xCC9E2D51)
+        w = _rotl(w, 15) * jnp.uint32(0x1B873593)
+        h = _rotl(h ^ w, 13) * jnp.uint32(5) + jnp.uint32(0xE6546B64)
+    h ^= jnp.uint32(words.shape[1])
+    h = (h ^ (h >> 16)) * jnp.uint32(0x85EBCA6B)
+    h = (h ^ (h >> 13)) * jnp.uint32(0xC2B2AE35)
+    return h ^ (h >> 16)
+
+
+#: probe-table expansion: the hash table has ``EXPAND × bucket`` slots,
+#: bounding the load factor at 1/EXPAND by construction — probing stays a
+#: couple of rounds even when the key set fills the declared bucket
+#: exactly (a full table would otherwise probe O(√bucket) rounds, each an
+#: O(N) scatter).  The table is scratch: occupied probe slots densify to
+#: ``[0, bucket)`` by prefix-sum before anything segment-sized is built,
+#: so the moment tensors never see the expansion.
+EXPAND = 16
+
+
+def slot_ids_from_words(words: jax.Array, valid: jax.Array,
+                        bucket: int) -> tuple[jax.Array, jax.Array,
+                                              jax.Array, jax.Array]:
+    """Assign each valid row a dense slot in ``[0, bucket)`` keyed by its
+    canonical word tuple.  Returns ``(seg, owner, occupied, overflowed)``:
+
+    * ``seg``        (N,)      int32 — the slot; invalid rows AND rows
+                     whose key exceeded the bucket (more distinct keys
+                     than slots) hold ``bucket``, the overflow slot;
+    * ``owner``      (bucket,) int32 — the representative row index that
+                     claimed each slot (``N`` where the slot is empty);
+    * ``occupied``   (bucket,) bool  — which slots hold a real group (a
+                     dense prefix: slot numbers are claim-order);
+    * ``overflowed`` ()        int32 — valid rows parked in the overflow
+                     slot; nonzero means the key set overflowed the
+                     bucket (``check_slot_overflow`` validates it).
+
+    Probe round ``p`` of a row with hash ``h`` tries probe-table slot
+    ``(h + p(p+1)/2) mod M`` (``M = EXPAND × bucket``; triangular
+    increments visit every slot of a power-of-two table, so ``M`` rounds
+    are exhaustive): empty slots are claimed by the smallest contending
+    row index (scatter-min), then every prober compares its key words
+    against the slot owner's — equal places, different probes on.  A
+    claim winner always places on its own claim, so every non-empty slot
+    is owned by a row of the key that lives there; hash collisions cost
+    extra rounds, never wrong slots.  The sparse probe slots then
+    renumber densely by a prefix sum over the occupancy mask — keys
+    beyond the first ``bucket`` (overflow) park with the invalid rows.
+    """
+    if bucket & (bucket - 1) or bucket <= 0:
+        raise ValueError(f"bucket must be a positive power of two, got "
+                         f"{bucket}")
+    words = jnp.asarray(words)
+    n = words.shape[0]
+    m = bucket * EXPAND
+    h = _hash_words(words)
+    idx = jnp.arange(n, dtype=jnp.int32)
+    mask = jnp.uint32(m - 1)
+    valid = jnp.asarray(valid, bool)
+
+    def cond(st):
+        _tbl, _slot, active, rnd = st
+        return (rnd < m) & jnp.any(active)
+
+    def body(st):
+        # every still-active row has probed exactly `rnd` times, so the
+        # probe counter IS the round counter — no per-row carry needed
+        tbl, slot, active, rnd = st
+        p = rnd.astype(jnp.uint32)
+        cand = ((h + (p * (p + 1)) // 2) & mask).astype(jnp.int32)
+        claim = jnp.full((m,), n, jnp.int32).at[cand].min(
+            jnp.where(active, idx, n), mode="promise_in_bounds")
+        tbl = jnp.where(tbl == n, claim, tbl)
+        own = jnp.take(tbl, cand, mode="clip")
+        ow = jnp.take(words, jnp.clip(own, 0, max(n - 1, 0)), axis=0,
+                      mode="clip")
+        eq = (own < n) & jnp.all(ow == words, axis=1)
+        slot = jnp.where(active & eq, cand, slot)
+        active = active & ~eq
+        return tbl, slot, active, rnd + 1
+
+    st0 = (jnp.full((m,), n, jnp.int32),
+           jnp.full((n,), m, jnp.int32), valid, jnp.int32(0))
+    tbl, slot, active, _rnd = lax.while_loop(cond, body, st0)
+
+    # densify: occupied probe slots renumber to [0, #groups) in slot
+    # order; groups past the bucket (and probe-exhausted rows, possible
+    # only when distinct keys exceed M ≥ bucket) overflow
+    occ_m = tbl < n
+    dense = jnp.cumsum(occ_m.astype(jnp.int32)) - 1
+    d = jnp.take(dense, jnp.clip(slot, 0, m - 1), mode="clip")
+    placed = ~active & valid & (d < bucket)
+    seg = jnp.where(placed, d, bucket).astype(jnp.int32)
+    owner = jnp.full((bucket,), n, jnp.int32).at[
+        jnp.where(occ_m & (dense < bucket), dense, bucket)].set(
+        tbl, mode="drop")
+    occupied = jnp.arange(bucket) < jnp.minimum(dense[-1] + 1, bucket)
+    overflowed = jnp.sum((valid & (seg == bucket)).astype(jnp.int32))
+    return seg, owner, occupied, overflowed
+
+
+def slot_segment_ids(table, keys: Iterable[str], bucket: int):
+    """``slot_ids_from_words`` over a Table's group-key columns and row
+    mask — the sort-free counterpart of ``engine.segment_ids_for`` (same
+    overflow-parking convention; representative rows come from ``owner``
+    instead of segment starts, validity from ``occupied`` instead of a
+    dense prefix)."""
+    words = key_words_for(table.columns[k] for k in keys)
+    return slot_ids_from_words(words, table.mask(), bucket)
+
+
+def overflow_extended(owner: jax.Array, occupied: jax.Array,
+                      capacity: int) -> tuple[jax.Array, jax.Array]:
+    """Extend the (bucket,)-sized ``owner``/``occupied`` tables with the
+    overflow slot, giving the ``num_segments``-sized representative-row
+    and output-validity arrays the grouped executors build their result
+    Table from: the overflow slot is never a real group (valid False)
+    and its representative parks at ``capacity`` (callers clip before
+    gathering key values).  One place owns this convention so the
+    engine's GroupAgg and the executors' grouped AggCall cannot
+    diverge."""
+    rep = jnp.concatenate([owner, jnp.full((1,), capacity, jnp.int32)])
+    out_valid = jnp.concatenate([occupied, jnp.zeros((1,), bool)])
+    return rep, out_valid
+
+
+def sortfree_result(table, keys: Iterable[str], rep: jax.Array,
+                    out_valid: jax.Array, unplaced, bucket: int,
+                    agg_cols: dict):
+    """Assemble the sort-free grouped result Table — the ONE epilogue
+    both grouped executors (engine ``GroupAgg`` and the executors'
+    grouped ``AggCall``) share, so the overflow/representative
+    convention cannot diverge between them: validate the overflow count
+    (concrete raise / traced poison guard), gather one representative
+    row of key values per slot (``rep`` already carries the overflow
+    sentinel; clipped before the take), and stamp the claim-order
+    validity mask."""
+    from .group_bound import poison_overflow
+    from .table import Table
+    overflow_ok = check_slot_overflow(unplaced, bucket)
+    cap = table.capacity
+    safe_rep = jnp.clip(rep, 0, cap - 1)
+    cols = {k: jnp.take(table.columns[k], safe_rep) for k in keys}
+    cols.update(agg_cols)
+    return Table(poison_overflow(cols, overflow_ok), out_valid)
+
+
+def check_slot_overflow(unplaced, bucket: int):
+    """Validate that every valid row found a real slot — the sort-free
+    face of the dense-bound validation
+    (``group_bound.check_group_overflow``): valid rows land in the
+    overflow slot exactly when the input carries more distinct keys than
+    the declared bucket.  Concrete counts raise eagerly; traced counts
+    return the ``ok`` guard the caller feeds to ``poison_overflow``;
+    ``None`` means the bound held."""
+    if isinstance(unplaced, jax.core.Tracer):
+        return unplaced == 0
+    if int(unplaced) > 0:
+        raise ValueError(
+            f"sort-free grouped aggregation: {int(unplaced)} rows carry "
+            f"group keys beyond the declared dense bound ({bucket} slots; "
+            f"max_groups bucketed to the next power-of-two lane multiple) "
+            f"— raise max_groups or drop the declaration")
+    return None

@@ -14,6 +14,7 @@ from typing import Any, Dict, Iterable, Mapping, Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax import lax
 
 
 @jax.tree_util.register_pytree_node_class
@@ -100,18 +101,24 @@ class Table:
                      self.group_bound)
 
     def sort_by(self, keys: Iterable[str], descending: Iterable[bool] = ()) -> "Table":
-        """Stable multi-key sort; invalid rows sort last."""
+        """Stable multi-key sort; invalid rows sort last.
+
+        ONE variadic ``lax.sort``: the validity flag (invalid-last) leads,
+        the transformed key columns follow in precedence order, and an
+        iota operand rides along as the permutation payload — so a K-key
+        sort costs a single fused sort instead of K stable argsorts plus
+        2K row gathers (the pre-variadic formulation), and the only row
+        gather left is the final ``take(order)``."""
         keys = list(keys)
         desc = list(descending) or [False] * len(keys)
-        order = jnp.argsort(~self.mask(), stable=True)  # seed: valid first
-        # apply keys right-to-left for stable multi-key ordering
-        for k, d in reversed(list(zip(keys, desc))):
-            col = jnp.take(self.columns[k], order, mode="clip")
-            m = jnp.take(self.mask(), order, mode="clip")
-            key = _sort_key(col, d, m)
-            perm = jnp.argsort(key, stable=True)
-            order = jnp.take(order, perm)
-        return self.take(order)
+        m = self.mask()
+        ops = [(~m).astype(jnp.int8)]
+        for k, d in zip(keys, desc):
+            ops.append(_sort_key(self.columns[k], d, m))
+        iota = lax.iota(jnp.int32, self.capacity)
+        res = lax.sort(tuple(ops) + (iota,), dimension=0, is_stable=True,
+                       num_keys=len(ops))
+        return self.take(res[-1])
 
     def head(self, n: int) -> "Table":
         c = self.compress()
