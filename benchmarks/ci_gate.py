@@ -18,6 +18,11 @@ Compares a freshly produced ``bench_group_agg.json`` (``benchmarks/run.py
   run* (same machine, same warm cache — run-to-run noise cancels), and
   the ``groupagg_sortfree_sort_census`` row must report zero row-sized
   sorts on the sort-free lowering;
+* the serving acceptance rows (``serve_agg_*``, when present in the
+  fresh artifact): the cached p50 must beat the fresh-jit-per-call p50
+  by more than 2x, the slot table must have been built exactly once for
+  the whole bench stream, and the trace count must stay within the
+  shape-bucket budget the bench declares (no retrace storm);
 * a delta table of every row is printed so the perf trajectory is
   readable from the CI log.
 
@@ -112,6 +117,49 @@ def check_sortfree(fresh: dict[str, dict]) -> list[str]:
     return errors
 
 
+#: serving acceptance: cached p50 must beat uncached p50 by this factor
+SERVE_SPEEDUP = 2.0
+SERVE_ROWS = ("serve_agg_uncached_p50", "serve_agg_cached_p50",
+              "serve_agg_counters")
+
+
+def check_serving(fresh: dict[str, dict]) -> list[str]:
+    if not any(name in fresh for name in SERVE_ROWS):
+        return []                    # bench not in this run's --only set
+    errors = []
+    missing = [name for name in SERVE_ROWS if name not in fresh]
+    if missing:
+        return [f"serve_agg: acceptance rows missing from fresh run: "
+                f"{', '.join(missing)}"]
+    un = float(fresh["serve_agg_uncached_p50"].get("us_per_call", 0.0))
+    ca = float(fresh["serve_agg_cached_p50"].get("us_per_call", 0.0))
+    if ca * SERVE_SPEEDUP >= un:
+        errors.append(f"serve_agg_cached_p50: {ca:.1f}us does not beat "
+                      f"serve_agg_uncached_p50: {un:.1f}us by more than "
+                      f"{SERVE_SPEEDUP:.1f}x")
+    else:
+        print(f"serve_agg_cached_p50: {ca:.1f}us beats uncached "
+              f"{un:.1f}us ({un / max(ca, 1e-9):.1f}x > "
+              f"{SERVE_SPEEDUP:.1f}x)")
+    derived = fresh["serve_agg_counters"].get("derived", "")
+    m = re.search(r"traces=(\d+)_buckets=(\d+)_slot_builds=(\d+)_"
+                  r"requests=(\d+)", derived)
+    if not m:
+        return errors + [f"serve_agg_counters: derived field not "
+                         f"parseable: {derived!r}"]
+    traces, buckets, builds, reqs = map(int, m.groups())
+    if builds != 1:
+        errors.append(f"serve_agg_counters: slot_builds={builds} (want "
+                      f"exactly 1 for the whole {reqs}-request stream)")
+    if traces > buckets:
+        errors.append(f"serve_agg_counters: traces={traces} exceeds the "
+                      f"shape-bucket budget {buckets} (retrace storm)")
+    if not errors:
+        print(f"serve_agg_counters: traces={traces} <= buckets={buckets}, "
+              f"slot_builds=1 across {reqs} requests")
+    return errors
+
+
 def gate(fresh: dict[str, dict], baseline: dict[str, dict],
          threshold: float) -> list[str]:
     errors = []
@@ -161,6 +209,7 @@ def main(argv=None) -> int:
     errors = gate(fresh, baseline, args.threshold)
     errors += check_dense_bound(fresh)
     errors += check_sortfree(fresh)
+    errors += check_serving(fresh)
     if errors:
         print()
         for e in errors:
@@ -168,7 +217,8 @@ def main(argv=None) -> int:
         return 1
     print("\nOK: no timed row regressed beyond "
           f"{args.threshold:.1f}x; dense-bound accounting holds; "
-          "sort-free beats sorted with a sort-free lowering")
+          "sort-free beats sorted with a sort-free lowering; serving "
+          "caches hold their contract")
     return 0
 
 

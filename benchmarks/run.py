@@ -11,6 +11,9 @@ Prints ``name,us_per_call,derived`` CSV rows.
   roofline        — §Roofline terms from the dry-run artifacts
   group_agg       — grouped-aggregation mode shoot-out (stream vs
                     recognized vs fused Pallas path; docs/execution-modes.md)
+  serve_agg       — aggregate-serving layer: cached vs fresh-jit p50,
+                    1k-request concurrent qps, trace/slot-build counters
+                    (docs/serving.md)
 """
 from __future__ import annotations
 
@@ -31,7 +34,8 @@ def main() -> None:
     args = ap.parse_args()
 
     from . import (app_loops, applicability, group_agg, logical_reads,
-                   roofline_bench, scalability, tpch_loops, workload_loops)
+                   roofline_bench, scalability, serve_agg, tpch_loops,
+                   workload_loops)
 
     scale = 0.005 if args.full else args.scale
     sizes = ((100, 1_000, 10_000, 100_000, 1_000_000, 3_000_000)
@@ -46,6 +50,10 @@ def main() -> None:
         "roofline": lambda: roofline_bench.run(),
         "group_agg": lambda: group_agg.run(
             n=200_000 if args.full else 50_000),
+        # serving measures per-call overheads (trace / slot / launch),
+        # not row throughput — group_agg owns the big-n axis
+        "serve_agg": lambda: serve_agg.run(
+            n=50_000 if args.full else 8_192),
     }
     only = None if args.only == "all" else set(args.only.split(","))
     print("name,us_per_call,derived")

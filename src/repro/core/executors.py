@@ -309,6 +309,21 @@ def _sortfree_eligible(call: AggCall, agg: CustomAggregate, mode: str,
                     for u in agg.recognized))
 
 
+def sortfree_call_route(call: AggCall, bound) -> bool:
+    """Would this grouped AggCall take the (global-slot) sort-free route
+    for the given validated bound?  Serving-layer entry point: the
+    dispatcher below makes the same decision inline; a cache that wants
+    to pre-build the slot table must predict it without executing."""
+    if not call.group_keys:
+        return False
+    agg: CustomAggregate = call.aggregate
+    try:
+        mode = _resolve_grouped_mode(call, agg)
+    except ValueError:
+        return False
+    return _sortfree_eligible(call, agg, mode, bound)
+
+
 def grouped_agg_call(call: AggCall, catalog, env,
                      var_dtypes=None) -> Table:
     agg: CustomAggregate = call.aggregate
@@ -323,6 +338,7 @@ def grouped_agg_call(call: AggCall, catalog, env,
                                               poison_overflow,
                                               resolve_group_bound)
     from repro.relational.keyslot import (overflow_extended,
+                                          provided_slots,
                                           slot_segment_ids,
                                           sortfree_result)
     # dense segment range: AggCall-declared max_groups beats the table
@@ -331,6 +347,12 @@ def grouped_agg_call(call: AggCall, catalog, env,
     declared = call.max_groups if call.max_groups is not None \
         else t.group_bound
     nsegments, bound = resolve_group_bound(declared, t.capacity)
+    # a provide_slots scope carrying this call's slot table beats the
+    # per-shard launcher: the cached assignment is global and stable
+    # across calls, so the segment ops use it directly under GSPMD
+    if (shard_route is not None and bound is not None
+            and provided_slots(tuple(call.group_keys), bound) is not None):
+        shard_route = None
     cap = t.capacity
     mode = _resolve_grouped_mode(call, agg)
 

@@ -229,23 +229,30 @@ def _group_agg(t: Table, keys: tuple[str, ...],
                max_groups: Optional[int] = None) -> Table:
     from .group_bound import (check_group_overflow, poison_overflow,
                               resolve_group_bound)
-    from .keyslot import (overflow_extended, slot_segment_ids,
-                          sortfree_enabled, sortfree_result)
+    from .keyslot import (overflow_extended, provided_slots,
+                          slot_segment_ids, sortfree_enabled,
+                          sortfree_result)
     backend = _groupagg_fused_backend()
-    # a row-sharded input table (Table.shard_rows) routes the fused pass
-    # through the mesh — one kernel launch per row shard, moments
-    # all-reduced; detect on the caller-committed columns, pre-sort
-    shard_route = None
-    if backend != "off":
-        from repro.launch.sharded_agg import row_sharded_mesh
-        shard_route = row_sharded_mesh(*t.columns.values(), t.valid)
-        if backend is None and shard_route is not None:
-            backend = "auto"    # distributed beats per-op even off-TPU
     # dense segment range: plan-declared max_groups beats the table hint;
     # without either, the row capacity is the only static bound available
     declared = max_groups if max_groups is not None else t.group_bound
     nsegments, bound = resolve_group_bound(declared, t.capacity)
     cap = t.capacity
+    # a row-sharded input table (Table.shard_rows) routes the fused pass
+    # through the mesh — one kernel launch per row shard, moments
+    # all-reduced; detect on the caller-committed columns, pre-sort.  A
+    # provide_slots scope carrying this call's slot table overrides the
+    # launcher: the cached assignment is GLOBAL (stable across calls), so
+    # the segment ops run on it directly and GSPMD partitions the work.
+    shard_route = None
+    if backend != "off":
+        from repro.launch.sharded_agg import row_sharded_mesh
+        shard_route = row_sharded_mesh(*t.columns.values(), t.valid)
+        if (shard_route is not None and bound is not None
+                and provided_slots(keys, bound) is not None):
+            shard_route = None
+        if backend is None and shard_route is not None:
+            backend = "auto"    # distributed beats per-op even off-TPU
 
     def _fusable(op, col):
         # kernel accumulates in f32: float64 columns keep the exact per-op

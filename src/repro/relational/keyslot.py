@@ -51,8 +51,11 @@ sort it replaces.
 """
 from __future__ import annotations
 
+import math
 import os
-from typing import Iterable
+import threading
+from contextlib import contextmanager
+from typing import Iterable, Mapping
 
 import jax
 import jax.numpy as jnp
@@ -61,7 +64,8 @@ from jax import lax
 __all__ = [
     "canonical_key_words", "key_words_for", "slot_ids_from_words",
     "slot_segment_ids", "check_slot_overflow", "overflow_extended",
-    "sortfree_enabled", "sortfree_result",
+    "sortfree_enabled", "sortfree_result", "provide_slots",
+    "provided_slots", "slot_build_count", "distinct_count_sketch",
 ]
 
 
@@ -238,14 +242,106 @@ def slot_ids_from_words(words: jax.Array, valid: jax.Array,
     return seg, owner, occupied, overflowed
 
 
+# ---------------------------------------------------------------------------
+# Slot-table reuse: a serving layer (or any caller that amortizes the
+# probe loop across repeated calls) can compute the four slot arrays once
+# per (table version, key set, bucket) and *provide* them for the scope of
+# an execution — ``slot_segment_ids`` then returns the provided arrays
+# instead of re-probing.  The override is thread-local (concurrent server
+# executions don't see each other's tables) and keyed by
+# ``(key-name tuple, bucket)``; the provider owns the harder invariant
+# that the arrays were built from the table being executed (the serving
+# layer keys its cache by ``Table.version`` for exactly this).  Builds
+# that actually run the probe loop bump a module counter — the spy tests
+# and the serving bench use it to assert slotting amortized to zero.
+# ---------------------------------------------------------------------------
+
+_SLOT_BUILDS = 0
+_PROVIDED = threading.local()
+
+
+def slot_build_count() -> int:
+    """Number of times the probe loop was actually built (eager call or
+    jit trace) since import — provided slots don't count.  Monotonic;
+    callers diff it around a region to assert slotting was cached."""
+    return _SLOT_BUILDS
+
+
+def provided_slots(keys, bucket: int):
+    """The slot arrays provided for ``(keys, bucket)`` by an enclosing
+    ``provide_slots`` scope, or None."""
+    stack = getattr(_PROVIDED, "stack", None)
+    if not stack:
+        return None
+    k = (tuple(keys), int(bucket))
+    for mapping in reversed(stack):
+        got = mapping.get(k)
+        if got is not None:
+            return got
+    return None
+
+
+@contextmanager
+def provide_slots(mapping: Mapping):
+    """Provide precomputed slot arrays for the dynamic extent of the
+    context: ``mapping`` maps ``(key-name tuple, bucket)`` to the
+    ``(seg, owner, occupied, overflowed)`` tuple ``slot_ids_from_words``
+    returned for the table about to be executed.  Nested scopes stack;
+    inner providers win."""
+    norm = {(tuple(k), int(b)): tuple(v) for (k, b), v in mapping.items()}
+    stack = getattr(_PROVIDED, "stack", None)
+    if stack is None:
+        stack = _PROVIDED.stack = []
+    stack.append(norm)
+    try:
+        yield
+    finally:
+        stack.pop()
+
+
 def slot_segment_ids(table, keys: Iterable[str], bucket: int):
     """``slot_ids_from_words`` over a Table's group-key columns and row
     mask — the sort-free counterpart of ``engine.segment_ids_for`` (same
     overflow-parking convention; representative rows come from ``owner``
     instead of segment starts, validity from ``occupied`` instead of a
-    dense prefix)."""
+    dense prefix).  An enclosing ``provide_slots`` scope short-circuits
+    the probe loop with its cached arrays."""
+    keys = tuple(keys)
+    pre = provided_slots(keys, bucket)
+    if pre is not None:
+        return pre
+    global _SLOT_BUILDS
+    _SLOT_BUILDS += 1
     words = key_words_for(table.columns[k] for k in keys)
     return slot_ids_from_words(words, table.mask(), bucket)
+
+
+def distinct_count_sketch(table, keys: Iterable[str],
+                          m: int = 4096) -> int:
+    """Linear-counting estimate of the table's distinct group-key tuples —
+    the sketch the serving layer uses to infer ``max_groups`` when no
+    dense bound was declared (ROADMAP carried item).  One O(N) pass: the
+    canonical key words hash (the same murmur-mix slotting probes with)
+    into an ``m``-bucket occupancy bitmap; ``d̂ = -m·ln(1 - b/m)`` for
+    ``b`` occupied buckets.  Concrete (blocks on the device value);
+    clamped to ``[1, #valid rows]``, and a saturated bitmap degrades to
+    the valid-row count — an over-, never under-, estimate there.  The
+    estimate itself can undershoot by its sampling error, so callers pad
+    it and *validate* the resulting bound (the slot build raises on
+    overflow) rather than trusting it."""
+    words = key_words_for(table.columns[k] for k in keys)
+    valid = jnp.asarray(table.mask(), bool)
+    nvalid = int(jnp.sum(valid.astype(jnp.int32)))
+    if nvalid == 0:
+        return 1
+    h = (_hash_words(words) & jnp.uint32(m - 1)).astype(jnp.int32)
+    occ = jnp.zeros((m,), jnp.int32).at[
+        jnp.where(valid, h, m)].max(1, mode="drop")
+    b = int(jnp.sum(occ))
+    if b >= m:
+        return nvalid
+    est = -m * math.log(1.0 - b / m)
+    return max(1, min(nvalid, int(math.ceil(est))))
 
 
 def overflow_extended(owner: jax.Array, occupied: jax.Array,

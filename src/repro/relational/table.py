@@ -8,13 +8,19 @@ materialized (concrete, block_until_ready) Table.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+import itertools
+from dataclasses import dataclass, field
 from typing import Any, Dict, Iterable, Mapping, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax import lax
+
+#: monotonic source for Table.version — every constructed Table (including
+#: every functional-update result) gets a fresh token, so "same version"
+#: certifies "same rows" for host-side caches
+_VERSIONS = itertools.count(1)
 
 
 @jax.tree_util.register_pytree_node_class
@@ -28,6 +34,13 @@ class Table:
     #: relational/group_bound.py.  Row-preserving ops propagate it (they
     #: cannot create new key combinations); concat drops it.
     group_bound: Optional[int] = None
+    #: host-side identity token: unique per constructed Table, never
+    #: propagated by the functional update ops (each returns a NEW
+    #: version) and excluded from the pytree — derived caches (the
+    #: serving layer's slot tables) key on it so a mutation can never be
+    #: served stale data.  Not part of traced state.
+    version: int = field(default_factory=lambda: next(_VERSIONS),
+                         compare=False)
 
     # -- pytree ---------------------------------------------------------------
     def tree_flatten(self):

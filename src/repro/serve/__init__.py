@@ -1,0 +1,6 @@
+"""Serving front ends: the continuous-batching LM server (``serving``)
+and the aggregate-serving layer (``agg_server``) — compiled-plan +
+slot-table caching with batched concurrent parameterized queries."""
+from .agg_server import AggServer, ServeStats, serving_enabled
+
+__all__ = ["AggServer", "ServeStats", "serving_enabled"]

@@ -1,0 +1,450 @@
+"""Aggregate-serving layer: compiled-plan + slot-table caching with
+same-shape request batching.
+
+Aggify turns a cursor loop into ONE pipelined aggregate query — but
+production traffic is thousands of *parameterized repeats* of a few such
+queries (every dashboard tile, every per-user UDF invocation), and a bare
+``engine.execute`` pays three per-call costs the repeats never need:
+
+* **jaxpr retrace + XLA compile** — the plan, catalog shapes, and
+  parameter dtypes fully determine the computation; only parameter
+  *values* change between calls.  The server keys an executable cache on
+  exactly that: plan identity, the catalog shape/dtype signature, the
+  parameter signature, the ``bucket_group_bound`` shape bucket, and the
+  batch-size bucket — all finite, so the trace count is bounded by the
+  number of distinct shape buckets, not the request count.
+* **key→slot probing** (``relational/keyslot.py``) — the sort-free
+  grouped route re-derives the same hash-slotted segment assignment from
+  the same rows on every call.  The server builds it once per
+  ``(table version, key columns, bucket)``, validates the dense bound
+  *concretely* (overflow raises here, not inside a trace), and provides
+  it to the executable as an **argument** via ``keyslot.provide_slots``.
+  Passing slots as arguments — never baking them into the trace as
+  constants — is what makes stale reads structurally impossible: a
+  mutated table carries a fresh ``Table.version``, the slot cache misses,
+  and the same compiled executable runs with the rebuilt arrays.  For
+  row-sharded tables the cached assignment doubles as the *stable
+  cross-call global* slot table the per-shard launcher cannot offer.
+* **one-request-at-a-time launches** — concurrent parameterized calls
+  with the same plan and parameter signature coalesce into one
+  ``jax.vmap`` launch over stacked per-request parameter vectors
+  (the grouped-decorrelation trick of ``benchmarks/tpch_loops.py``,
+  generalized from benchmark code into the engine): tables and slot
+  arrays broadcast, parameters batch.
+
+When a grouped root plan declares no ``max_groups`` and its input table
+carries no ``declare_group_bound`` hint, the server infers one: the
+linear-counting ``distinct_count_sketch`` estimates the distinct key
+count, the estimate is padded and bucketed, and the eager slot build
+*validates* it (an overflowing inferred bound doubles and rebuilds —
+never trusted, per the validated-not-assumed rule of
+relational/group_bound.py).
+
+Kill switch: ``REPRO_AGG_SERVE=off`` bypasses every cache and batch —
+each call runs a plain eager ``engine.execute``.
+
+See docs/serving.md for the cache-key / invalidation / batching contract.
+"""
+from __future__ import annotations
+
+import math
+import os
+import threading
+import time
+from concurrent.futures import Future
+from dataclasses import dataclass, field
+from dataclasses import replace as _dc_replace
+from typing import Any, Dict, Mapping, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.relational import keyslot
+from repro.relational.engine import execute
+from repro.relational.group_bound import resolve_group_bound
+from repro.relational.keyslot import check_slot_overflow
+from repro.relational.plan import AggCall, GroupAgg, Plan, Scan
+from repro.relational.table import Table
+
+__all__ = ["AggServer", "ServeStats", "serving_enabled"]
+
+
+def serving_enabled() -> bool:
+    """Kill switch for the whole serving layer (default: on).
+    ``REPRO_AGG_SERVE=off`` turns every call into a plain eager
+    ``engine.execute`` — no executable cache, no slot-table cache, no
+    batching."""
+    return os.environ.get("REPRO_AGG_SERVE") != "off"
+
+
+@dataclass
+class ServeStats:
+    """Counters the tests and the serving bench assert on.  ``traces``
+    increments inside the jitted body (a Python side effect fires only
+    while tracing), so it counts actual retraces, not calls."""
+    requests: int = 0
+    batches: int = 0
+    traces: int = 0
+    slot_builds: int = 0
+    slot_hits: int = 0
+
+
+#: safety padding on the sketch estimate before bucketing: linear
+#: counting is unbiased but noisy (±O(√m) keys), and the power-of-two
+#: bucket only forgives undershoot up to the next boundary
+_SKETCH_PAD = 1.3
+_SKETCH_SLACK = 16
+
+
+@dataclass
+class _PlanEntry:
+    """Per-plan serving state.  ``plan`` is the plan as served — when the
+    bound was inferred it differs from the submitted plan by
+    ``max_groups`` only.  Keyed by ``id(submitted plan)``; the entry
+    holds a strong reference to the submitted plan so the id stays
+    valid."""
+    submitted: Plan
+    plan: Plan
+    keys: Tuple[str, ...] = ()
+    bound: Optional[int] = None      # validated bucket; None → no slots
+    slot_scan: Optional[str] = None  # catalog table the slots align to
+    inferred: bool = False           # bound came from the sketch (growable)
+    execs: Dict[Any, Any] = field(default_factory=dict)
+
+
+class AggServer:
+    """Serve parameterized aggregate plans over a named catalog.
+
+    ``execute(plan, params)`` is the synchronous path (cache-aware, one
+    request per launch); ``submit(plan, params) -> Future`` is the
+    concurrent path — a dispatcher thread coalesces same-(plan,
+    parameter-signature) requests into one vmapped launch of up to
+    ``max_batch`` lanes.  ``update_table`` is the ONLY write: it swaps
+    the catalog entry and explicitly invalidates the slot tables derived
+    from the old version.  ``execute_uncached`` reproduces the
+    pre-serving cost model (fresh jit per call) for benchmarking."""
+
+    def __init__(self, catalog: Mapping[str, Table], *,
+                 max_batch: int = 64, batch_window_s: float = 0.001,
+                 infer_bounds: bool = True):
+        self._catalog: Dict[str, Table] = dict(catalog)
+        self._max_batch = max(1, int(max_batch))
+        self._batch_window = float(batch_window_s)
+        self._infer_bounds = bool(infer_bounds)
+        self._lock = threading.RLock()
+        self._cv = threading.Condition()
+        self._plans: Dict[int, _PlanEntry] = {}
+        #: (table name, table version, key names, bucket) → slot arrays
+        self._slots: Dict[Any, tuple] = {}
+        self._pending: Dict[Any, tuple] = {}
+        self._dispatcher: Optional[threading.Thread] = None
+        self._closed = False
+        self.stats = ServeStats()
+
+    # -- catalog writes ----------------------------------------------------
+    def update_table(self, name: str, table: Table) -> None:
+        """Swap a catalog table.  Slot tables derived from the previous
+        version are dropped here (explicit invalidation on write);
+        executables survive — they are keyed on shapes, not versions, so
+        a shape-compatible mutation reuses the compiled program with the
+        rebuilt slot arrays passed in as fresh arguments."""
+        with self._lock:
+            self._catalog[name] = table
+            self._slots = {k: v for k, v in self._slots.items()
+                           if k[0] != name}
+
+    def table(self, name: str) -> Table:
+        with self._lock:
+            return self._catalog[name]
+
+    # -- introspection -----------------------------------------------------
+    def describe(self, plan: Plan) -> dict:
+        """Serving decisions for a plan (tests/bench introspection)."""
+        with self._lock:
+            ent = self._prepare(plan)
+            return {
+                "max_groups": getattr(ent.plan, "max_groups", None),
+                "bound": ent.bound,
+                "slot_scan": ent.slot_scan,
+                "inferred": ent.inferred,
+                "executables": len(ent.execs),
+            }
+
+    # -- synchronous path --------------------------------------------------
+    def execute(self, plan: Plan, params: Optional[Mapping[str, Any]] = None
+                ) -> Table:
+        """Cache-aware execution of one parameterized request.  Serialized
+        under the server lock (deterministic trace accounting); use
+        ``submit`` for concurrency."""
+        params = dict(params or {})
+        if not serving_enabled():
+            return execute(plan, self._catalog, params)
+        with self._lock:
+            return self._launch(self._prepare(plan),
+                                self._psig(params), [params])[0]
+
+    def warmup(self, plan: Plan,
+               params: Optional[Mapping[str, Any]] = None,
+               batch_sizes: Tuple[int, ...] = (1,)) -> None:
+        """Pre-trace the executables for a plan at the given batch-size
+        buckets (deploy-time warming: the request path then never pays a
+        compile).  ``params`` is a representative parameter dict — only
+        its signature matters."""
+        params = dict(params or {})
+        if not serving_enabled():
+            return
+        with self._lock:
+            ent = self._prepare(plan)
+            psig = self._psig(params)
+            for nb in batch_sizes:
+                self._launch(ent, psig, [params] * max(1, int(nb)))
+
+    def execute_uncached(self, plan: Plan,
+                         params: Optional[Mapping[str, Any]] = None
+                         ) -> Table:
+        """The pre-serving cost model, for comparison: a fresh ``jax.jit``
+        closure per call, so every call retraces, recompiles, and
+        re-derives its slot table inside the trace."""
+        params = dict(params or {})
+        env = {k: jnp.asarray(v) for k, v in params.items()}
+        with self._lock:
+            catalog = dict(self._catalog)
+        fn = jax.jit(lambda tabs, e: execute(plan, tabs, e))
+        return fn(catalog, env)
+
+    # -- concurrent path ---------------------------------------------------
+    def submit(self, plan: Plan,
+               params: Optional[Mapping[str, Any]] = None) -> Future:
+        """Enqueue one parameterized request; the dispatcher coalesces
+        same-shape requests into one vmapped launch.  Returns a Future
+        resolving to the request's result Table."""
+        params = dict(params or {})
+        fut: Future = Future()
+        if not serving_enabled():
+            try:
+                fut.set_result(execute(plan, self._catalog, params))
+            except Exception as e:          # noqa: BLE001 — future carries it
+                fut.set_exception(e)
+            return fut
+        key = (id(plan), self._psig(params))
+        with self._cv:
+            if self._closed:
+                raise RuntimeError("AggServer is closed")
+            if self._dispatcher is None:
+                self._dispatcher = threading.Thread(
+                    target=self._dispatch_loop, name="agg-serve-dispatch",
+                    daemon=True)
+                self._dispatcher.start()
+            if key not in self._pending:
+                self._pending[key] = (plan, [])
+            self._pending[key][1].append((params, fut))
+            self._cv.notify()
+        return fut
+
+    def close(self) -> None:
+        """Drain the queue and stop the dispatcher."""
+        with self._cv:
+            self._closed = True
+            self._cv.notify_all()
+        if self._dispatcher is not None:
+            self._dispatcher.join()
+            self._dispatcher = None
+
+    def __enter__(self) -> "AggServer":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def _dispatch_loop(self) -> None:
+        while True:
+            with self._cv:
+                while not self._pending and not self._closed:
+                    self._cv.wait()
+                if self._closed and not self._pending:
+                    return
+            if self._batch_window > 0:
+                time.sleep(self._batch_window)   # let requests coalesce
+            while True:
+                with self._cv:
+                    if not self._pending:
+                        break
+                    key = next(iter(self._pending))
+                    plan, reqs = self._pending[key]
+                    take = reqs[:self._max_batch]
+                    del reqs[:len(take)]
+                    if not reqs:
+                        del self._pending[key]
+                self._run_batch(plan, key[1], take)
+
+    def _run_batch(self, plan: Plan, psig, reqs) -> None:
+        try:
+            with self._lock:
+                outs = self._launch(self._prepare(plan), psig,
+                                    [p for p, _ in reqs])
+            for (_, fut), out in zip(reqs, outs):
+                fut.set_result(out)
+        except Exception as e:              # noqa: BLE001 — future carries it
+            for _, fut in reqs:
+                if not fut.done():
+                    fut.set_exception(e)
+
+    # -- plan preparation --------------------------------------------------
+    @staticmethod
+    def _grouped_root(plan: Plan):
+        if isinstance(plan, GroupAgg):
+            return plan, tuple(plan.keys)
+        if isinstance(plan, AggCall) and plan.group_keys:
+            return plan, tuple(plan.group_keys)
+        return None, ()
+
+    @staticmethod
+    def _takes_sortfree(plan: Plan, bound: Optional[int]) -> bool:
+        if bound is None or not keyslot.sortfree_enabled():
+            return False
+        if isinstance(plan, GroupAgg):
+            return True        # every GroupAgg op is an order-insensitive moment
+        from repro.core.executors import sortfree_call_route
+        return sortfree_call_route(plan, bound)
+
+    def _prepare(self, plan: Plan) -> _PlanEntry:
+        ent = self._plans.get(id(plan))
+        if ent is not None:
+            return ent
+        ent = _PlanEntry(submitted=plan, plan=plan)
+        root, keys = self._grouped_root(plan)
+        scan = root.child.table if (root is not None
+                                    and isinstance(root.child, Scan)) else None
+        # slot provisioning (and bound inference) require the grouped
+        # node's input to BE a catalog table: row order and validity then
+        # provably match what the slots were built from.  Anything else
+        # (parameterized filters, joins) still gets the executable cache
+        # and batching — slotting just happens inside the trace.
+        if root is not None and scan is not None and scan in self._catalog:
+            t = self._catalog[scan]
+            if all(k in t.columns for k in keys):
+                declared = root.max_groups if root.max_groups is not None \
+                    else t.group_bound
+                if declared is None and self._infer_bounds:
+                    est = keyslot.distinct_count_sketch(t, keys)
+                    mg = int(math.ceil(est * _SKETCH_PAD)) + _SKETCH_SLACK
+                    _, bound = resolve_group_bound(mg, t.capacity)
+                    if bound is not None:
+                        ent.plan = _dc_replace(plan, max_groups=mg)
+                        ent.inferred = True
+                        declared = mg
+                if declared is not None:
+                    _, bound = resolve_group_bound(declared, t.capacity)
+                    if bound is not None and \
+                            self._takes_sortfree(ent.plan, bound):
+                        ent.keys = keys
+                        ent.bound = bound
+                        ent.slot_scan = scan
+        self._plans[id(plan)] = ent
+        return ent
+
+    # -- slot-table cache --------------------------------------------------
+    def _slot_table(self, ent: _PlanEntry):
+        t = self._catalog[ent.slot_scan]
+        while True:
+            key = (ent.slot_scan, t.version, ent.keys, ent.bound)
+            got = self._slots.get(key)
+            if got is not None:
+                self.stats.slot_hits += 1
+                return got
+            try:
+                arrs = keyslot.slot_segment_ids(t, ent.keys, ent.bound)
+                check_slot_overflow(arrs[3], ent.bound)  # concrete: raises
+                arrs = tuple(jax.block_until_ready(a) for a in arrs)
+                self.stats.slot_builds += 1
+                self._slots[key] = arrs
+                return arrs
+            except ValueError:
+                if not ent.inferred:
+                    raise        # user-declared bound: the contract raises
+                # inferred bound overflowed (data grew / sketch undershot):
+                # double it, re-bucket, rebuild — or give the bound up when
+                # the bucket reaches the row capacity
+                grown = ent.bound * 2
+                _, bound = resolve_group_bound(grown, t.capacity)
+                ent.execs.clear()
+                if bound is None:
+                    ent.plan = _dc_replace(ent.plan, max_groups=None)
+                    ent.bound = None
+                    ent.slot_scan = None
+                    return None
+                ent.plan = _dc_replace(ent.plan, max_groups=grown)
+                ent.bound = bound
+
+    # -- executables -------------------------------------------------------
+    def _catalog_sig(self):
+        return tuple(
+            (name, t.group_bound, t.valid is None,
+             tuple((c, str(a.dtype), tuple(a.shape))
+                   for c, a in sorted(t.columns.items())))
+            for name, t in sorted(self._catalog.items()))
+
+    @staticmethod
+    def _psig(params: Mapping[str, Any]):
+        return tuple(sorted((k, str(jnp.result_type(v)))
+                            for k, v in params.items()))
+
+    def _executable(self, ent: _PlanEntry, psig, nb: int):
+        key = (self._catalog_sig(), psig, nb, ent.bound)
+        fn = ent.execs.get(key)
+        if fn is None:
+            fn = self._build(ent, psig, nb)
+            ent.execs[key] = fn
+        return fn
+
+    def _build(self, ent: _PlanEntry, psig, nb: int):
+        plan = ent.plan
+        spec = (ent.keys, ent.bound) if ent.slot_scan is not None else None
+        stats = self.stats
+
+        def run(tables, slots, pvec):
+            stats.traces += 1    # Python side effect: counts traces only
+
+            def one(env):
+                if spec is None:
+                    return execute(plan, tables, env)
+                with keyslot.provide_slots({spec: slots}):
+                    return execute(plan, tables, env)
+
+            if not psig:
+                return one({})
+            return jax.vmap(one)(pvec)
+
+        return jax.jit(run)
+
+    # -- launch ------------------------------------------------------------
+    def _launch(self, ent: _PlanEntry, psig, plist):
+        """Run a same-signature request batch through one (possibly
+        vmapped) cached launch; returns one Table per request."""
+        n = len(plist)
+        outs = []
+        for start in range(0, n, self._max_batch):
+            outs.extend(self._launch_bucket(ent, psig,
+                                            plist[start:start + self._max_batch]))
+        return outs
+
+    def _launch_bucket(self, ent: _PlanEntry, psig, plist):
+        n = len(plist)
+        slots = ()
+        if ent.slot_scan is not None:
+            got = self._slot_table(ent)   # may grow/disable the bound
+            slots = got if got is not None else ()
+        nb = 1 if not psig else 1 << (n - 1).bit_length()
+        fn = self._executable(ent, psig, nb)
+        self.stats.requests += n
+        self.stats.batches += 1
+        if not psig:
+            out = fn(self._catalog, slots, {})
+            return [out] * n
+        padded = plist + [plist[-1]] * (nb - n)   # pad lanes, drop below
+        pvec = {k: jnp.asarray(np.stack([np.asarray(p[k]) for p in padded]))
+                for k, _ in psig}
+        batched = fn(self._catalog, slots, pvec)
+        return [jax.tree_util.tree_map(lambda a, i=i: a[i], batched)
+                for i in range(n)]

@@ -4,12 +4,16 @@ random tables ⇒ cursor == aggify for every execution mode that applies
 
 The whole module skips when ``hypothesis`` is not installed (it is an
 optional dev dependency — the CI image and the hermetic container only
-guarantee jax + pytest)."""
+guarantee jax + pytest); under ``REPRO_REQUIRE_HYPOTHESIS=1`` (the CI
+contract, see tests/hypothesis_gate.py) a missing install is a hard
+error instead, so the property surface cannot silently vanish."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-hypothesis = pytest.importorskip("hypothesis")
+from hypothesis_gate import require_hypothesis
+
+hypothesis = require_hypothesis()
 import hypothesis.strategies as st           # noqa: E402
 from hypothesis import given, settings       # noqa: E402
 

@@ -1,0 +1,14 @@
+"""Seed-corpus replay for the serving differential fuzzer: every case in
+``serving_cases.CORPUS`` runs through the full route-parity battery
+WITHOUT hypothesis — failures found by the fuzzer get minimized into the
+corpus and stay reproducible in any environment (the hermetic container
+only guarantees jax + pytest)."""
+import pytest
+
+from serving_cases import CORPUS, run_case
+
+
+@pytest.mark.parametrize("case", CORPUS,
+                         ids=[f"seed{c['seed']}" for c in CORPUS])
+def test_corpus_case(case):
+    run_case(case)

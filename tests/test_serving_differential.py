@@ -1,0 +1,62 @@
+"""Hypothesis differential fuzzer for the aggregate-serving layer.
+
+Random (schema, key dtypes incl. int64/f64/NaN keys, agg set, group
+bound, parameter stream) cases — drawn as the same plain dicts the seed
+corpus stores — run through ``serving_cases.run_case``, which asserts
+bit-for-bit parity of cached-vs-fresh, sort-free-vs-sorted and
+batched-vs-sequential execution against the numpy oracle.  Failures
+shrink to a dict that goes straight into ``serving_cases.CORPUS`` and
+replays without hypothesis (test_serving_corpus.py).
+
+Module gating: skips-with-reason locally, hard-fails under
+``REPRO_REQUIRE_HYPOTHESIS=1`` (the CI contract); CI also pins
+``REPRO_FUZZ_EXAMPLES=200`` for the acceptance depth."""
+from hypothesis_gate import fuzz_examples, require_hypothesis
+
+require_hypothesis()
+
+import hypothesis.strategies as st            # noqa: E402
+from hypothesis import HealthCheck, given, settings  # noqa: E402
+
+from serving_cases import KEY_DTYPES, OPS, run_case  # noqa: E402
+
+
+@st.composite
+def serving_case(draw):
+    filtered = draw(st.booleans())
+    nkeys = draw(st.integers(1, 2))
+    key_dtypes = tuple(draw(st.sampled_from(KEY_DTYPES))
+                       for _ in range(nkeys))
+    # agg set: 1–3 distinct ops, order-normalized so structurally equal
+    # plans intern to one server entry (bounded trace count)
+    aggs = tuple(sorted(draw(
+        st.sets(st.sampled_from(OPS), min_size=1, max_size=3))))
+    case = {
+        "seed": draw(st.integers(0, 2**31 - 1)),
+        # ≥ 136 rows: the 128-slot minimum bucket must sit below the row
+        # capacity for the dense bound (and the sort-free route) to engage
+        "n": draw(st.integers(136, 256)),
+        "key_dtypes": key_dtypes,
+        "card": draw(st.integers(2, 6)),
+        "nan_keys": draw(st.booleans())
+        and any(d.startswith("float") for d in key_dtypes),
+        "invalid_frac": draw(st.sampled_from((0.0, 0.2, 0.5))),
+        "aggs": aggs,
+        "filtered": filtered,
+    }
+    # declared vs inferred dense bound (None → the server's sketch)
+    if draw(st.booleans()):
+        case["max_groups"] = draw(st.integers(4, 64))
+    if filtered:
+        case["params"] = tuple(
+            float(draw(st.integers(-2, 2)))
+            for _ in range(draw(st.integers(1, 5))))
+    return case
+
+
+@settings(max_examples=fuzz_examples(20), deadline=None,
+          suppress_health_check=[HealthCheck.too_slow,
+                                 HealthCheck.data_too_large])
+@given(serving_case())
+def test_differential_routes(case):
+    run_case(case)
