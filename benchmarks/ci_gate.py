@@ -20,9 +20,11 @@ Compares a freshly produced ``bench_group_agg.json`` (``benchmarks/run.py
   sorts on the sort-free lowering;
 * the serving acceptance rows (``serve_agg_*``, when present in the
   fresh artifact): the cached p50 must beat the fresh-jit-per-call p50
-  by more than 2x, the slot table must have been built exactly once for
-  the whole bench stream, and the trace count must stay within the
-  shape-bucket budget the bench declares (no retrace storm);
+  by more than 2x, the guarded p50 (failure guard on: poison scan +
+  breaker bookkeeping per launch) must stay within 10% of the cached
+  p50, the slot table must have been built exactly once for the whole
+  bench stream, and the trace count must stay within the shape-bucket
+  budget the bench declares (no retrace storm);
 * a delta table of every row is printed so the perf trajectory is
   readable from the CI log.
 
@@ -120,7 +122,11 @@ def check_sortfree(fresh: dict[str, dict]) -> list[str]:
 #: serving acceptance: cached p50 must beat uncached p50 by this factor
 SERVE_SPEEDUP = 2.0
 SERVE_ROWS = ("serve_agg_uncached_p50", "serve_agg_cached_p50",
-              "serve_agg_counters")
+              "serve_agg_guarded_p50", "serve_agg_counters")
+
+#: failure-guard overhead budget: guarded p50 may cost at most this much
+#: over the guard-off cached p50 within the same fresh artifact
+GUARD_OVERHEAD = 1.10
 
 
 def check_serving(fresh: dict[str, dict]) -> list[str]:
@@ -141,6 +147,16 @@ def check_serving(fresh: dict[str, dict]) -> list[str]:
         print(f"serve_agg_cached_p50: {ca:.1f}us beats uncached "
               f"{un:.1f}us ({un / max(ca, 1e-9):.1f}x > "
               f"{SERVE_SPEEDUP:.1f}x)")
+    gu = float(fresh["serve_agg_guarded_p50"].get("us_per_call", 0.0))
+    if gu > ca * GUARD_OVERHEAD:
+        errors.append(f"serve_agg_guarded_p50: {gu:.1f}us exceeds the "
+                      f"{(GUARD_OVERHEAD - 1) * 100:.0f}% guard-overhead "
+                      f"budget over cached {ca:.1f}us "
+                      f"({gu / max(ca, 1e-9):.2f}x)")
+    else:
+        print(f"serve_agg_guarded_p50: {gu:.1f}us within "
+              f"{(GUARD_OVERHEAD - 1) * 100:.0f}% of cached {ca:.1f}us "
+              f"({gu / max(ca, 1e-9):.2f}x)")
     derived = fresh["serve_agg_counters"].get("derived", "")
     m = re.search(r"traces=(\d+)_buckets=(\d+)_slot_builds=(\d+)_"
                   r"requests=(\d+)", derived)

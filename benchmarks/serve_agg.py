@@ -17,9 +17,16 @@ Rows:
                             per call (every call retraces, recompiles,
                             re-slots).  What ``engine.execute`` under
                             jit costs a caller who holds no cache.
-  serve_agg_cached_p50    — the server's synchronous path, warm caches.
+  serve_agg_cached_p50    — the server's synchronous path, warm caches
+                            (guard off: the PR-6 cost model, the
+                            baseline the guard row compares against).
   serve_agg_cached_p99    — tail of the same stream (trace storms or
                             slot rebuilds would show here first).
+  serve_agg_guarded_p50   — the same warm synchronous stream under the
+                            failure guard (poison scan per launch,
+                            breaker bookkeeping).  ``ci_gate.py``
+                            asserts the overhead stays under 10% of the
+                            cached p50.
   serve_agg_qps_1k        — 1k-request concurrent ``submit`` stream
                             (mixed parameters, 8 client threads):
                             wall-clock qps + per-request p50/p99.
@@ -74,7 +81,11 @@ def run(n: int = 8_192, ngroups: int = 256, *, uncached_reps: int = 12,
         max_batch: int = 64) -> None:
     cat = _catalog(n, ngroups)
     tile, param = _plans(ngroups)
-    srv = AggServer(cat, max_batch=max_batch, batch_window_s=0.0005)
+    # guard=False pins the PR-6 cost model for the cached/uncached rows;
+    # the guarded row below measures the failure guard's overhead on an
+    # identical warm stream
+    srv = AggServer(cat, max_batch=max_batch, batch_window_s=0.0005,
+                    guard=False)
     params = [{"lo": float(x)} for x in (-3.0, -1.0, 0.0, 1.0, 2.0)]
 
     # pre-serving cost model: fresh jit per call — trace + compile +
@@ -105,6 +116,28 @@ def run(n: int = 8_192, ngroups: int = 256, *, uncached_reps: int = 12,
          f"speedup_vs_uncached={us_uncached / us_cached:.1f}x_"
          f"reps={cached_reps}")
     emit("serve_agg_cached_p99", _pct(lat, 99), f"reps={cached_reps}")
+
+    # the identical warm synchronous stream with the guard on: per-launch
+    # poison scan + breaker bookkeeping are the only deltas, so this row
+    # IS the guard's overhead (gated < 10% of cached p50 in ci_gate.py)
+    gsrv = AggServer(cat, max_batch=max_batch, batch_window_s=0.0005,
+                     guard=True)
+    gsrv.warmup(tile)
+    gsrv.warmup(param, params[0],
+                batch_sizes=tuple(1 << i
+                                  for i in range(int(math.log2(max_batch))
+                                                 + 1)))
+    lat = []
+    for i in range(cached_reps):
+        p = params[i % len(params)]
+        t0 = time.perf_counter()
+        (gsrv.execute(param, p) if i % 2 else gsrv.execute(tile)).to_numpy()
+        lat.append((time.perf_counter() - t0) * 1e6)
+    gsrv.close()
+    us_guarded = _pct(lat, 50)
+    emit("serve_agg_guarded_p50", us_guarded,
+         f"overhead_vs_cached={us_guarded / us_cached:.2f}x_"
+         f"reps={cached_reps}")
 
     # 1k-request concurrent stream: 8 client threads submit mixed
     # parameters, each holding a bounded window of outstanding requests

@@ -484,9 +484,17 @@ def _resolve_grouped_mode(call: AggCall, agg: CustomAggregate) -> str:
 
 def _segagg_backend() -> str:
     """Kernel backend for the fused grouped path: compiled on TPU, pure-JAX
-    segment ops on CPU/GPU (the interpreter loop is test-only).  Env
-    overrides: REPRO_SEGAGG_BACKEND, or legacy REPRO_SEGAGG_PALLAS=1."""
+    segment ops on CPU/GPU (the interpreter loop is test-only).  A
+    thread-local ``reliability.degrade.force_backend`` scope wins over
+    everything — the serving circuit breaker traces its degraded
+    executable under it.  Env overrides: REPRO_SEGAGG_BACKEND, or legacy
+    REPRO_SEGAGG_PALLAS=1."""
     import os as _os
+
+    from repro.reliability.degrade import forced_backend
+    forced = forced_backend()
+    if forced is not None:
+        return forced
     env = _os.environ.get("REPRO_SEGAGG_BACKEND")
     if env in ("pallas", "interpret", "jnp"):
         return env
@@ -683,6 +691,8 @@ def _grouped_fused(agg, rows, outer_vals, valid, seg, num_segments, backend="aut
                 payloads=tuple(payload_specs))
             fused, payload_picks = res if payload_specs else (res, ())
         else:
+            from repro.reliability import faults as _faults
+            _faults.fail("kernel_launch")
             fused = fused_segment_agg(
                 jnp.stack(cols, axis=1), seg.astype(jnp.int32),
                 jnp.stack(masks, axis=1), num_segments, backend=backend,

@@ -210,6 +210,8 @@ def sharded_fused_segment_agg(vals: jax.Array, segs: jax.Array,
     bitwise-equal when the addends are exactly representable
     (integer-valued data, the tests' parity case) and within normal f32
     rounding otherwise."""
+    from repro.reliability import faults as _faults
+    _faults.fail("shard_launch")
     vals, valid = _normalize(jnp.asarray(vals), jnp.asarray(valid))
     segs = jnp.asarray(segs).astype(jnp.int32)
     nshards = mesh.shape[axis]
@@ -343,7 +345,9 @@ def sharded_sortfree_segment_agg(vals: jax.Array, key_words: jax.Array,
     validates it with ``keyslot.check_slot_overflow``.
     """
     from repro.relational.keyslot import slot_ids_from_words
+    from repro.reliability import faults as _faults
 
+    _faults.fail("shard_launch")
     vals, valid = _normalize(jnp.asarray(vals), jnp.asarray(valid))
     kw = jnp.asarray(key_words)
     rowm = jnp.asarray(rowm, bool)

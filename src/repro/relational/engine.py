@@ -216,8 +216,16 @@ def _groupagg_fused_backend() -> Optional[str]:
     ops, "off" for an explicit kill switch (also disables sharded
     routing).  Default: the compiled kernel on TPU (one HBM pass for all
     moments), per-op jnp elsewhere.  REPRO_GROUPAGG_FUSED ∈ {pallas,
-    interpret, jnp, off} overrides (tests use 'interpret')."""
+    interpret, jnp, off} overrides (tests use 'interpret'); a
+    thread-local ``reliability.degrade.force_backend`` scope beats both
+    — the serving circuit breaker traces degraded executables under
+    it."""
     import os
+
+    from ..reliability.degrade import forced_backend
+    forced = forced_backend()
+    if forced is not None:
+        return forced
     env = os.environ.get("REPRO_GROUPAGG_FUSED")
     if env in ("pallas", "interpret", "jnp", "off"):
         return env

@@ -39,6 +39,34 @@ import jax.numpy as jnp
 LANE = 128
 
 
+class GroupBoundOverflow(ValueError):
+    """A concrete group count (or slot-overflow count) exceeded the
+    declared dense bound.  Subclasses ValueError so existing eager-raise
+    contracts hold; the serving layer re-raises it as the structured
+    ``serve.guard.BoundOverflow`` on the request's future."""
+
+
+def poison_sentinel(dtype):
+    """The poison value ``poison_overflow`` writes for ``dtype`` — NaN
+    for floats, the dtype minimum for signed ints, the maximum for
+    unsigned ints (whose minimum is 0, indistinguishable from a real
+    aggregate), False for bools; None for dtypes poisoning cannot mark.
+    ONE definition shared by the poisoner, the serving layer's detector
+    (serve/guard.py), and the round-trip contract tests — the detector
+    is only as good as the sentinels, so they cannot be allowed to
+    drift."""
+    d = jnp.dtype(dtype)
+    if jnp.issubdtype(d, jnp.floating):
+        return jnp.array(jnp.nan, d)
+    if d == jnp.bool_:
+        return jnp.array(False)
+    if jnp.issubdtype(d, jnp.unsignedinteger):
+        return jnp.array(jnp.iinfo(d).max, d)
+    if jnp.issubdtype(d, jnp.integer):
+        return jnp.array(jnp.iinfo(d).min, d)
+    return None
+
+
 def bucket_group_bound(max_groups: int) -> int:
     """Round a declared group bound up to its recompilation bucket: the
     next power of two, floored at one 128-lane tile.  Every bucket is a
@@ -84,7 +112,7 @@ def check_group_overflow(nseg, bound: Optional[int]):
     if isinstance(nseg, jax.core.Tracer):
         return nseg <= bound
     if int(nseg) > bound:
-        raise ValueError(
+        raise GroupBoundOverflow(
             f"grouped aggregation: input has {int(nseg)} groups but the "
             f"declared dense bound admits at most {bound} (max_groups "
             f"bucketed to the next power-of-two lane multiple) — raise "
@@ -102,16 +130,6 @@ def poison_overflow(cols: dict, ok) -> dict:
         return cols
     out = {}
     for k, v in cols.items():
-        if jnp.issubdtype(v.dtype, jnp.floating):
-            bad = jnp.array(jnp.nan, v.dtype)
-        elif v.dtype == jnp.bool_:
-            bad = jnp.array(False)
-        elif jnp.issubdtype(v.dtype, jnp.unsignedinteger):
-            bad = jnp.array(jnp.iinfo(v.dtype).max, v.dtype)
-        elif jnp.issubdtype(v.dtype, jnp.integer):
-            bad = jnp.array(jnp.iinfo(v.dtype).min, v.dtype)
-        else:
-            out[k] = v
-            continue
-        out[k] = jnp.where(ok, v, bad)
+        bad = poison_sentinel(v.dtype)
+        out[k] = v if bad is None else jnp.where(ok, v, bad)
     return out

@@ -61,11 +61,15 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from ..reliability import faults
+from .group_bound import GroupBoundOverflow
+
 __all__ = [
     "canonical_key_words", "key_words_for", "slot_ids_from_words",
     "slot_segment_ids", "check_slot_overflow", "overflow_extended",
     "sortfree_enabled", "sortfree_result", "provide_slots",
     "provided_slots", "slot_build_count", "distinct_count_sketch",
+    "adaptive_expand", "adaptive_enabled", "probe_rounds",
 ]
 
 
@@ -157,13 +161,48 @@ def _hash_words(words: jax.Array) -> jax.Array:
 #: exactly (a full table would otherwise probe O(√bucket) rounds, each an
 #: O(N) scatter).  The table is scratch: occupied probe slots densify to
 #: ``[0, bucket)`` by prefix-sum before anything segment-sized is built,
-#: so the moment tensors never see the expansion.
+#: so the moment tensors never see the expansion.  This is the *ceiling*:
+#: eager builds shrink it adaptively from the distinct-count sketch
+#: (``adaptive_expand``) — the estimated key count, not the worst case,
+#: sizes the scatter table each probe round touches.
 EXPAND = 16
+
+#: adaptive sizing targets this load factor: estimated distinct keys /
+#: probe-table slots ≤ 1/8, so probing still terminates in a couple of
+#: rounds even when the sketch undershoots by 2×
+_TARGET_LOAD_INV = 8
+
+#: floor on the adaptive expansion: the sketch is noisy and the probe
+#: table must stay comfortably larger than the true key set (correctness
+#: never depends on it — probing is exhaustive over the table and the
+#: dense renumbering validates the bucket — but load > 1/2 costs rounds)
+_MIN_EXPAND = 4
+
+
+def adaptive_enabled() -> bool:
+    """Kill switch for sketch-driven probe-table sizing (default: on).
+    ``REPRO_KEYSLOT_ADAPTIVE=off`` pins the fixed ``EXPAND`` ceiling."""
+    return os.environ.get("REPRO_KEYSLOT_ADAPTIVE") != "off"
+
+
+def adaptive_expand(est_distinct: int, bucket: int) -> int:
+    """Probe-table expansion factor from a distinct-count estimate: the
+    smallest power of two keeping the estimated load factor at or below
+    ``1/_TARGET_LOAD_INV``, clamped to ``[_MIN_EXPAND, EXPAND]``.  With
+    the fixed ceiling a 128-slot key set probing a 4096-bucket table paid
+    a 65536-slot scatter per round; the sketch sizes that table by the
+    keys actually present instead (ROADMAP carried item)."""
+    need = _TARGET_LOAD_INV * max(1, int(est_distinct))
+    e = 1
+    while e * bucket < need and e < EXPAND:
+        e <<= 1
+    return max(_MIN_EXPAND, min(EXPAND, e))
 
 
 def slot_ids_from_words(words: jax.Array, valid: jax.Array,
-                        bucket: int) -> tuple[jax.Array, jax.Array,
-                                              jax.Array, jax.Array]:
+                        bucket: int, expand: int = EXPAND,
+                        ) -> tuple[jax.Array, jax.Array,
+                                   jax.Array, jax.Array]:
     """Assign each valid row a dense slot in ``[0, bucket)`` keyed by its
     canonical word tuple.  Returns ``(seg, owner, occupied, overflowed)``:
 
@@ -193,9 +232,12 @@ def slot_ids_from_words(words: jax.Array, valid: jax.Array,
     if bucket & (bucket - 1) or bucket <= 0:
         raise ValueError(f"bucket must be a positive power of two, got "
                          f"{bucket}")
+    if expand & (expand - 1) or expand <= 0:
+        raise ValueError(f"expand must be a positive power of two, got "
+                         f"{expand}")
     words = jnp.asarray(words)
     n = words.shape[0]
-    m = bucket * EXPAND
+    m = bucket * expand
     h = _hash_words(words)
     idx = jnp.arange(n, dtype=jnp.int32)
     mask = jnp.uint32(m - 1)
@@ -225,6 +267,9 @@ def slot_ids_from_words(words: jax.Array, valid: jax.Array,
     st0 = (jnp.full((m,), n, jnp.int32),
            jnp.full((n,), m, jnp.int32), valid, jnp.int32(0))
     tbl, slot, active, _rnd = lax.while_loop(cond, body, st0)
+    if not isinstance(_rnd, jax.core.Tracer):
+        global _LAST_ROUNDS
+        _LAST_ROUNDS = int(_rnd)
 
     # densify: occupied probe slots renumber to [0, #groups) in slot
     # order; groups past the bucket (and probe-exhausted rows, possible
@@ -257,6 +302,7 @@ def slot_ids_from_words(words: jax.Array, valid: jax.Array,
 # ---------------------------------------------------------------------------
 
 _SLOT_BUILDS = 0
+_LAST_ROUNDS = None
 _PROVIDED = threading.local()
 
 
@@ -265,6 +311,15 @@ def slot_build_count() -> int:
     jit trace) since import — provided slots don't count.  Monotonic;
     callers diff it around a region to assert slotting was cached."""
     return _SLOT_BUILDS
+
+
+def probe_rounds():
+    """Probe rounds the most recent *eager* ``slot_ids_from_words`` ran
+    (None before any eager build; traced builds don't record — the count
+    is a tracer there).  The adaptive-sizing regression test pins this:
+    shrinking the probe table must not send the round count past a
+    handful even at the sketch's target load factor."""
+    return _LAST_ROUNDS
 
 
 def provided_slots(keys, bucket: int):
@@ -313,7 +368,19 @@ def slot_segment_ids(table, keys: Iterable[str], bucket: int):
     global _SLOT_BUILDS
     _SLOT_BUILDS += 1
     words = key_words_for(table.columns[k] for k in keys)
-    return slot_ids_from_words(words, table.mask(), bucket)
+    mask = table.mask()
+    expand = EXPAND
+    if (adaptive_enabled()
+            and not isinstance(words, jax.core.Tracer)
+            and not isinstance(mask, jax.core.Tracer)):
+        # eager build: size the probe table by the keys actually present
+        # (sketch ~ one O(N) pass) instead of the worst-case ceiling.
+        # Correctness never rides on the estimate — any key set within
+        # the bucket fits (the table keeps ≥ _MIN_EXPAND × bucket slots)
+        # and the dense renumbering still validates the bucket itself.
+        expand = adaptive_expand(distinct_count_sketch(table, keys),
+                                 bucket)
+    return slot_ids_from_words(words, mask, bucket, expand)
 
 
 def distinct_count_sketch(table, keys: Iterable[str],
@@ -339,9 +406,12 @@ def distinct_count_sketch(table, keys: Iterable[str],
         jnp.where(valid, h, m)].max(1, mode="drop")
     b = int(jnp.sum(occ))
     if b >= m:
-        return nvalid
-    est = -m * math.log(1.0 - b / m)
-    return max(1, min(nvalid, int(math.ceil(est))))
+        est = nvalid
+    else:
+        est = max(1, min(nvalid, int(math.ceil(-m * math.log(1.0 - b / m)))))
+    if faults.fire("sketch_undershoot"):
+        est = max(1, est // 8)
+    return est
 
 
 def overflow_extended(owner: jax.Array, occupied: jax.Array,
@@ -391,7 +461,7 @@ def check_slot_overflow(unplaced, bucket: int):
     if isinstance(unplaced, jax.core.Tracer):
         return unplaced == 0
     if int(unplaced) > 0:
-        raise ValueError(
+        raise GroupBoundOverflow(
             f"sort-free grouped aggregation: {int(unplaced)} rows carry "
             f"group keys beyond the declared dense bound ({bucket} slots; "
             f"max_groups bucketed to the next power-of-two lane multiple) "

@@ -1,0 +1,13 @@
+"""Reliability toolkit for the serving path.
+
+``faults``  — the deterministic fault-injection registry (``REPRO_FAULTS``
+env hooks + the ``inject`` context manager) that the chaos battery
+(tests/test_serving_faults.py) drives.  ``degrade`` — the thread-local
+kernel-backend override the serving circuit breaker uses to trip an
+executable onto the exact jnp path.  Both are dependency-free leaves so
+every layer (relational, core, launch, serve) can hook them without
+import cycles.
+"""
+from . import degrade, faults
+
+__all__ = ["faults", "degrade"]

@@ -1,0 +1,49 @@
+"""Degradation ladder plumbing: a thread-local kernel-backend override.
+
+Froid keeps the un-optimized UDF as a semantic fallback whenever its
+rewrite cannot apply; this module is the runtime half of that principle
+for the fused grouped-aggregation path.  The serving circuit breaker
+(serve/guard.py) builds a *degraded* executable by tracing the same plan
+under ``force_backend("jnp")`` — every kernel-backend resolution
+(``core.executors._segagg_backend``, the engine's
+``_groupagg_fused_backend``) consults the override first, so the traced
+program lowers to the exact ``jax.ops.segment_*`` path that always
+exists and that CPU CI bit-verifies against the kernel.
+
+Thread-local on purpose: jit tracing happens on the calling thread, so
+the override scopes to exactly one trace even while other server threads
+trace primary executables concurrently.
+"""
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from typing import Optional
+
+__all__ = ["force_backend", "forced_backend"]
+
+_TL = threading.local()
+
+
+def forced_backend() -> Optional[str]:
+    """The backend forced by an enclosing ``force_backend`` scope, or
+    None.  Backend resolvers check this before every other source."""
+    stack = getattr(_TL, "stack", None)
+    return stack[-1] if stack else None
+
+
+@contextmanager
+def force_backend(backend: str):
+    """Force every kernel-backend resolution in this thread to
+    ``backend`` for the dynamic extent (nested scopes stack; inner
+    wins).  ``'jnp'`` is the degradation ladder's always-correct rung."""
+    if backend not in ("pallas", "interpret", "jnp"):
+        raise ValueError(f"unknown backend {backend!r}")
+    stack = getattr(_TL, "stack", None)
+    if stack is None:
+        stack = _TL.stack = []
+    stack.append(backend)
+    try:
+        yield
+    finally:
+        stack.pop()

@@ -1,0 +1,155 @@
+"""Deterministic fault injection for the serving path.
+
+A *site* is a named point in the code (``SITES``) where a failure mode
+the reliability layer must survive can be forced: the bound sketch
+undershooting, the slot-table cache going stale, the kernel backend
+throwing, the dispatcher thread dying.  Sites fire a bounded number of
+times (shot counts, no randomness), so every chaos test is exactly
+reproducible: ``inject("backend_exc:3")`` makes the next three passes
+through the backend-launch site raise, and nothing else.
+
+Configuration sources, later wins:
+
+* the ``REPRO_FAULTS`` environment variable at import (the CI chaos step
+  sets it, proving the env hook is live end-to-end) — comma-separated
+  ``site[:shots]`` specs; a bare ``site`` fires every time, ``site:N``
+  fires the first N passes;
+* the ``inject(spec)`` context manager (what the tests use): *replaces*
+  the active table for the dynamic extent, restores on exit.
+
+The hot-path cost when no fault is configured is one module-global
+boolean check (``_ENABLED``), so production code can leave the hooks in
+place unconditionally.
+"""
+from __future__ import annotations
+
+import os
+import threading
+from contextlib import contextmanager
+from typing import Dict, Optional
+
+__all__ = ["SITES", "FaultInjected", "configure", "inject", "fire",
+           "fail", "fired", "active_spec", "reset_counters"]
+
+#: every named injection point, and where it lives — ``configure``
+#: rejects unknown names so a typo cannot silently disarm a chaos test
+SITES = (
+    "sketch_undershoot",   # keyslot.distinct_count_sketch: estimate //= 8
+    "bound_unvalidated",   # agg_server._slot_table: skip the concrete
+                           #   overflow validation once (models the
+                           #   build/launch race the version key prevents)
+    "slot_stale",          # agg_server._slot_table: a cache hit claims a
+                           #   dead Table.version
+    "backend_exc",         # agg_server launch: the primary executable
+                           #   raises (kernel-backend failure)
+    "kernel_launch",       # core.executors._grouped_fused: raise at the
+                           #   fused kernel call site (trace-time)
+    "shard_launch",        # launch.sharded_agg: raise entering a sharded
+                           #   launcher
+    "dispatcher_die",      # agg_server dispatcher loop: kill the thread
+    "dispatcher_stall",    # agg_server dispatcher loop: sleep 0.25s once
+                           #   (lets deadline/queue tests win races
+                           #   deterministically)
+    "selftest",            # consumed only by the chaos battery's
+                           #   env-config liveness test
+)
+
+
+class FaultInjected(RuntimeError):
+    """The exception a firing ``fail`` site raises; carries the site name
+    so tests can assert exactly which injection surfaced."""
+
+    def __init__(self, site: str):
+        super().__init__(f"injected fault at site {site!r}")
+        self.site = site
+
+
+_LOCK = threading.Lock()
+_SHOTS: Dict[str, int] = {}    # site -> remaining shots (-1 = unlimited)
+_FIRED: Dict[str, int] = {}    # site -> total times fired
+_SPEC: Optional[str] = None
+_ENABLED = False               # fast-path flag: no lock when no faults
+
+
+def _parse(spec: Optional[str]) -> Dict[str, int]:
+    table: Dict[str, int] = {}
+    for part in (spec or "").split(","):
+        part = part.strip()
+        if not part:
+            continue
+        name, _, shots = part.partition(":")
+        if name not in SITES:
+            raise ValueError(f"unknown fault site {name!r} (expected one "
+                             f"of {', '.join(SITES)})")
+        table[name] = int(shots) if shots else -1
+    return table
+
+
+def configure(spec: Optional[str]) -> None:
+    """Install a fault table from a ``site[:shots]`` csv spec (None or
+    empty disarms everything).  Counters survive reconfiguration."""
+    global _SHOTS, _SPEC, _ENABLED
+    table = _parse(spec)
+    with _LOCK:
+        _SHOTS = table
+        _SPEC = spec or None
+        _ENABLED = bool(table)
+
+
+@contextmanager
+def inject(spec: str):
+    """Arm ``spec`` for the dynamic extent, then restore whatever was
+    configured before (the env table, usually).  Process-global — chaos
+    tests that use it must not run concurrently with each other."""
+    global _SHOTS, _SPEC, _ENABLED
+    with _LOCK:
+        prev_shots, prev_spec, prev_enabled = dict(_SHOTS), _SPEC, _ENABLED
+    configure(spec)
+    try:
+        yield
+    finally:
+        with _LOCK:
+            _SHOTS, _SPEC, _ENABLED = prev_shots, prev_spec, prev_enabled
+
+
+def fire(site: str) -> bool:
+    """True when ``site`` is armed and a shot remains; consumes one shot.
+    The disarmed fast path is one boolean read — no lock."""
+    if not _ENABLED:
+        return False
+    with _LOCK:
+        left = _SHOTS.get(site)
+        if left is None or left == 0:
+            return False
+        if left > 0:
+            _SHOTS[site] = left - 1
+        _FIRED[site] = _FIRED.get(site, 0) + 1
+        return True
+
+
+def fail(site: str) -> None:
+    """Raise ``FaultInjected(site)`` when the site fires; no-op otherwise."""
+    if fire(site):
+        raise FaultInjected(site)
+
+
+def fired(site: str) -> int:
+    """Total times ``site`` has fired since import (or ``reset_counters``)."""
+    with _LOCK:
+        return _FIRED.get(site, 0)
+
+
+def reset_counters() -> None:
+    with _LOCK:
+        _FIRED.clear()
+
+
+def active_spec() -> Optional[str]:
+    """The spec currently armed (None when disarmed) — the chaos
+    battery's env liveness test reads it."""
+    return _SPEC
+
+
+# arm from the environment at import: the CI chaos step exports
+# REPRO_FAULTS and the battery asserts the hook came live
+configure(os.environ.get("REPRO_FAULTS"))

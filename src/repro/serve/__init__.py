@@ -1,6 +1,16 @@
 """Serving front ends: the continuous-batching LM server (``serving``)
 and the aggregate-serving layer (``agg_server``) — compiled-plan +
-slot-table caching with batched concurrent parameterized queries."""
-from .agg_server import AggServer, ServeStats, serving_enabled
+slot-table caching with batched concurrent parameterized queries, under
+the ``guard`` failure contract (typed per-request errors, poison
+detection, deadlines/backpressure, degradation circuit breaker)."""
+from .agg_server import AggServer, ServeStats, guard_enabled, serving_enabled
+from .guard import (BackendFailure, BoundOverflow, CircuitBreaker,
+                    DeadlineExceeded, GuardStats, PoisonedResult, QueueFull,
+                    ServeError, ServerClosed, SlotTableStale, is_poisoned)
 
-__all__ = ["AggServer", "ServeStats", "serving_enabled"]
+__all__ = [
+    "AggServer", "ServeStats", "serving_enabled", "guard_enabled",
+    "ServeError", "BoundOverflow", "SlotTableStale", "DeadlineExceeded",
+    "QueueFull", "PoisonedResult", "BackendFailure", "ServerClosed",
+    "GuardStats", "CircuitBreaker", "is_poisoned",
+]

@@ -40,8 +40,22 @@ count, the estimate is padded and bucketed, and the eager slot build
 never trusted, per the validated-not-assumed rule of
 relational/group_bound.py).
 
-Kill switch: ``REPRO_AGG_SERVE=off`` bypasses every cache and batch —
-each call runs a plain eager ``engine.execute``.
+**Failure semantics** (the guard layer, default on): every failure is a
+typed ``serve.guard.ServeError`` set on the request's future — a bound
+the data outgrew (``BoundOverflow``), a poisoned launch converted from
+silent NaNs to ``PoisonedResult`` (retried with a doubled bound when the
+bound was inferred), a deadline shed in the queue
+(``DeadlineExceeded``), admission backpressure (``QueueFull``), a
+kernel-backend failure the degradation ladder couldn't absorb
+(``BackendFailure``).  The dispatcher thread is supervised (respawned on
+death) and the per-(plan, signature) circuit breaker trips repeated
+backend failures onto the always-correct jnp executable.  See
+docs/serving.md, "Failure semantics".
+
+Kill switches: ``REPRO_AGG_SERVE=off`` bypasses every cache and batch —
+each call runs a plain eager ``engine.execute``;
+``REPRO_SERVE_GUARD=off`` disables the guard layer only (PR-6 serving
+behavior: caches and batching, raw exceptions).
 
 See docs/serving.md for the cache-key / invalidation / batching contract.
 """
@@ -52,6 +66,7 @@ import os
 import threading
 import time
 from concurrent.futures import Future
+from contextlib import nullcontext
 from dataclasses import dataclass, field
 from dataclasses import replace as _dc_replace
 from typing import Any, Dict, Mapping, Optional, Tuple
@@ -62,12 +77,17 @@ import numpy as np
 
 from repro.relational import keyslot
 from repro.relational.engine import execute
-from repro.relational.group_bound import resolve_group_bound
+from repro.relational.group_bound import GroupBoundOverflow, resolve_group_bound
 from repro.relational.keyslot import check_slot_overflow
 from repro.relational.plan import AggCall, GroupAgg, Plan, Scan
 from repro.relational.table import Table
+from repro.reliability import degrade, faults
 
-__all__ = ["AggServer", "ServeStats", "serving_enabled"]
+from .guard import (BackendFailure, BoundOverflow, CircuitBreaker,
+                    DeadlineExceeded, GuardStats, PoisonedResult, QueueFull,
+                    ServeError, ServerClosed, SlotTableStale, is_poisoned)
+
+__all__ = ["AggServer", "ServeStats", "serving_enabled", "guard_enabled"]
 
 
 def serving_enabled() -> bool:
@@ -76,6 +96,25 @@ def serving_enabled() -> bool:
     ``engine.execute`` — no executable cache, no slot-table cache, no
     batching."""
     return os.environ.get("REPRO_AGG_SERVE") != "off"
+
+
+def guard_enabled() -> bool:
+    """Default for ``AggServer(guard=...)``: on unless
+    ``REPRO_SERVE_GUARD=off``.  Guard-off restores the PR-6 serving
+    behavior exactly — caches and batching, raw exceptions on futures,
+    no poison scan, no breaker, unbounded queue."""
+    return os.environ.get("REPRO_SERVE_GUARD") != "off"
+
+
+#: bounded poison recovery: an inferred bound that poisons a launch is
+#: doubled and rebuilt at most this many times before the failure
+#: surfaces as ``PoisonedResult``
+_MAX_POISON_RETRIES = 2
+
+#: bounded staleness recovery: a slot-table entry whose version tag
+#: disagrees with the catalog is dropped and rebuilt at most this many
+#: times per launch before ``SlotTableStale`` surfaces
+_MAX_STALE_REBUILDS = 2
 
 
 @dataclass
@@ -127,20 +166,31 @@ class AggServer:
 
     def __init__(self, catalog: Mapping[str, Table], *,
                  max_batch: int = 64, batch_window_s: float = 0.001,
-                 infer_bounds: bool = True):
+                 infer_bounds: bool = True, guard: Optional[bool] = None,
+                 max_queue: int = 1024, breaker_threshold: int = 3,
+                 breaker_cooldown_s: float = 5.0, breaker_clock=None):
         self._catalog: Dict[str, Table] = dict(catalog)
         self._max_batch = max(1, int(max_batch))
         self._batch_window = float(batch_window_s)
         self._infer_bounds = bool(infer_bounds)
+        self._guard = guard_enabled() if guard is None else bool(guard)
+        self._max_queue = max(1, int(max_queue))
+        self._breaker_threshold = int(breaker_threshold)
+        self._breaker_cooldown = float(breaker_cooldown_s)
+        self._breaker_clock = breaker_clock or time.monotonic
         self._lock = threading.RLock()
         self._cv = threading.Condition()
         self._plans: Dict[int, _PlanEntry] = {}
-        #: (table name, table version, key names, bucket) → slot arrays
+        #: (table name, table version, key names, bucket) →
+        #: (version tag, slot arrays) — the tag re-proves the version at
+        #: every hit (see _slot_table)
         self._slots: Dict[Any, tuple] = {}
         self._pending: Dict[Any, tuple] = {}
+        self._breakers: Dict[Any, CircuitBreaker] = {}
         self._dispatcher: Optional[threading.Thread] = None
         self._closed = False
         self.stats = ServeStats()
+        self.guard_stats = GuardStats()
 
     # -- catalog writes ----------------------------------------------------
     def update_table(self, name: str, table: Table) -> None:
@@ -169,6 +219,10 @@ class AggServer:
                 "slot_scan": ent.slot_scan,
                 "inferred": ent.inferred,
                 "executables": len(ent.execs),
+                "guard": self._guard,
+                "breakers": {psig: br.state
+                             for (pid, psig), br in self._breakers.items()
+                             if pid == id(ent.submitted)},
             }
 
     # -- synchronous path --------------------------------------------------
@@ -215,10 +269,16 @@ class AggServer:
 
     # -- concurrent path ---------------------------------------------------
     def submit(self, plan: Plan,
-               params: Optional[Mapping[str, Any]] = None) -> Future:
+               params: Optional[Mapping[str, Any]] = None, *,
+               deadline: Optional[float] = None) -> Future:
         """Enqueue one parameterized request; the dispatcher coalesces
         same-shape requests into one vmapped launch.  Returns a Future
-        resolving to the request's result Table."""
+        resolving to the request's result Table — or, under the guard, to
+        a typed ``ServeError``: ``deadline`` (seconds from now) makes the
+        dispatcher shed the request with ``DeadlineExceeded`` if it is
+        still queued when the deadline passes, and a full admission queue
+        rejects immediately with ``QueueFull`` (backpressure, never
+        unbounded buffering)."""
         params = dict(params or {})
         fut: Future = Future()
         if not serving_enabled():
@@ -228,27 +288,54 @@ class AggServer:
                 fut.set_exception(e)
             return fut
         key = (id(plan), self._psig(params))
+        dl = None if deadline is None else time.monotonic() + float(deadline)
         with self._cv:
             if self._closed:
-                raise RuntimeError("AggServer is closed")
+                raise ServerClosed("AggServer is closed")
+            if self._guard:
+                depth = sum(len(r) for _, r in self._pending.values())
+                if depth >= self._max_queue:
+                    self.guard_stats.queue_rejects += 1
+                    fut.set_exception(QueueFull(
+                        f"admission queue at capacity ({self._max_queue} "
+                        f"requests) — retry with backoff or raise max_queue"))
+                    return fut
             if self._dispatcher is None:
                 self._dispatcher = threading.Thread(
-                    target=self._dispatch_loop, name="agg-serve-dispatch",
+                    target=self._dispatch_main, name="agg-serve-dispatch",
                     daemon=True)
                 self._dispatcher.start()
             if key not in self._pending:
                 self._pending[key] = (plan, [])
-            self._pending[key][1].append((params, fut))
+            self._pending[key][1].append((params, fut, dl))
             self._cv.notify()
         return fut
 
-    def close(self) -> None:
-        """Drain the queue and stop the dispatcher."""
+    def close(self, drain: bool = True) -> None:
+        """Stop the dispatcher.  ``drain=True`` (default) lets every
+        queued request run to completion first — submits racing the close
+        still resolve, new submits after it raise ``ServerClosed``.
+        ``drain=False`` fails the queue immediately: every queued
+        future gets ``ServerClosed``."""
         with self._cv:
             self._closed = True
+            if not drain:
+                for _plan, reqs in self._pending.values():
+                    for _p, fut, _dl in reqs:
+                        if not fut.done():
+                            fut.set_exception(ServerClosed(
+                                "AggServer closed without draining"))
+                self._pending.clear()
             self._cv.notify_all()
-        if self._dispatcher is not None:
-            self._dispatcher.join()
+        # the dispatcher may be respawned by the supervisor mid-close, so
+        # join whatever thread currently holds the role until none does
+        while True:
+            with self._cv:
+                th = self._dispatcher
+            if th is None or not th.is_alive():
+                break
+            th.join(timeout=0.1)
+        with self._cv:
             self._dispatcher = None
 
     def __enter__(self) -> "AggServer":
@@ -257,6 +344,23 @@ class AggServer:
     def __exit__(self, *exc) -> None:
         self.close()
 
+    def _dispatch_main(self) -> None:
+        """Dispatcher supervisor: a dying dispatch loop (a bug, or the
+        ``dispatcher_die`` fault) respawns a fresh thread instead of
+        stranding every queued future unresolved forever.  Queued
+        requests live in ``_pending`` (not thread state), so they
+        survive the death and the successor serves them."""
+        try:
+            self._dispatch_loop()
+        except BaseException:   # noqa: BLE001 — supervised: respawn
+            with self._cv:
+                self.guard_stats.dispatcher_restarts += 1
+                t = threading.Thread(
+                    target=self._dispatch_main, name="agg-serve-dispatch",
+                    daemon=True)
+                self._dispatcher = t
+                t.start()
+
     def _dispatch_loop(self) -> None:
         while True:
             with self._cv:
@@ -264,6 +368,9 @@ class AggServer:
                     self._cv.wait()
                 if self._closed and not self._pending:
                     return
+            if faults.fire("dispatcher_stall"):
+                time.sleep(0.25)     # deterministic queue-delay injection
+            faults.fail("dispatcher_die")
             if self._batch_window > 0:
                 time.sleep(self._batch_window)   # let requests coalesce
             while True:
@@ -276,17 +383,35 @@ class AggServer:
                     del reqs[:len(take)]
                     if not reqs:
                         del self._pending[key]
-                self._run_batch(plan, key[1], take)
+                take = self._shed_expired(take)
+                if take:
+                    self._run_batch(plan, key[1], take)
+
+    def _shed_expired(self, reqs):
+        """Drop queued requests whose deadline already passed — their
+        futures fail with ``DeadlineExceeded`` and the launch they would
+        have joined never pays for them."""
+        now = time.monotonic()
+        live = []
+        for params, fut, dl in reqs:
+            if dl is not None and now > dl:
+                self.guard_stats.deadline_shed += 1
+                if not fut.done():
+                    fut.set_exception(DeadlineExceeded(
+                        "request deadline passed while queued"))
+            else:
+                live.append((params, fut, dl))
+        return live
 
     def _run_batch(self, plan: Plan, psig, reqs) -> None:
         try:
             with self._lock:
                 outs = self._launch(self._prepare(plan), psig,
-                                    [p for p, _ in reqs])
-            for (_, fut), out in zip(reqs, outs):
+                                    [p for p, _f, _d in reqs])
+            for (_, fut, _), out in zip(reqs, outs):
                 fut.set_result(out)
         except Exception as e:              # noqa: BLE001 — future carries it
-            for _, fut in reqs:
+            for _, fut, _ in reqs:
                 if not fut.done():
                     fut.set_exception(e)
 
@@ -347,20 +472,40 @@ class AggServer:
     # -- slot-table cache --------------------------------------------------
     def _slot_table(self, ent: _PlanEntry):
         t = self._catalog[ent.slot_scan]
+        stale = 0
         while True:
             key = (ent.slot_scan, t.version, ent.keys, ent.bound)
             got = self._slots.get(key)
             if got is not None:
-                self.stats.slot_hits += 1
-                return got
+                tag, arrs = got
+                if tag == t.version:
+                    self.stats.slot_hits += 1
+                    return arrs
+                # the entry claims a version the catalog no longer holds —
+                # structurally impossible (the key carries the version)
+                # without corruption/injection.  Never serve it: drop and
+                # rebuild, bounded, then surface SlotTableStale.
+                del self._slots[key]
+                self.guard_stats.stale_rebuilds += 1
+                stale += 1
+                if stale > _MAX_STALE_REBUILDS:
+                    raise SlotTableStale(
+                        f"slot table for {ent.slot_scan!r} keeps claiming a "
+                        f"dead Table.version after {stale - 1} rebuilds")
+                continue
             try:
                 arrs = keyslot.slot_segment_ids(t, ent.keys, ent.bound)
-                check_slot_overflow(arrs[3], ent.bound)  # concrete: raises
+                if not faults.fire("bound_unvalidated"):
+                    check_slot_overflow(arrs[3], ent.bound)  # concrete: raises
                 arrs = tuple(jax.block_until_ready(a) for a in arrs)
                 self.stats.slot_builds += 1
-                self._slots[key] = arrs
+                tag = t.version - 1 if faults.fire("slot_stale") \
+                    else t.version
+                self._slots[key] = (tag, arrs)
+                if stale:
+                    continue    # recovering: re-prove the tag via the hit path
                 return arrs
-            except ValueError:
+            except GroupBoundOverflow:
                 if not ent.inferred:
                     raise        # user-declared bound: the contract raises
                 # inferred bound overflowed (data grew / sketch undershot):
@@ -390,21 +535,27 @@ class AggServer:
         return tuple(sorted((k, str(jnp.result_type(v)))
                             for k, v in params.items()))
 
-    def _executable(self, ent: _PlanEntry, psig, nb: int):
-        key = (self._catalog_sig(), psig, nb, ent.bound)
+    def _executable(self, ent: _PlanEntry, psig, nb: int,
+                    degraded: bool = False):
+        key = (self._catalog_sig(), psig, nb, ent.bound, degraded)
         fn = ent.execs.get(key)
         if fn is None:
-            fn = self._build(ent, psig, nb)
+            fn = self._build(ent, psig, nb, degraded)
             ent.execs[key] = fn
         return fn
 
-    def _build(self, ent: _PlanEntry, psig, nb: int):
+    def _build(self, ent: _PlanEntry, psig, nb: int, degraded: bool = False):
         plan = ent.plan
         spec = (ent.keys, ent.bound) if ent.slot_scan is not None else None
         stats = self.stats
 
         def run(tables, slots, pvec):
             stats.traces += 1    # Python side effect: counts traces only
+            # the body below runs only while tracing, so the degraded
+            # executable's force_backend scope is active exactly when the
+            # backend choice bakes into the jaxpr — every kernel-backend
+            # resolution in the trace lowers to the jnp segment-ops path
+            ctx = degrade.force_backend("jnp") if degraded else nullcontext()
 
             def one(env):
                 if spec is None:
@@ -412,33 +563,43 @@ class AggServer:
                 with keyslot.provide_slots({spec: slots}):
                     return execute(plan, tables, env)
 
-            if not psig:
-                return one({})
-            return jax.vmap(one)(pvec)
+            with ctx:
+                if not psig:
+                    return one({})
+                return jax.vmap(one)(pvec)
 
         return jax.jit(run)
 
     # -- launch ------------------------------------------------------------
     def _launch(self, ent: _PlanEntry, psig, plist):
         """Run a same-signature request batch through one (possibly
-        vmapped) cached launch; returns one Table per request."""
+        vmapped) cached launch per max_batch bucket; returns one Table
+        per request.  Under the guard each bucket goes through the
+        poison scan / retry / breaker ladder."""
         n = len(plist)
         outs = []
         for start in range(0, n, self._max_batch):
-            outs.extend(self._launch_bucket(ent, psig,
-                                            plist[start:start + self._max_batch]))
+            chunk = plist[start:start + self._max_batch]
+            outs.extend(self._guarded_bucket(ent, psig, chunk)
+                        if self._guard
+                        else self._launch_bucket(ent, psig, chunk))
         return outs
 
-    def _launch_bucket(self, ent: _PlanEntry, psig, plist):
+    def _launch_bucket(self, ent: _PlanEntry, psig, plist,
+                       degraded: bool = False):
         n = len(plist)
         slots = ()
         if ent.slot_scan is not None:
             got = self._slot_table(ent)   # may grow/disable the bound
             slots = got if got is not None else ()
         nb = 1 if not psig else 1 << (n - 1).bit_length()
-        fn = self._executable(ent, psig, nb)
+        fn = self._executable(ent, psig, nb, degraded)
         self.stats.requests += n
         self.stats.batches += 1
+        if degraded:
+            self.guard_stats.degraded_launches += 1
+        if not degraded:
+            faults.fail("backend_exc")
         if not psig:
             out = fn(self._catalog, slots, {})
             return [out] * n
@@ -448,3 +609,104 @@ class AggServer:
         batched = fn(self._catalog, slots, pvec)
         return [jax.tree_util.tree_map(lambda a, i=i: a[i], batched)
                 for i in range(n)]
+
+    # -- guarded launch ----------------------------------------------------
+    def _breaker(self, ent: _PlanEntry, psig) -> CircuitBreaker:
+        key = (id(ent.submitted), psig)
+        br = self._breakers.get(key)
+        if br is None:
+            br = self._breakers[key] = CircuitBreaker(
+                self._breaker_threshold, self._breaker_cooldown,
+                self._breaker_clock)
+        return br
+
+    def _guarded_bucket(self, ent: _PlanEntry, psig, plist):
+        """One bucket launch under the full failure contract: typed
+        errors out, never raw backend exceptions or silent poison.
+
+        Ladder, in order: a backend exception from the primary
+        executable records on the (plan, signature) breaker and the
+        batch immediately re-runs on the degraded jnp executable (the
+        request is served; only a failure of the fallback too surfaces
+        ``BackendFailure``).  A result carrying the poison stamp —
+        a traced bound check failed inside the launch — retries with a
+        doubled bound when the bound was inferred (bounded, with a
+        rebuild backoff) and surfaces ``PoisonedResult`` otherwise."""
+        br = self._breaker(ent, psig)
+        attempts = 0
+        while True:
+            degraded = br.use_degraded()
+            try:
+                outs = self._launch_bucket(ent, psig, plist,
+                                           degraded=degraded)
+                if not degraded and br.record_success():
+                    self.guard_stats.breaker_recoveries += 1
+            except GroupBoundOverflow as e:
+                raise BoundOverflow(str(e)) from e
+            except ServeError:
+                raise
+            except Exception as e:          # noqa: BLE001 — ladder absorbs
+                if degraded:
+                    raise BackendFailure(
+                        "degraded (jnp) launch failed") from e
+                self.guard_stats.backend_failures += 1
+                if br.record_failure():
+                    self.guard_stats.breaker_trips += 1
+                try:
+                    outs = self._launch_bucket(ent, psig, plist,
+                                               degraded=True)
+                except GroupBoundOverflow as e2:
+                    raise BoundOverflow(str(e2)) from e2
+                except ServeError:
+                    raise
+                except Exception as e2:     # noqa: BLE001
+                    raise BackendFailure(
+                        "kernel backend failed and the degraded (jnp) "
+                        "fallback failed too") from e2
+            # poison scan: O(num_segments) per distinct result Table
+            # (parameterless batches share one object — scan it once)
+            seen: Dict[int, bool] = {}
+            poisoned = False
+            for out in outs:
+                if id(out) not in seen:
+                    seen[id(out)] = is_poisoned(out)
+                poisoned = poisoned or seen[id(out)]
+            if not poisoned:
+                return outs
+            self.guard_stats.poisoned += 1
+            if (not ent.inferred or ent.bound is None
+                    or attempts >= _MAX_POISON_RETRIES):
+                raise PoisonedResult(
+                    "launch output carries the poison stamp: a traced "
+                    "dense group bound check failed inside the "
+                    "executable — raise max_groups or drop the "
+                    "declaration")
+            # inferred bound: double, rebuild, relaunch (bounded)
+            attempts += 1
+            self.guard_stats.poison_retries += 1
+            time.sleep(0.001 * attempts)    # brief rebuild backoff
+            self._grow_bound(ent)
+
+    def _grow_bound(self, ent: _PlanEntry) -> None:
+        """Double an inferred bound after a poisoned launch: drop the
+        slot tables built for the old bucket, clear the executables (the
+        segment range is part of their shapes), and re-bucket — or give
+        the bound up entirely once the bucket reaches the row capacity
+        (capacity-sized tensors cannot overflow, so poison cannot
+        recur)."""
+        t = self._catalog[ent.slot_scan] if ent.slot_scan else None
+        old = ent.bound
+        grown = old * 2
+        _, bound = resolve_group_bound(grown, t.capacity if t is not None
+                                       else grown + 2)
+        ent.execs.clear()
+        self._slots = {k: v for k, v in self._slots.items()
+                       if not (k[0] == ent.slot_scan and k[2] == ent.keys
+                               and k[3] == old)}
+        if bound is None:
+            ent.plan = _dc_replace(ent.plan, max_groups=None)
+            ent.bound = None
+            ent.slot_scan = None
+        else:
+            ent.plan = _dc_replace(ent.plan, max_groups=grown)
+            ent.bound = bound

@@ -1,0 +1,214 @@
+"""Serving-layer fault tolerance: the structured error taxonomy, the
+poison-sentinel detector, and the degradation circuit breaker.
+
+The serving layer's failure contract (docs/serving.md, "Failure
+semantics") is that **every failure is a typed per-request result**: a
+``ServeError`` subclass set on the request's future (or raised from the
+synchronous ``execute``), never a dispatcher-killing stray exception and
+never a silent NaN handed to the caller as data.  This module is the
+vocabulary of that contract plus the two detectors that enforce its
+hardest clauses:
+
+* ``is_poisoned`` — the O(num_segments) post-launch scan for the poison
+  sentinels ``group_bound.poison_overflow`` writes when a *traced* dense
+  bound check fails (NaN / iinfo.min / iinfo.max — the PR-3/PR-5
+  contract, shared via ``group_bound.poison_sentinel``).  Traced bound
+  failures are exactly the ones the eager slot-build validation cannot
+  see: vmapped per-lane filters give every lane its own group count, and
+  any lane can overflow an inferred bound that the unfiltered table
+  validated.  Detection converts that silent whole-column corruption
+  into ``PoisonedResult`` — or, for *inferred* bounds, into a bounded
+  double-and-rebuild retry (``AggServer._guarded_launch``).
+* ``CircuitBreaker`` — the per-(plan, parameter-signature) degradation
+  ladder.  Repeated kernel-backend failure trips the breaker open; while
+  open, launches route to a *degraded* executable traced under
+  ``reliability.degrade.force_backend("jnp")`` — the exact segment-ops
+  path that always exists (Froid's principle: keep the un-optimized form
+  as a semantic fallback).  After a cool-down one trial launch probes the
+  primary (half-open); success closes the breaker.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+
+import numpy as np
+
+__all__ = [
+    "ServeError", "BoundOverflow", "SlotTableStale", "DeadlineExceeded",
+    "QueueFull", "PoisonedResult", "BackendFailure", "ServerClosed",
+    "is_poisoned", "CircuitBreaker", "GuardStats",
+]
+
+
+# ---------------------------------------------------------------------------
+# Error taxonomy
+# ---------------------------------------------------------------------------
+
+
+class ServeError(Exception):
+    """Base of every structured serving failure.  Callers that care which
+    failure they got match the subclass; callers that only care *that*
+    the request failed catch this one type."""
+
+
+class BoundOverflow(ServeError, ValueError):
+    """A declared dense group bound could not hold the data's key set.
+    Subclasses ValueError so the pre-guard eager-raise contract
+    (``GroupBoundOverflow``) keeps holding for callers that matched on
+    it; the original message is preserved."""
+
+
+class SlotTableStale(ServeError):
+    """A cached slot table claimed a ``Table.version`` the catalog no
+    longer holds and rebuilding did not converge within the bounded
+    attempts.  Structurally this cannot happen — the cache key carries
+    the version — so surfacing it loudly (instead of serving the stale
+    arrays) is the point."""
+
+
+class DeadlineExceeded(ServeError):
+    """The request's deadline passed while it waited in the admission
+    queue; the dispatcher shed it without launching."""
+
+
+class QueueFull(ServeError):
+    """The bounded admission queue was at capacity at submit time; the
+    request was rejected immediately (backpressure, not buffering)."""
+
+
+class PoisonedResult(ServeError):
+    """The launch completed but the result carries the whole-column
+    poison stamp — a *traced* dense-bound check failed inside the
+    executable (per-lane overflow under vmap, or a skipped eager
+    validation).  The caller never sees the NaNs as data."""
+
+
+class BackendFailure(ServeError):
+    """The kernel backend raised and the degradation ladder could not
+    serve the request either.  ``__cause__`` carries the underlying
+    exception."""
+
+
+class ServerClosed(ServeError, RuntimeError):
+    """The request arrived after ``close()`` (or was queued when a
+    non-draining close dropped the queue).  Subclasses RuntimeError for
+    the pre-guard ``submit``-after-close contract."""
+
+
+# ---------------------------------------------------------------------------
+# Poison detection
+# ---------------------------------------------------------------------------
+
+
+def is_poisoned(table) -> bool:
+    """True when ``table`` carries the whole-column poison stamp of a
+    failed traced bound check: every *strong-sentinel* column (floating →
+    NaN, signed int → iinfo.min, unsigned int → iinfo.max) reads the
+    sentinel in **all** valid rows.  Bool columns are excluded — their
+    sentinel (False) is an everyday value — and a table with no strong
+    column at all reports False (undetectable, documented).  Requiring
+    *every* strong column to be fully stamped is what keeps legitimate
+    NaN aggregates (NaN inputs propagating through a sum) from
+    false-positiving: ``poison_overflow`` stamps all columns or none.
+
+    O(num_segments) per column; blocks on the device values (the caller
+    is about to hand them out anyway).
+    """
+    mask = np.asarray(table.mask())
+    if not mask.any():
+        return False
+    strong = False
+    for col in table.columns.values():
+        a = np.asarray(col)[mask]
+        d = a.dtype
+        if np.issubdtype(d, np.floating):
+            hit = bool(np.isnan(a).all())
+        elif np.issubdtype(d, np.unsignedinteger):
+            hit = bool((a == np.iinfo(d).max).all())
+        elif np.issubdtype(d, np.signedinteger) and d != np.bool_:
+            hit = bool((a == np.iinfo(d).min).all())
+        else:
+            continue
+        if not hit:
+            return False
+        strong = True
+    return strong
+
+
+# ---------------------------------------------------------------------------
+# Degradation ladder
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class GuardStats:
+    """Counters the guard emits; the chaos battery and the bench assert
+    on them.  All monotonic since server construction."""
+    poisoned: int = 0            # launches whose result carried the stamp
+    poison_retries: int = 0      # double-and-rebuild retries taken
+    stale_rebuilds: int = 0      # slot tables rebuilt on a version mismatch
+    deadline_shed: int = 0       # requests shed expired from the queue
+    queue_rejects: int = 0       # requests rejected at admission
+    backend_failures: int = 0    # primary-executable launch exceptions
+    degraded_launches: int = 0   # batches served by the jnp fallback
+    breaker_trips: int = 0       # closed → open transitions
+    breaker_recoveries: int = 0  # half-open trial successes (open → closed)
+    dispatcher_restarts: int = 0  # dispatcher threads respawned after death
+
+
+class CircuitBreaker:
+    """Per-(plan, parameter-signature) three-state breaker.
+
+    ``closed`` — launches take the primary executable; consecutive
+    backend failures count up, and at ``threshold`` the breaker trips
+    ``open``.  ``open`` — launches take the degraded (jnp) executable
+    without touching the primary, until ``cooldown_s`` has passed, at
+    which point the breaker is ``half-open``: ONE launch probes the
+    primary; success closes the breaker (counter reset), failure re-opens
+    it with a fresh cool-down.  The server calls every method under its
+    own lock, so the breaker itself needs none; ``clock`` is injectable
+    so the chaos tests drive the cool-down deterministically.
+    """
+
+    def __init__(self, threshold: int = 3, cooldown_s: float = 5.0,
+                 clock=time.monotonic):
+        self.threshold = max(1, int(threshold))
+        self.cooldown_s = float(cooldown_s)
+        self._clock = clock
+        self._failures = 0
+        self._opened_at = None   # not None ⇔ open (or half-open probing)
+
+    @property
+    def state(self) -> str:
+        if self._opened_at is None:
+            return "closed"
+        if self._clock() - self._opened_at >= self.cooldown_s:
+            return "half-open"
+        return "open"
+
+    def use_degraded(self) -> bool:
+        """Route decision for the next launch: True → degraded
+        executable.  Half-open returns False exactly once per cool-down
+        expiry (the probe); a failed probe re-opens before the next
+        call asks."""
+        return self.state == "open"
+
+    def record_success(self) -> bool:
+        """A primary launch succeeded.  Returns True when this was a
+        half-open probe that just closed the breaker."""
+        recovered = self._opened_at is not None
+        self._failures = 0
+        self._opened_at = None
+        return recovered
+
+    def record_failure(self) -> bool:
+        """A primary launch raised.  Returns True when this failure
+        tripped the breaker (closed → open, or a failed half-open
+        probe re-arming the cool-down)."""
+        self._failures += 1
+        was_open = self._opened_at is not None
+        if was_open or self._failures >= self.threshold:
+            self._opened_at = self._clock()
+            return True
+        return False

@@ -6,3 +6,14 @@ import sys
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def pytest_configure(config):
+    # CI installs pytest-timeout and runs with --timeout; locally the
+    # plugin may be absent, so register its marker as a documented no-op
+    # instead of tripping the unknown-marker warning
+    if not config.pluginmanager.hasplugin("timeout"):
+        config.addinivalue_line(
+            "markers",
+            "timeout(seconds): per-test wall-clock limit (enforced by "
+            "pytest-timeout in CI; no-op when the plugin is absent)")

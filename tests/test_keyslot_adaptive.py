@@ -1,0 +1,125 @@
+"""Adaptive probe-table sizing (the carried ROADMAP item): the
+distinct-count sketch, not the worst-case EXPAND ceiling, sizes the
+scatter table each probe round touches — and probing must stay a
+handful of rounds even at the sketch's target load factor.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.relational import keyslot
+from repro.relational.keyslot import (EXPAND, adaptive_expand,
+                                      key_words_for, probe_rounds,
+                                      slot_ids_from_words, slot_segment_ids)
+from repro.relational.table import Table
+
+#: generous ceiling for "a handful of probe rounds" — the fixed-EXPAND
+#: table historically finished in ≤ ~4 rounds on full buckets; adaptive
+#: shrinking must not push it anywhere near table-sized probing
+MAX_ROUNDS = 16
+
+
+def _table(n, card, seed=0):
+    rng = np.random.default_rng(seed)
+    return Table({"k": jnp.asarray(rng.integers(0, card, n)
+                                   .astype(np.int32)),
+                  "v": jnp.asarray(rng.uniform(0, 1, n)
+                                   .astype(np.float32))},
+                 jnp.ones(n, bool))
+
+
+def _partition(table, seg, bucket):
+    """Group partition as {frozenset of row indices}: slot numbers are
+    probe-order and legitimately differ across table sizes — the
+    *partition* may not."""
+    seg = np.asarray(seg)
+    groups = {}
+    for i, s in enumerate(seg):
+        if s < bucket:
+            groups.setdefault(int(s), []).append(i)
+    return {frozenset(rows) for rows in groups.values()}
+
+
+def test_adaptive_expand_formula():
+    # tiny key set in a big bucket: floor
+    assert adaptive_expand(1, 4096) == 4
+    assert adaptive_expand(100, 4096) == 4
+    # full bucket: target load 1/8 → expand 8
+    assert adaptive_expand(512, 512) == 8
+    # overflow-bound estimates clamp at the fixed ceiling
+    assert adaptive_expand(4096, 128) == EXPAND
+    # monotone in the estimate, always a power of two in [4, EXPAND]
+    prev = 0
+    for est in (1, 32, 64, 128, 256, 512, 1024):
+        e = adaptive_expand(est, 512)
+        assert e >= prev and 4 <= e <= EXPAND and e & (e - 1) == 0
+        prev = e
+
+
+def test_expand_validation():
+    words = key_words_for([jnp.arange(8, dtype=jnp.int32)])
+    with pytest.raises(ValueError, match="expand"):
+        slot_ids_from_words(words, jnp.ones(8, bool), 8, expand=3)
+
+
+@pytest.mark.parametrize("expand", [4, 8, EXPAND])
+def test_partition_identical_across_expands(expand):
+    """Correctness never rides on the table size: every expand ≥ the
+    floor yields the same grouping partition and zero overflow for a key
+    set within the bucket."""
+    n, card, bucket = 3000, 512, 512        # FULL bucket — worst load
+    t = _table(n, card, seed=1)
+    words = key_words_for([t.columns["k"]])
+    seg, _own, _occ, ovf = slot_ids_from_words(
+        words, t.mask(), bucket, expand=expand)
+    assert int(ovf) == 0
+    assert probe_rounds() is not None and probe_rounds() <= MAX_ROUNDS, \
+        f"expand={expand}: {probe_rounds()} probe rounds"
+    ref_seg, _o, _c, ref_ovf = slot_ids_from_words(
+        words, t.mask(), bucket, expand=EXPAND)
+    assert int(ref_ovf) == 0
+    assert _partition(t, seg, bucket) == _partition(t, ref_seg, bucket)
+
+
+def test_probe_rounds_bounded_at_target_load():
+    """The regression this satellite exists for: at the adaptive target
+    load factor (est ≈ bucket, expand 8 → load 1/8) the probe loop must
+    terminate in a handful of rounds, not O(√table)."""
+    n, card, bucket = 4096, 512, 512
+    t = _table(n, card, seed=2)
+    seg, _own, _occ, ovf = slot_segment_ids(t, ("k",), bucket)
+    assert int(ovf) == 0
+    assert probe_rounds() is not None and probe_rounds() <= MAX_ROUNDS
+
+
+def test_adaptive_matches_fixed_ceiling(monkeypatch):
+    """Sketch-driven sizing (default) and the pinned ceiling
+    (REPRO_KEYSLOT_ADAPTIVE=off) agree on the grouping partition."""
+    n, card, bucket = 2000, 100, 512    # sparse bucket → adaptive shrinks
+    t = _table(n, card, seed=3)
+    seg_a, _o1, _c1, ovf_a = slot_segment_ids(t, ("k",), bucket)
+    monkeypatch.setenv("REPRO_KEYSLOT_ADAPTIVE", "off")
+    seg_f, _o2, _c2, ovf_f = slot_segment_ids(t, ("k",), bucket)
+    assert int(ovf_a) == 0 and int(ovf_f) == 0
+    assert _partition(t, seg_a, bucket) == _partition(t, seg_f, bucket)
+
+
+def test_adaptive_skipped_under_tracing():
+    """A traced build cannot run the concrete sketch — it must fall back
+    to the fixed ceiling, not crash."""
+    import jax
+
+    t = _table(256, 16, seed=4)
+
+    def run(k):
+        traced = Table({"k": k, "v": t.columns["v"]}, t.mask())
+        seg, _own, _occ, ovf = slot_segment_ids(traced, ("k",), 64)
+        return seg, ovf
+
+    seg, ovf = jax.jit(run)(t.columns["k"])
+    assert int(ovf) == 0
+    want, _o, _c, _v = slot_segment_ids(t, ("k",), 64)
+    assert _partition(t, np.asarray(seg), 64) == \
+        _partition(t, np.asarray(want), 64)

@@ -1,0 +1,133 @@
+"""Poison-sentinel contract: every sentinel round-trips through the
+traced bound checks and is recognized by the serving detector.
+
+The contract has three parties that must agree bit-for-bit on what
+"poisoned" means per dtype: ``group_bound.poison_overflow`` (the
+writer), ``serve.guard.is_poisoned`` (the reader), and
+``group_bound.poison_sentinel`` (the shared definition both consult).
+These tests pin the round trip for every output dtype through BOTH
+traced validation paths — ``check_group_overflow`` (sorted route) and
+``check_slot_overflow`` (sort-free route) — so the detector can never
+silently diverge from the poisoner.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.relational.group_bound import (check_group_overflow,
+                                          poison_overflow, poison_sentinel)
+from repro.relational.keyslot import check_slot_overflow
+from repro.relational.table import Table
+from repro.serve.guard import is_poisoned
+
+DTYPES = ("float32", "float16", "int32", "int16", "uint32", "bool")
+
+
+def _expected(dtype):
+    d = np.dtype(dtype)
+    if np.issubdtype(d, np.floating):
+        return np.nan
+    if d == np.bool_:
+        return False
+    if np.issubdtype(d, np.unsignedinteger):
+        return np.iinfo(d).max
+    return np.iinfo(d).min
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_sentinel_definition(dtype):
+    s = poison_sentinel(dtype)
+    assert s is not None
+    assert jnp.dtype(s.dtype) == jnp.dtype(dtype)
+    assert np.array_equal(np.asarray(s), np.asarray(_expected(dtype),
+                                                    dtype), equal_nan=True)
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("route", ["group", "slot"])
+def test_sentinel_roundtrip_traced(dtype, route):
+    """Traced bound check fails → poison_overflow writes the sentinel to
+    the whole column; check passes → identity.  Both validated paths."""
+    ones = jnp.ones(5, dtype)
+
+    def run(count):
+        if route == "group":
+            ok = check_group_overflow(count, 2)       # count > 2 → poison
+        else:
+            ok = check_slot_overflow(count - 2, 2)    # unplaced > 0 → poison
+        return poison_overflow({"a": ones}, ok)["a"]
+
+    poisoned = np.asarray(jax.jit(run)(jnp.int32(3)))
+    want = np.full(5, _expected(dtype), dtype)
+    assert np.array_equal(poisoned, want, equal_nan=True), \
+        f"{route}/{dtype}: {poisoned!r} != {want!r}"
+
+    clean = np.asarray(jax.jit(run)(jnp.int32(2)))
+    assert np.array_equal(clean, np.ones(5, dtype))
+
+
+@pytest.mark.parametrize("dtype", ["float32", "float16", "int32", "int16",
+                                   "uint32"])
+def test_detector_recognizes_each_strong_sentinel(dtype):
+    n = 8
+    bad = jnp.full(n, poison_sentinel(dtype))
+    t = Table({"a": bad}, jnp.ones(n, bool))
+    assert is_poisoned(t)
+
+
+def test_detector_requires_every_strong_column():
+    """A legitimate NaN aggregate (NaN inputs through a sum) must not
+    false-positive: poisoning stamps all columns or none."""
+    n = 4
+    t = Table({"a": jnp.full(n, jnp.nan, jnp.float32),
+               "b": jnp.ones(n, jnp.float32)}, jnp.ones(n, bool))
+    assert not is_poisoned(t)
+
+
+def test_detector_ignores_invalid_rows():
+    """Sentinels parked in invalid rows (the overflow slot, unoccupied
+    slots) are normal — only valid rows count."""
+    valid = jnp.array([True, True, False, False])
+    t = Table({"a": jnp.array([1.0, 2.0, jnp.nan, jnp.nan], jnp.float32)},
+              valid)
+    assert not is_poisoned(t)
+
+
+def test_detector_bool_only_is_undetectable():
+    """False is an everyday bool value, so an all-bool table cannot be
+    poison-checked — documented as undetectable, never as a false
+    positive."""
+    t = Table({"a": jnp.zeros(4, bool)}, jnp.ones(4, bool))
+    assert not is_poisoned(t)
+
+
+def test_detector_empty_result_is_clean():
+    t = Table({"a": jnp.full(4, jnp.nan, jnp.float32)}, jnp.zeros(4, bool))
+    assert not is_poisoned(t)
+
+
+def test_poisoned_end_to_end_through_sortfree_route():
+    """The whole-column stamp as the executors actually produce it: a
+    traced slot-overflow guard fails and every output column (keys and
+    aggregates) reads its sentinel."""
+    from repro.relational.keyslot import sortfree_result
+
+    rng = np.random.default_rng(3)
+    n, bucket = 64, 4
+    t = Table({"k": jnp.asarray(rng.integers(0, 40, n).astype(np.int32)),
+               "v": jnp.asarray(rng.uniform(0, 1, n).astype(np.float32))},
+              jnp.ones(n, bool))
+
+    def run(unplaced):
+        rep = jnp.zeros(bucket + 1, jnp.int32)
+        out_valid = jnp.ones(bucket + 1, bool)
+        return sortfree_result(t, ("k",), rep, out_valid, unplaced, bucket,
+                               {"s": jnp.ones(bucket + 1, jnp.float32)})
+
+    poisoned = jax.jit(run)(jnp.int32(7))
+    assert is_poisoned(poisoned)
+    clean = jax.jit(run)(jnp.int32(0))
+    assert not is_poisoned(clean)
