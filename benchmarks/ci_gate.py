@@ -18,6 +18,13 @@ Compares a freshly produced ``bench_group_agg.json`` (``benchmarks/run.py
   run* (same machine, same warm cache — run-to-run noise cancels), and
   the ``groupagg_sortfree_sort_census`` row must report zero row-sized
   sorts on the sort-free lowering;
+* the whole-plan-fusion acceptance rows (``tpch_join_*``, when present
+  in the fresh artifact): the fused filter-join-agg chain
+  (``tpch_join_agg_fused``) must beat the materialized per-node plan
+  (``tpch_join_agg_materialized``) *within the same fresh run*, and the
+  ``tpch_join_sort_census`` row must report zero row-sized sorts on the
+  fused lowering with at least one on the materialized route (detector
+  sanity);
 * the serving acceptance rows (``serve_agg_*``, when present in the
   fresh artifact): the cached p50 must beat the fresh-jit-per-call p50
   by more than 2x, the guarded p50 (failure guard on: poison scan +
@@ -116,6 +123,45 @@ def check_sortfree(fresh: dict[str, dict]) -> list[str]:
         else:
             print(f"{SORT_CENSUS_ROW}: sortfree=0, sorted="
                   f"{m.group(2)} (detector live)")
+    return errors
+
+
+#: whole-plan-fusion acceptance rows (present when the tpch_join bench
+#: ran): fused must beat materialized, census must show 0 fused sorts
+JOIN_ROWS = ("tpch_join_agg_fused", "tpch_join_agg_materialized",
+             "tpch_join_sort_census")
+
+
+def check_join(fresh: dict[str, dict]) -> list[str]:
+    if not any(name in fresh for name in JOIN_ROWS):
+        return []                    # bench not in this run's --only set
+    missing = [name for name in JOIN_ROWS if name not in fresh]
+    if missing:
+        return [f"tpch_join: acceptance rows missing from fresh run: "
+                f"{', '.join(missing)}"]
+    errors = []
+    fu = float(fresh["tpch_join_agg_fused"].get("us_per_call", 0.0))
+    ma = float(fresh["tpch_join_agg_materialized"].get("us_per_call", 0.0))
+    if fu >= ma:
+        errors.append(f"tpch_join_agg_fused: {fu:.1f}us does not beat "
+                      f"tpch_join_agg_materialized: {ma:.1f}us")
+    else:
+        print(f"tpch_join_agg_fused: {fu:.1f}us beats materialized "
+              f"{ma:.1f}us ({ma / max(fu, 1e-9):.2f}x)")
+    derived = fresh["tpch_join_sort_census"].get("derived", "")
+    m = re.search(r"fused=(\d+)_materialized=(\d+)", derived)
+    if not m:
+        errors.append(f"tpch_join_sort_census: derived field not "
+                      f"parseable: {derived!r}")
+    elif int(m.group(1)) != 0:
+        errors.append(f"tpch_join_sort_census: fused lowering traces to "
+                      f"{m.group(1)} row-sized sorts (want 0)")
+    elif int(m.group(2)) < 1:
+        errors.append(f"tpch_join_sort_census: materialized route traces "
+                      f"to no row-sized sort — census detector is broken")
+    else:
+        print(f"tpch_join_sort_census: fused=0, materialized="
+              f"{m.group(2)} (detector live)")
     return errors
 
 
@@ -225,6 +271,7 @@ def main(argv=None) -> int:
     errors = gate(fresh, baseline, args.threshold)
     errors += check_dense_bound(fresh)
     errors += check_sortfree(fresh)
+    errors += check_join(fresh)
     errors += check_serving(fresh)
     if errors:
         print()
@@ -233,8 +280,9 @@ def main(argv=None) -> int:
         return 1
     print("\nOK: no timed row regressed beyond "
           f"{args.threshold:.1f}x; dense-bound accounting holds; "
-          "sort-free beats sorted with a sort-free lowering; serving "
-          "caches hold their contract")
+          "sort-free beats sorted with a sort-free lowering; the fused "
+          "join chain beats the materialized plan; serving caches hold "
+          "their contract")
     return 0
 
 

@@ -1,0 +1,162 @@
+"""Structural CI gate: the fused filter-join-agg lowering contains ZERO
+row-sized sort ops — and no new row-sized gathers.
+
+The whole-plan fusion pass (relational/fuse.py + the keyslot hash join,
+``engine._hash_lookup``) exists to delete the join's stable row-sized
+argsort and the materialized intermediate Table from ``Join → Filter →
+GroupAgg`` chains.  This spy pins that deletion on the *traced program*
+for a TPC-H promo-revenue-shaped query (Q14: LINEITEM ⋈ PART, ship-date
+window + promo flag filter, grouped revenue sum):
+
+1. **Sort census** — the fused lowering traces to ZERO sort equations
+   with row-sized output: no join argsort (hash build/probe replaces
+   it), no group sort (the sort-free slotting route), no compress.
+2. **Gather census** — the fused lowering traces to NO MORE row-sized
+   gathers than the materialized per-node plan: only the columns the
+   aggregate names are gathered (the probe loop's per-round lookups are
+   a static handful of equations, not per-row traffic).
+3. **Detector sanity** — the SAME plan under ``REPRO_JOIN_HASH=off`` +
+   ``REPRO_PLAN_FUSE=off`` traces to at least one row-sized sort,
+   proving the census would catch a regression to the legacy lowering.
+4. **Limit census** — the prefix-sum ``Limit`` lowering registers zero
+   row-sized sorts/gathers, while the ``compress()`` lowering it
+   replaced shows up in both counters (detector sanity again).
+
+Run as a module (the CI step) or import the helpers from tests:
+
+    PYTHONPATH=src python -m benchmarks.join_spy
+"""
+from __future__ import annotations
+
+import sys
+
+import jax
+
+from repro.analysis.jaxpr_spy import row_census
+from repro.core.loop_ir import BinOp, Col, Const
+from repro.relational import execute
+from repro.relational.plan import Filter, GroupAgg, Join, Limit, Scan
+from repro.relational.tpch import SCHEMAS, gen_tpch
+
+
+def filter_join_agg_plan(n_part: int) -> GroupAgg:
+    """The Q14-shaped chain: per-part promo revenue over a ship-date
+    window — Join → Filter → GroupAgg with a declared dense bound."""
+    join = Join(Scan("LINEITEM", SCHEMAS["LINEITEM"]),
+                Scan("PART", SCHEMAS["PART"]),
+                "l_partkey", "p_partkey")
+    pred = BinOp("and",
+                 BinOp("and", Col("l_shipdate") >= Const(100),
+                       Col("l_shipdate") < Const(800)),
+                 Col("p_type_promo"))
+    return GroupAgg(Filter(join, pred), ("l_partkey",),
+                    (("rev", "sum", "l_extendedprice"),
+                     ("c", "count", None)),
+                    max_groups=n_part)
+
+
+def _with_env(fused: bool, backend: str, fn):
+    from benchmarks.util import pin_env
+    with pin_env(REPRO_JOIN_HASH="on" if fused else "off",
+                 REPRO_PLAN_FUSE="on" if fused else "off",
+                 REPRO_SEGAGG_BACKEND=backend,
+                 REPRO_GROUPAGG_FUSED=backend):
+        return fn()
+
+
+def trace_chain(catalog, plan, fused: bool, backend: str = "jnp"):
+    """Closed jaxpr of the chain under the fused or materialized route."""
+    def run():
+        t = execute(plan, catalog)
+        return tuple(t.columns.values()) + (t.valid,)
+
+    return _with_env(fused, backend, lambda: jax.make_jaxpr(run)())
+
+
+def join_census(scale: float = 0.005, backend: str = "jnp",
+                ) -> dict[str, int]:
+    """Row-sized sort/gather counts of the fused vs materialized
+    filter-join-agg lowering at the given TPC-H scale.
+
+    Two thresholds, one per table role: the legacy join's stable argsort
+    is over the BUILD side (PART — the smaller table), so the sort
+    census counts from that capacity up (which also catches any
+    probe-side group sort or compress); gathers scale with the PROBE
+    side (LINEITEM), so the gather census counts only from the larger
+    capacity up — bucket/segment-sized traffic was never the problem."""
+    catalog = gen_tpch(scale)
+    n_probe = catalog["LINEITEM"].capacity
+    n_build = catalog["PART"].capacity
+    plan = filter_join_agg_plan(n_build)
+    fused = trace_chain(catalog, plan, True, backend)
+    mat = trace_chain(catalog, plan, False, backend)
+    f_s, f_g = row_census(fused, n_build), row_census(fused, n_probe)
+    m_s, m_g = row_census(mat, n_build), row_census(mat, n_probe)
+    return {"rows": n_probe, "build_rows": n_build,
+            "fused_sorts": f_s["sorts"], "fused_gathers": f_g["gathers"],
+            "materialized_sorts": m_s["sorts"],
+            "materialized_gathers": m_g["gathers"]}
+
+
+def limit_census(n: int = 20_000) -> dict[str, int]:
+    """Row-sized sort/gather counts of the prefix-sum Limit lowering vs
+    the compress() lowering it replaced (detector sanity)."""
+    import jax.numpy as jnp
+
+    from repro.relational.table import Table
+
+    def table():
+        v = jnp.arange(n, dtype=jnp.int32)
+        return Table({"v": v}, v % 3 != 0)
+
+    def run_limit():
+        t = execute(Limit(Scan("T", ("v",)), 7), {"T": table()})
+        return tuple(t.columns.values()) + (t.valid,)
+
+    def run_compress():
+        t = table().compress()
+        return tuple(t.columns.values()) + (t.valid,)
+
+    lim = row_census(jax.make_jaxpr(run_limit)(), n)
+    comp = row_census(jax.make_jaxpr(run_compress)(), n)
+    return {"limit_sorts": lim["sorts"], "limit_gathers": lim["gathers"],
+            "compress_sorts": comp["sorts"],
+            "compress_gathers": comp["gathers"]}
+
+
+def main() -> int:
+    failures = []
+    for backend, scale in (("jnp", 0.005), ("interpret", 0.0005)):
+        c = join_census(scale, backend)
+        print(f"[{backend} scale={scale} rows={c['rows']}] {c}")
+        if c["fused_sorts"] != 0:
+            failures.append(f"[{backend}] fused filter-join-agg lowering "
+                            f"still contains row-sized sorts: {c}")
+        if c["materialized_sorts"] < 1:
+            failures.append(f"[{backend}] detector sanity — the legacy "
+                            f"route should trace to at least one "
+                            f"row-sized sort: {c}")
+        if c["fused_gathers"] > c["materialized_gathers"]:
+            failures.append(f"[{backend}] fused lowering adds row-sized "
+                            f"gathers over the materialized route: {c}")
+    lc = limit_census()
+    print(f"[limit] {lc}")
+    if lc["limit_sorts"] != 0 or lc["limit_gathers"] != 0:
+        failures.append(f"Limit lowering registers row-sized "
+                        f"sorts/gathers: {lc}")
+    if lc["compress_sorts"] < 1 or lc["compress_gathers"] < 1:
+        failures.append(f"detector sanity — compress() should register "
+                        f"in both counters: {lc}")
+    if failures:
+        for f in failures:
+            print("FAIL:", f, file=sys.stderr)
+        return 1
+    print("OK: fused filter-join-agg lowering contains zero row-sized "
+          "sorts and no new row-sized gathers (legacy route keeps its "
+          "sort, so the census would catch a regression); Limit is "
+          "compaction-free")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

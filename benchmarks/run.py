@@ -54,6 +54,9 @@ def main() -> None:
         # not row throughput — group_agg owns the big-n axis
         "serve_agg": lambda: serve_agg.run(
             n=50_000 if args.full else 8_192),
+        # whole-plan fusion acceptance: fused vs materialized
+        # filter-join-agg chain at 100× the default loop scale factor
+        "tpch_join": lambda: tpch_loops.run_join_agg(),
     }
     only = None if args.only == "all" else set(args.only.split(","))
     print("name,us_per_call,derived")

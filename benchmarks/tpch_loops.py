@@ -24,7 +24,7 @@ from repro.relational.plan import AggCall, Filter
 from repro.relational.tpch import gen_tpch
 
 from .queries import DEFAULT_PARAMS, QUERIES
-from .util import emit, time_fn
+from .util import emit, pin_env, time_fn
 
 
 def _grouped_call(prog, group_key: str):
@@ -101,3 +101,83 @@ def run(scale: float = 0.0005, n_invocations: int = 24,
             us_grouped = time_fn(lambda: grouped().columns, repeats=repeats)
             emit(f"tpch_{qname}_aggify_plus", us_grouped,
                  f"speedup={us_cursor/us_grouped:.2f}x_allgroups")
+
+
+def _join_agg_oracle(catalog) -> dict[int, tuple[float, int]]:
+    """Numpy reference for the Q14-shaped chain: inner join on the part
+    key, ship-date window + promo filter, grouped (sum, count)."""
+    li = catalog["LINEITEM"].to_numpy()
+    pa = catalog["PART"].to_numpy()
+    order = np.argsort(pa["p_partkey"], kind="stable")
+    rk = pa["p_partkey"][order]
+    pos = np.clip(np.searchsorted(rk, li["l_partkey"]), 0, len(rk) - 1)
+    found = rk[pos] == li["l_partkey"]
+    promo = pa["p_type_promo"][order][pos]
+    keep = (found & (li["l_shipdate"] >= 100) & (li["l_shipdate"] < 800)
+            & promo)
+    out: dict[int, tuple[float, int]] = {}
+    for k in np.unique(li["l_partkey"][keep]):
+        m = keep & (li["l_partkey"] == k)
+        out[int(k)] = (float(np.sum(li["l_extendedprice"][m],
+                                    dtype=np.float64)), int(np.sum(m)))
+    return out
+
+
+def _result_map(t) -> dict[int, tuple[float, int]]:
+    cols = t.to_numpy()
+    return {int(k): (float(s), int(c))
+            for k, s, c in zip(cols["l_partkey"], cols["rev"], cols["c"])}
+
+
+def run_join_agg(scale: float = 0.05, repeats: int = 3,
+                 sweep: tuple = (0.0005, 0.005, 0.05)) -> None:
+    """Timed fused vs materialized filter-join-agg chain (whole-plan
+    fusion acceptance): the Q14-shaped ``Join → Filter → GroupAgg`` at
+    100× the default loop scale factor, parity-checked against a numpy
+    oracle, plus the structural sort census and a scale-factor sweep of
+    the fused chain.  Gated by ci_gate.check_join."""
+    from .join_spy import filter_join_agg_plan, join_census
+
+    catalog = gen_tpch(scale)
+    n_rows = catalog["LINEITEM"].capacity
+    plan = filter_join_agg_plan(catalog["PART"].capacity)
+
+    def timed(fused: bool) -> tuple[float, dict]:
+        with pin_env(REPRO_PLAN_FUSE="on" if fused else "off",
+                     REPRO_JOIN_HASH="on" if fused else "off"):
+            fn = jax.jit(
+                lambda: tuple(execute(plan, catalog).columns.values()))
+            us = time_fn(fn, repeats=repeats, warmup=1)
+            res = _result_map(execute(plan, catalog))
+        return us, res
+
+    us_fused, got_fused = timed(True)
+    us_mat, got_mat = timed(False)
+
+    oracle = _join_agg_oracle(catalog)
+    for got, route in ((got_fused, "fused"), (got_mat, "materialized")):
+        assert set(got) == set(oracle), (
+            f"{route} group keys diverge from the numpy oracle")
+        for k, (s, c) in oracle.items():
+            gs, gc = got[k]
+            np.testing.assert_allclose(gs, s, rtol=1e-4,
+                                       err_msg=f"{route} sum key={k}")
+            assert gc == c, f"{route} count key={k}: {gc} != {c}"
+
+    emit("tpch_join_agg_fused", us_fused,
+         f"rows={n_rows}_speedup={us_mat / max(us_fused, 1e-9):.2f}x")
+    emit("tpch_join_agg_materialized", us_mat, f"rows={n_rows}")
+
+    c = join_census(0.005, "jnp")
+    emit("tpch_join_sort_census", 0.0,
+         f"fused={c['fused_sorts']}_materialized={c['materialized_sorts']}")
+
+    parts = []
+    for s in sweep:
+        cat_s = gen_tpch(s)
+        plan_s = filter_join_agg_plan(cat_s["PART"].capacity)
+        fn = jax.jit(
+            lambda: tuple(execute(plan_s, cat_s).columns.values()))
+        parts.append(f"s{s}={time_fn(fn, repeats=repeats, warmup=1):.0f}us"
+                     f"@{cat_s['LINEITEM'].capacity}rows")
+    emit("tpch_join_agg_scale_sweep", 0.0, "_".join(parts))

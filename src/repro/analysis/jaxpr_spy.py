@@ -108,3 +108,17 @@ def count_row_sized_gathers(jaxpr, n: int) -> int:
     but emitting a segment-sized result are intentionally not counted —
     output size is what the collective/memory cost scales with."""
     return sum(1 for s in gather_output_sizes(jaxpr) if s >= n)
+
+
+def row_census(jaxpr, n: int) -> dict[str, int]:
+    """Row-sized sort AND gather counts in one walk — the combined
+    acceptance census of the whole-plan-fusion clients: the hash-join /
+    fused-chain lowering must show zero row-sized sorts (the legacy
+    join's stable argsort, ``compress``'s permutation sort, and the
+    group sort all register here) and no more row-sized gathers than the
+    materialized plan it replaced.  ``Limit`` is covered by the same
+    counters: its old ``compress()`` lowering costs one row-sized sort
+    plus per-column row-sized gathers, while the prefix-sum rewrite
+    (engine) is a cumsum + compare — nothing registers."""
+    return {"sorts": count_row_sized_sorts(jaxpr, n),
+            "gathers": count_row_sized_gathers(jaxpr, n)}

@@ -51,7 +51,7 @@ from repro.relational.table import Table
 from . import recognize as _recognize
 from .aggify import CustomAggregate, RewrittenProgram, aggify, exec_stmts
 from .loop_ir import (Assign, Col, CursorLoop, Program, Var, assigned_vars,
-                      eval_expr)
+                      eval_expr, expr_cols)
 
 
 # ---------------------------------------------------------------------------
@@ -227,13 +227,24 @@ def _resolve_mode(call: AggCall, agg: CustomAggregate,
     return mode
 
 
+def _agg_call_needed(call: AggCall) -> tuple[str, ...]:
+    """Columns an AggCall reads from its child: group/sort keys plus
+    every Col its parameter bindings reference — the ``needed`` set the
+    whole-plan fusion pass (relational/fuse.py) materializes."""
+    need = list(call.group_keys) + list(call.sort_keys)
+    for _name, e in call.param_binding:
+        need.extend(sorted(expr_cols(e)))
+    return tuple(need)
+
+
 def agg_call_values(call: AggCall, catalog, env, deferred_init=False,
                     num_chunks: int = 8, var_dtypes=None) -> dict[str, Any]:
     """Evaluate 𝒢_{AggΔ}(Q) (ungrouped) → {V_term var: value}."""
     if call.group_keys:
         raise ValueError("grouped AggCall: use execute_agg_call / engine")
     agg: CustomAggregate = call.aggregate
-    t = _engine.execute(call.child, catalog, env)
+    t = _engine.execute_for_agg(call.child, catalog, env,
+                                _agg_call_needed(call))
     if call.ordered:
         t = t.sort_by(call.sort_keys, call.sort_desc)
 
@@ -327,7 +338,8 @@ def sortfree_call_route(call: AggCall, bound) -> bool:
 def grouped_agg_call(call: AggCall, catalog, env,
                      var_dtypes=None) -> Table:
     agg: CustomAggregate = call.aggregate
-    t = _engine.execute(call.child, catalog, env)
+    t = _engine.execute_for_agg(call.child, catalog, env,
+                                _agg_call_needed(call))
     # row-sharded input (Table.shard_rows): the fused path runs the kernel
     # per shard and all-reduces moments; detect BEFORE the sort, on the
     # columns the caller committed

@@ -699,6 +699,13 @@ def fused_segment_agg(vals: jax.Array, segs: jax.Array, valid: jax.Array,
     ``segs``  (N,) int in [0, num_segments); sorted ascending under the
     default ``layout='sorted'``, arbitrary under ``layout='unsorted'``.
     ``valid`` (N,) or (N, C) bool — per-column row validity (guards).
+    This guard input is also how whole-plan fusion (relational/fuse.py)
+    reaches the kernel: pushed-down Filter predicates and the join's
+    found mask arrive pre-ANDed into ``valid`` rather than as a
+    compacted row stream, and the fused chain's probe output arrives as
+    ``segs`` (right-row indices under ``layout='unsorted'``) — no
+    plumbing here is fusion-specific; the chain reuses these two
+    arguments as-is.
     ``moments`` restricts which of [sum, count, min, max] (plus the
     optional index moments ``argmin_first``/``argmin_last``/
     ``argmax_first``/``argmax_last`` — see ``INDEX_MOMENTS``) are

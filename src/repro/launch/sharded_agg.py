@@ -58,6 +58,14 @@ the per-moment collectives move (C, 4, ~group count) elements instead of
 is independent of the shard count: rows (not segments) are padded to a
 multiple of it, so a bound smaller than the mesh axis still works (tail
 shards just contribute moment identities).
+
+Whole-plan fusion (relational/fuse.py) interacts with this routing at
+one seam: a fused chain's right-side column gathers produce fresh
+arrays whose sharding is whatever XLA picked, which would make
+``row_sharded_mesh`` miss the route.  ``fuse._recommit_rows`` puts each
+gathered column back on the left table's committed row NamedSharding
+before the aggregate sees it, so sharded fused chains still take the
+O(num_segments)-per-shard merge paths above with no changes here.
 """
 from __future__ import annotations
 

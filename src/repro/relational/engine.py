@@ -8,10 +8,12 @@ between the query and the loop — the temp-table barrier.
 """
 from __future__ import annotations
 
+import os
 from typing import Any, Mapping, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.loop_ir import eval_expr
 from .plan import (AggCall, Filter, GroupAgg, IterSpace, Join, Limit, OrderBy,
@@ -80,13 +82,30 @@ def _exec(plan: Plan, catalog: Catalog, env: Env) -> Table:
         return t.sort_by(plan.keys, plan.descending)
 
     if isinstance(plan, Limit):
+        # first-n valid rows by prefix sum of the validity mask — an
+        # in-place mask intersection, never a compaction (the old
+        # compress()-based lowering paid a row-sized stable sort + gather
+        # just to drop a mask; see analysis/jaxpr_spy.limit_census)
         t = _exec(plan.child, catalog, env)
-        c = t.compress()
-        return c.filter(jnp.arange(c.capacity) < plan.n)
+        keep = jnp.cumsum(t.mask().astype(jnp.int32)) <= plan.n
+        return t.filter(keep)
 
     if isinstance(plan, GroupAgg):
-        t = _exec(plan.child, catalog, env)
-        return _group_agg(t, plan.keys, plan.aggs, plan.max_groups)
+        from . import fuse
+        needed = plan.keys + _agg_cols(plan.aggs)
+        res = fuse.fused_chain_result(plan.child, catalog, env,
+                                      tuple(needed), _exec)
+        if res is None:
+            t = _exec(plan.child, catalog, env)
+            return _group_agg(t, plan.keys, plan.aggs, plan.max_groups)
+        slots = _probe_slot_mapping(res, plan.keys, plan.max_groups)
+        if slots is None:
+            return _group_agg(res.table, plan.keys, plan.aggs,
+                              plan.max_groups)
+        from .keyslot import provide_slots
+        with provide_slots(slots):
+            return _group_agg(res.table, plan.keys, plan.aggs,
+                              plan.max_groups)
 
     if isinstance(plan, AggCall):
         # Import here: core.executors depends on this module.
@@ -96,19 +115,115 @@ def _exec(plan: Plan, catalog: Catalog, env: Env) -> Table:
     raise TypeError(f"unknown plan node {type(plan)}")
 
 
+def _agg_cols(aggs) -> tuple[str, ...]:
+    """Column names a GroupAgg aggs tuple reads (arg-extremum ops read a
+    (key, payload) pair; count reads none)."""
+    cols: list[str] = []
+    for _out, _op, col in aggs:
+        if col is None:
+            continue
+        if isinstance(col, tuple):
+            cols.extend(col)
+        else:
+            cols.append(col)
+    return tuple(cols)
+
+
+def execute_for_agg(child: Plan, catalog: Catalog, env: Env,
+                    needed: tuple) -> Table:
+    """Execute an aggregate's child plan, fusing a
+    ``Filter*/Project* → Join`` chain into the aggregate input when it
+    matches (relational/fuse.py): the join runs as a lookup only,
+    predicates fold into the validity mask the kernel sees as its guard,
+    and only the ``needed`` columns materialize.  Anything unmatched
+    falls back to per-node execution — identical results either way
+    (the fusion parity gates pin this)."""
+    from . import fuse
+    t = fuse.fused_child_table(child, catalog, env, tuple(needed), _exec)
+    if t is None:
+        t = _exec(child, catalog, env)
+    return t
+
+
+def _probe_slot_mapping(res, keys: tuple[str, ...],
+                        max_groups) -> dict | None:
+    """Turn a fused chain's join-probe outputs into a keyslot slot table
+    for the downstream GroupAgg — the "probe results feed the kernel"
+    leg of whole-plan fusion.
+
+    When the aggregate groups by exactly the join's left key (inner
+    join), the probe already assigned every valid row a consistent
+    segment id: ``ridx`` — equal keys hit the same build slot, distinct
+    keys cannot share one (slot ownership is verified on exact canonical
+    key words).  Providing ``(seg, owner, occupied, overflowed=0)`` via
+    keyslot.provide_slots lets _group_agg's sort-free branch skip the
+    whole slot build/claim/verify loop — the aggregation kernel launches
+    straight off the probe outputs, with the chain's guard mask as row
+    validity.  Segment ids are right-table row numbers here (not
+    claim-densified), so the bound must cover the right capacity;
+    ``owner`` holds the smallest matching LEFT row per segment, which is
+    what sortfree_result gathers the representative key values from.
+
+    Returns None — plain slotting proceeds — for multi-key or non-inner
+    chains, keys that do not resolve to the left join key, an undeclared
+    bound, or a bound smaller than the right table."""
+    chain = res.chain
+    if chain.join.how != "inner" or len(keys) != 1:
+        return None
+    try:
+        if chain.resolve(keys[0]) != chain.join.left_key:
+            return None
+    except KeyError:
+        return None
+    from .group_bound import resolve_group_bound
+    t = res.table
+    declared = max_groups if max_groups is not None else t.group_bound
+    _, bound = resolve_group_bound(declared, t.capacity)
+    if bound is None or res.right_capacity > bound:
+        return None
+    cap = t.capacity
+    tv = t.mask()
+    seg = jnp.where(tv, res.ridx, bound).astype(jnp.int32)
+    rows = jnp.arange(cap, dtype=jnp.int32)
+    owner = jnp.full((bound,), cap, jnp.int32).at[seg].min(
+        jnp.where(tv, rows, cap), mode="drop")
+    occupied = owner < cap
+    return {(tuple(keys), bound): (seg, owner, occupied, jnp.int32(0))}
+
+
 # ---------------------------------------------------------------------------
 # Join
 # ---------------------------------------------------------------------------
 
 
-def _gather_join(lt: Table, rt: Table, lkey: str, rkey: str, how: str) -> Table:
-    """Gather join against a unique-keyed right side.
+def join_hash_enabled() -> bool:
+    """Kill switch for the sort-free keyslot hash join (default: on).
+    ``REPRO_JOIN_HASH=off`` restores the legacy stable-argsort +
+    searchsorted lookup."""
+    return os.environ.get("REPRO_JOIN_HASH") != "off"
 
-    Implementation: sort right by key (invalid rows to +inf), binary-search
-    each left key (searchsorted), verify equality + right validity.
+
+def _common_key_cast(lk: jax.Array, rk: jax.Array):
+    """Harmonize the two key columns onto one exact comparison dtype.
+
+    Deliberately *numpy's* promotion lattice: ``np.promote_types(int32,
+    float32)`` is float64 (exact for every int32), where JAX's own
+    lattice would answer float32 and silently round keys above 2^24 —
+    the historical ``lk.astype(rk.dtype)`` exactness bug.  Limitation:
+    64-bit promotions need x64 enabled to take effect (JAX downgrades
+    the cast otherwise), and int64 keys beyond 2^53 promoted against a
+    float side are inexact in any float dtype.
     """
-    rk = rt.columns[rkey]
-    rvalid = rt.mask()
+    if lk.dtype == rk.dtype:
+        return lk, rk
+    d = jnp.dtype(np.promote_types(lk.dtype, rk.dtype))
+    return lk.astype(d), rk.astype(d)
+
+
+def _sorted_lookup(lk: jax.Array, rk: jax.Array, rvalid: jax.Array,
+                   ) -> tuple[jax.Array, jax.Array]:
+    """Legacy lookup: sort right by key (invalid rows to +inf),
+    binary-search each left key, verify equality + right validity."""
     rk_sortkey = _key_for_search(rk, rvalid)
     # stable, explicitly: searchsorted lands on the LEFTMOST equal sorted
     # key, so with a stable order a (contract-violating) duplicate right
@@ -117,24 +232,61 @@ def _gather_join(lt: Table, rt: Table, lkey: str, rkey: str, how: str) -> Table:
     # unstable sort happened to place first
     order = jnp.argsort(rk_sortkey, stable=True)
     rk_sorted = jnp.take(rk_sortkey, order)
-
-    lk = lt.columns[lkey]
-    lk_cast = lk.astype(rk_sortkey.dtype) if lk.dtype != rk_sortkey.dtype else lk
-    pos = jnp.searchsorted(rk_sorted, lk_cast)
+    pos = jnp.searchsorted(rk_sorted, lk)
     pos = jnp.clip(pos, 0, rk.shape[0] - 1)
     ridx = jnp.take(order, pos)
     found = (jnp.take(rk, ridx) == lk) & jnp.take(rvalid, ridx)
+    return ridx, found
 
+
+def _hash_lookup(lk: jax.Array, rk: jax.Array, rvalid: jax.Array,
+                 ) -> tuple[jax.Array, jax.Array]:
+    """Sort-free lookup on the keyslot hash table: build on the right
+    keys' canonical words, probe one walk per left row.  No row-sized
+    sort or gather — the probe loop's per-round gathers are a handful of
+    static equations regardless of row count."""
+    from . import keyslot
+    ridx, found = keyslot.build_probe(
+        keyslot.key_words_for([rk]), rvalid, keyslot.key_words_for([lk]))
+    if jnp.issubdtype(lk.dtype, jnp.floating):
+        # canonical words equate NaN per bit pattern (grouping
+        # semantics); join equality is VALUE equality, where NaN never
+        # matches — mask it back out, mirroring the sorted route's
+        # ``rk == lk`` verification
+        found = found & (lk == lk)
+    return ridx, found
+
+
+def _join_lookup(lt: Table, rt: Table, lkey: str, rkey: str,
+                 ) -> tuple[jax.Array, jax.Array]:
+    """Resolve each left row against the unique-keyed right side.
+
+    Returns ``(ridx, found)``: ``ridx`` (capacity,) int32 right-row
+    indices (clip-safe sentinel where unmatched), ``found`` (capacity,)
+    bool — left rows with a valid right match.  This is the whole join
+    *lookup*; materializing joined columns (``_apply_join``) is separate
+    so the fusion pass can consume the lookup directly.
+    """
+    lk, rk = _common_key_cast(lt.columns[lkey], rt.columns[rkey])
+    if join_hash_enabled():
+        return _hash_lookup(lk, rk, rt.mask())
+    return _sorted_lookup(lk, rk, rt.mask())
+
+
+def _apply_join(lt: Table, rt: Table, rkey: str, how: str,
+                ridx: jax.Array, found: jax.Array) -> Table:
+    """Materialize the joined Table from a ``_join_lookup`` result."""
     if how == "semi":
         return lt.filter(found)
     if how == "anti":
         return lt.filter(~found)
 
+    gidx = jnp.clip(ridx, 0, rt.capacity - 1)
     cols = dict(lt.columns)
     for name, v in rt.columns.items():
         if name == rkey or name in cols:
             continue
-        cols[name] = jnp.take(v, ridx, axis=0, mode="clip")
+        cols[name] = jnp.take(v, gidx, axis=0, mode="clip")
     if how == "inner":
         valid = lt.mask() & found
     elif how == "left":
@@ -153,6 +305,14 @@ def _gather_join(lt: Table, rt: Table, lkey: str, rkey: str, how: str) -> Table:
     # arbitrarily many groups, so the declaration must not survive
     # (semi/anti joins returned earlier: they keep the left columns only)
     return Table(cols, valid)
+
+
+def _gather_join(lt: Table, rt: Table, lkey: str, rkey: str, how: str) -> Table:
+    """Join against a unique-keyed right side: hash lookup on the keyslot
+    table by default (``_hash_lookup``), the legacy argsort +
+    searchsorted route under ``REPRO_JOIN_HASH=off``."""
+    ridx, found = _join_lookup(lt, rt, lkey, rkey)
+    return _apply_join(lt, rt, rkey, how, ridx, found)
 
 
 def _bmask(m: jax.Array, v: jax.Array) -> jax.Array:

@@ -55,7 +55,7 @@ import math
 import os
 import threading
 from contextlib import contextmanager
-from typing import Iterable, Mapping
+from typing import Iterable, Mapping, Optional
 
 import jax
 import jax.numpy as jnp
@@ -66,6 +66,7 @@ from .group_bound import GroupBoundOverflow
 
 __all__ = [
     "canonical_key_words", "key_words_for", "slot_ids_from_words",
+    "build_probe",
     "slot_segment_ids", "check_slot_overflow", "overflow_extended",
     "sortfree_enabled", "sortfree_result", "provide_slots",
     "provided_slots", "slot_build_count", "distinct_count_sketch",
@@ -285,6 +286,117 @@ def slot_ids_from_words(words: jax.Array, valid: jax.Array,
     occupied = jnp.arange(bucket) < jnp.minimum(dense[-1] + 1, bucket)
     overflowed = jnp.sum((valid & (seg == bucket)).astype(jnp.int32))
     return seg, owner, occupied, overflowed
+
+
+#: build-side probe-table expansion for ``build_probe``: the table holds
+#: the next power of two ≥ 4 × build rows, bounding the load factor at
+#: 1/4 — and since slots ≥ rows ≥ distinct keys, every build key is
+#: guaranteed a slot (no overflow state, unlike the bucket-bounded
+#: ``slot_ids_from_words``)
+_JOIN_EXPAND = 4
+
+
+def _probe_table_size(n_build: int) -> int:
+    need = max(8, _JOIN_EXPAND * max(1, n_build))
+    return 1 << (need - 1).bit_length()
+
+
+def build_probe(build_words: jax.Array, build_valid: jax.Array,
+                probe_words: jax.Array,
+                probe_valid: Optional[jax.Array] = None,
+                ) -> tuple[jax.Array, jax.Array]:
+    """Hash-join lookup on canonical key words: build an open-addressing
+    table over the build-side rows, then resolve each probe row to the
+    matching build row with one lockstep probe walk.  Returns
+    ``(ridx, found)``:
+
+    * ``ridx``  (Np,) int32 — build-row index whose key words equal the
+      probe row's (``Nb``, the build row count, where no match exists —
+      a clip-safe sentinel);
+    * ``found`` (Np,) bool  — probe rows with a valid-build-row match.
+
+    The build loop is ``slot_ids_from_words``'s claim/verify round
+    (scatter-min claims, full key-word equality verification) minus the
+    densifying renumber — the raw probe table IS the product here.
+    Duplicate build keys probe in lockstep (equal words ⇒ equal hash), so
+    the scatter-min deterministically awards their shared slot to the
+    *smallest* valid build-row index — exactly the stable pick the
+    sorted-route join made via ``argsort(stable=True)`` + leftmost
+    ``searchsorted``.  The probe walk stops at key equality or at the
+    first *empty* slot: any slot a placed build key stepped over was
+    contended that round (the key's own rows were active claimants), so
+    it is occupied at build end — first-empty is a sound miss proof.
+    Probing terminates within ``M`` rounds unconditionally (triangular
+    increments are exhaustive on a power-of-two table); the ≤ 1/4 load
+    bound keeps real walks to a couple of rounds.
+
+    Equality is bitwise on canonical words (NaN matches NaN per bit
+    pattern, −0.0 matches +0.0): *join* routes that need SQL value
+    equality mask NaN keys out of ``found`` at the call site.
+    """
+    build_words = jnp.asarray(build_words)
+    probe_words = jnp.asarray(probe_words)
+    nb = build_words.shape[0]
+    npr = probe_words.shape[0]
+    pvalid = (jnp.ones((npr,), bool) if probe_valid is None
+              else jnp.asarray(probe_valid, bool))
+    if nb == 0:
+        return (jnp.zeros((npr,), jnp.int32),
+                jnp.zeros((npr,), bool))
+    m = _probe_table_size(nb)
+    mask = jnp.uint32(m - 1)
+    bvalid = jnp.asarray(build_valid, bool)
+    hb = _hash_words(build_words)
+    idx = jnp.arange(nb, dtype=jnp.int32)
+
+    def bcond(st):
+        _tbl, active, rnd = st
+        return (rnd < m) & jnp.any(active)
+
+    def bbody(st):
+        tbl, active, rnd = st
+        p = rnd.astype(jnp.uint32)
+        cand = ((hb + (p * (p + 1)) // 2) & mask).astype(jnp.int32)
+        claim = jnp.full((m,), nb, jnp.int32).at[cand].min(
+            jnp.where(active, idx, nb), mode="promise_in_bounds")
+        tbl = jnp.where(tbl == nb, claim, tbl)
+        own = jnp.take(tbl, cand, mode="clip")
+        ow = jnp.take(build_words, jnp.clip(own, 0, nb - 1), axis=0,
+                      mode="clip")
+        eq = (own < nb) & jnp.all(ow == build_words, axis=1)
+        active = active & ~eq
+        return tbl, active, rnd + 1
+
+    tbl, _active, _rnd = lax.while_loop(
+        bcond, bbody,
+        (jnp.full((m,), nb, jnp.int32), bvalid, jnp.int32(0)))
+
+    hp = _hash_words(probe_words)
+
+    def pcond(st):
+        _ridx, _found, active, rnd = st
+        return (rnd < m) & jnp.any(active)
+
+    def pbody(st):
+        ridx, found, active, rnd = st
+        p = rnd.astype(jnp.uint32)
+        cand = ((hp + (p * (p + 1)) // 2) & mask).astype(jnp.int32)
+        own = jnp.take(tbl, cand, mode="clip")
+        empty = own >= nb
+        ow = jnp.take(build_words, jnp.clip(own, 0, nb - 1), axis=0,
+                      mode="clip")
+        eq = ~empty & jnp.all(ow == probe_words, axis=1)
+        hit = active & eq
+        ridx = jnp.where(hit, own, ridx)
+        found = found | hit
+        active = active & ~eq & ~empty
+        return ridx, found, active, rnd + 1
+
+    ridx, found, _a, _r = lax.while_loop(
+        pcond, pbody,
+        (jnp.full((npr,), nb, jnp.int32), jnp.zeros((npr,), bool),
+         pvalid, jnp.int32(0)))
+    return ridx, found
 
 
 # ---------------------------------------------------------------------------

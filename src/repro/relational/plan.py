@@ -11,6 +11,16 @@ references name columns of the child; ``Var`` references enclosing program
 variables (correlation parameters), bound at execution time from the scalar
 environment — mirroring how the paper's cursor query references UDF
 parameters (e.g. ``@pkey``).
+
+Plans execute per-node (engine._exec) EXCEPT one pattern the engine
+rewrites before execution: a ``Filter*/Project* → Join(inner|left)``
+chain feeding a grouped aggregate fuses into a single aggregate input
+(relational/fuse.py) — the Join runs as a hash lookup only, Filter
+predicates become the kernel's guard mask, pure-Col Projects fold into
+column selection, and (when the aggregate groups by the join key) the
+probe output itself serves as the segment-id tensor.  Nodes stay
+logical either way; the fusion is an execution-time pattern match, not
+a plan transform, so plan trees remain introspectable by Aggify.
 """
 from __future__ import annotations
 
@@ -105,9 +115,12 @@ class Project(Plan):
 
 @dataclass(frozen=True)
 class Join(Plan):
-    """Gather join: ``right`` must be unique on ``right_key`` (PK).  Each left
+    """Lookup join: ``right`` must be unique on ``right_key`` (PK).  Each left
     row picks up the matching right row (inner: unmatched dropped; left:
-    unmatched keep nulls=0).  ``how`` in {'inner','left','semi','anti'}."""
+    unmatched keep nulls=0).  ``how`` in {'inner','left','semi','anti'}.
+    Lowered as a keyslot hash build/probe (engine._hash_lookup; the
+    legacy stable-argsort + searchsorted lookup survives behind
+    ``REPRO_JOIN_HASH=off``)."""
     left: Plan
     right: Plan
     left_key: str

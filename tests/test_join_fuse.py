@@ -1,0 +1,434 @@
+"""Join-semantics battery under both lookup routes (keyslot hash vs
+legacy argsort) + whole-plan fusion parity gates.
+
+Every case runs bit-for-bit three ways where applicable: hash route,
+legacy route (``REPRO_JOIN_HASH=off``), numpy oracle — and the fused
+chain (``relational/fuse.py``) against the per-node materialized plan
+(``REPRO_PLAN_FUSE=off``) on the jnp AND interpret kernel backends.
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.loop_ir import BinOp, Col, Const
+from repro.relational import (Filter, GroupAgg, Join, Limit, Project,
+                              Scan, Table, execute)
+
+HOWS = ("inner", "left", "semi", "anti")
+
+
+# --------------------------------------------------------------------------
+# oracle
+# --------------------------------------------------------------------------
+
+
+def _oracle_join(lk, lvalid, rk, rvalid, rcols, how):
+    """Row-by-row numpy reference: each valid left row matched against
+    the smallest valid right row with an equal key (value equality — NaN
+    never matches)."""
+    n = len(lk)
+    out_valid = np.zeros(n, bool)
+    gathered = {c: np.zeros(n, v.dtype) for c, v in rcols.items()}
+    for i in range(n):
+        if not lvalid[i]:
+            continue
+        match = None
+        for j in range(len(rk)):
+            if rvalid[j] and rk[j] == lk[i]:
+                match = j
+                break
+        if how == "semi":
+            out_valid[i] = match is not None
+        elif how == "anti":
+            out_valid[i] = match is None
+        elif how == "inner":
+            out_valid[i] = match is not None
+            if match is not None:
+                for c in gathered:
+                    gathered[c][i] = rcols[c][match]
+        else:                                  # left
+            out_valid[i] = True
+            if match is not None:
+                for c in gathered:
+                    gathered[c][i] = rcols[c][match]
+    return out_valid, gathered
+
+
+def _routes(plan, cat, monkeypatch):
+    """Execute under the hash route and the legacy route."""
+    outs = []
+    for route in ("on", "off"):
+        monkeypatch.setenv("REPRO_JOIN_HASH", route)
+        outs.append(execute(plan, cat))
+    monkeypatch.delenv("REPRO_JOIN_HASH")
+    return outs
+
+
+def _rows(t):
+    cols = t.to_numpy()
+    names = sorted(cols)
+    return sorted(zip(*(cols[c] for c in names)))
+
+
+# --------------------------------------------------------------------------
+# both lookup routes vs the oracle, all hows
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("how", HOWS)
+@pytest.mark.parametrize("kdtype", [np.int32, np.float32])
+def test_join_routes_match_oracle(how, kdtype, monkeypatch):
+    """Duplicate right keys (stable smallest-row pick), invalid rows on
+    both sides, unmatched left rows — hash vs legacy vs numpy oracle."""
+    rng = np.random.default_rng(3)
+    n, m = 200, 40
+    lk = rng.integers(0, 30, n).astype(kdtype)
+    rk = rng.integers(0, 30, m).astype(kdtype)   # duplicates guaranteed
+    rv = (rng.normal(size=m) * 10).astype(np.float32)
+    lvalid = rng.random(n) > 0.15
+    rvalid = rng.random(m) > 0.25
+    cat = {
+        "L": Table({"k": jnp.asarray(lk),
+                    "lv": jnp.arange(n, dtype=jnp.int32)},
+                   jnp.asarray(lvalid)),
+        "R": Table({"k": jnp.asarray(rk), "w": jnp.asarray(rv)},
+                   jnp.asarray(rvalid)),
+    }
+    plan = Join(Scan("L", ("k", "lv")), Scan("R", ("k", "w")),
+                "k", "k", how)
+    hashed, legacy = _routes(plan, cat, monkeypatch)
+    assert _rows(hashed) == _rows(legacy)
+
+    want_valid, want_cols = _oracle_join(lk, lvalid, rk, rvalid,
+                                         {"w": rv}, how)
+    got = hashed.to_numpy()
+    keep = want_valid
+    assert np.array_equal(got["lv"], np.arange(n, dtype=np.int32)[keep])
+    if how in ("inner", "left"):
+        assert np.array_equal(got["w"], want_cols["w"][keep])
+
+
+def test_join_duplicate_right_keys_stable_smallest_row(monkeypatch):
+    """Contract-violating duplicate right keys: both routes pick the
+    SMALLEST original right row deterministically."""
+    lt = Table.from_columns(x=np.array([7, 8], np.int32))
+    rt = Table.from_columns(
+        x=np.array([8, 7, 7, 8, 7], np.int32),
+        y=np.array([100, 101, 102, 103, 104], np.int32))
+    plan = Join(Scan("L", ("x",)), Scan("R", ("x", "y")), "x", "x")
+    hashed, legacy = _routes(plan, {"L": lt, "R": rt}, monkeypatch)
+    assert list(hashed.to_numpy()["y"]) == [101, 100]
+    assert list(legacy.to_numpy()["y"]) == [101, 100]
+
+
+def test_join_float_nan_and_negative_zero(monkeypatch):
+    """Join equality is VALUE equality: NaN keys never match (either
+    side), while -0.0 matches +0.0 — on both routes."""
+    nan = np.float32(np.nan)
+    lt = Table.from_columns(
+        k=np.array([nan, -0.0, 1.5, nan], np.float32),
+        row=np.arange(4, dtype=np.int32))
+    rt = Table.from_columns(
+        k=np.array([0.0, 1.5, nan], np.float32),
+        w=np.array([10, 20, 30], np.int32))
+    plan = Join(Scan("L", ("k", "row")), Scan("R", ("k", "w")), "k", "k")
+    hashed, legacy = _routes(plan, {"L": lt, "R": rt}, monkeypatch)
+    for out in (hashed, legacy):
+        got = out.to_numpy()
+        assert list(got["row"]) == [1, 2]       # -0.0 and 1.5 only
+        assert list(got["w"]) == [10, 20]
+
+
+def test_join_semi_anti_preserve_group_bound(monkeypatch):
+    """semi/anti keep the left rows only — the declared bound survives;
+    inner/left mint right columns — it must not."""
+    lt = Table.from_columns(
+        k=np.array([1, 2, 9], np.int32),
+        v=np.ones(3, np.float32)).declare_group_bound(4)
+    rt = Table.from_columns(k=np.array([1, 2], np.int32),
+                            w=np.zeros(2, np.float32))
+    cat = {"L": lt, "R": rt}
+    for route in ("on", "off"):
+        monkeypatch.setenv("REPRO_JOIN_HASH", route)
+        for how, keeps in (("semi", True), ("anti", True),
+                           ("inner", False), ("left", False)):
+            out = execute(Join(Scan("L", ("k", "v")), Scan("R", ("k", "w")),
+                               "k", "k", how), cat)
+            want = lt.group_bound if keeps else None
+            assert out.group_bound == want, (route, how)
+
+
+def test_join_wide_keys_exact_x64(monkeypatch):
+    """Keys above 2^24 stay exact on both routes (the historical
+    ``lk.astype(rk.dtype)`` bug rounded them through float32)."""
+    prev = jax.config.jax_enable_x64
+    try:
+        jax.config.update("jax_enable_x64", True)
+        # int64 keys beyond 2^32: exact equality, both routes
+        big = (1 << 40) + 7
+        lt = Table.from_columns(k=np.array([big, 5], np.int64),
+                                row=np.arange(2, dtype=np.int32))
+        rt = Table.from_columns(k=np.array([big, 11], np.int64),
+                                w=np.array([1, 2], np.int32))
+        plan = Join(Scan("L", ("k", "row")), Scan("R", ("k", "w")),
+                    "k", "k")
+        hashed, legacy = _routes(plan, {"L": lt, "R": rt}, monkeypatch)
+        for out in (hashed, legacy):
+            got = out.to_numpy()
+            assert list(got["row"]) == [0] and list(got["w"]) == [1]
+
+        # f64 2^24+1 against f32 neighbours: promotion must go UP to
+        # f64 (np lattice) — casting down to f32 would round 2^24+1
+        # onto 2^24 and fabricate a match
+        lt2 = Table.from_columns(k=np.array([(1 << 24) + 1], np.float64))
+        rt2 = Table.from_columns(
+            k=np.array([1 << 24, (1 << 24) + 2], np.float32),
+            w=np.array([1, 2], np.int32))
+        plan2 = Join(Scan("L", ("k",)), Scan("R", ("k", "w")), "k", "k")
+        h2, l2 = _routes(plan2, {"L": lt2, "R": rt2}, monkeypatch)
+        assert len(h2.to_numpy()["k"]) == 0
+        assert len(l2.to_numpy()["k"]) == 0
+    finally:
+        jax.config.update("jax_enable_x64", prev)
+
+
+# --------------------------------------------------------------------------
+# Limit: first-n valid rows, no compaction
+# --------------------------------------------------------------------------
+
+
+def test_limit_first_n_valid_rows_no_compaction():
+    t = Table({"v": jnp.arange(8, dtype=jnp.int32)},
+              jnp.asarray(np.array([0, 1, 1, 0, 1, 1, 1, 0], bool)))
+    out = execute(Limit(Scan("T", ("v",)), 3), {"T": t})
+    assert list(out.to_numpy()["v"]) == [1, 2, 4]
+    assert out.capacity == t.capacity           # mask math, not compaction
+
+
+def test_limit_and_join_census_tier1():
+    """Tier-1 face of benchmarks/join_spy: the fused filter-join-agg
+    lowering traces to ZERO row-sized sorts and no more row-sized
+    gathers than the materialized plan (which keeps its sort — detector
+    sanity), and the Limit lowering is compaction-free."""
+    from benchmarks.join_spy import join_census, limit_census
+    c = join_census(0.0005, "jnp")
+    assert c["fused_sorts"] == 0, c
+    assert c["materialized_sorts"] >= 1, c
+    assert c["fused_gathers"] <= c["materialized_gathers"], c
+    lc = limit_census(4096)
+    assert lc["limit_sorts"] == 0 and lc["limit_gathers"] == 0, lc
+    assert lc["compress_sorts"] >= 1 and lc["compress_gathers"] >= 1, lc
+
+
+# --------------------------------------------------------------------------
+# fusion pass: pattern match + parity
+# --------------------------------------------------------------------------
+
+
+def _chain_cat(seed=0, n=3000, m=64):
+    rng = np.random.default_rng(seed)
+    lk = rng.integers(0, m, n).astype(np.int32)
+    rk = np.arange(m, dtype=np.int32)
+    rng.shuffle(rk)
+    return {
+        "L": Table({"lk": jnp.asarray(lk),
+                    "lv": jnp.asarray(rng.normal(size=n)
+                                      .astype(np.float32))},
+                   jnp.asarray(rng.random(n) > 0.1)),
+        "R": Table({"rk": jnp.asarray(rk),
+                    "rv": jnp.asarray(rng.normal(size=m)
+                                      .astype(np.float32)),
+                    "flag": jnp.asarray(rng.random(m) > 0.3)},
+                   jnp.ones(m, bool)),
+    }, m
+
+
+def _join(how="inner"):
+    return Join(Scan("L", ("lk", "lv")), Scan("R", ("rk", "rv", "flag")),
+                "lk", "rk", how)
+
+
+def test_match_chain_patterns():
+    from repro.relational.fuse import match_chain
+    pred = Col("lv") > Const(0.0)
+    # Filter*/Project* down to an equi inner/left join: matches
+    c = match_chain(Filter(Filter(_join(), pred), Col("flag")))
+    assert c is not None and len(c.preds) == 2
+    sel = Project(_join(), (("a", Col("lk")), ("b", Col("rv"))))
+    c2 = match_chain(Filter(sel, Col("b") > Const(0.0)))
+    assert c2 is not None and c2.resolve("a") == "lk"
+    assert c2.preds[0].lhs.name == "rv"         # pred renamed b -> rv
+    # bails: computed projection, semi join, bare scan, unknown column
+    assert match_chain(Project(_join(), (("a", Col("lv") * 2.0),))) is None
+    assert match_chain(Filter(_join("semi"), pred)) is None
+    assert match_chain(Scan("L", ("lk",))) is None
+    assert match_chain(
+        Filter(Project(_join(), (("a", Col("lk")),)), pred)) is None
+
+
+def _group_result(t, key):
+    """Group rows keyed and sorted by ``key`` (slot order differs
+    between routes) as {col: array} ready for tolerant comparison."""
+    cols = t.to_numpy()
+    order = np.argsort(cols[key], kind="stable")
+    return {c: np.asarray(v)[order] for c, v in cols.items()}
+
+
+def _assert_groups_match(a, b, context=""):
+    assert set(a) == set(b), context
+    for c in a:
+        np.testing.assert_allclose(a[c], b[c], rtol=1e-5, atol=1e-5,
+                                   err_msg=f"{context} col={c}")
+
+
+@pytest.mark.parametrize("backend", ["jnp", "interpret"])
+def test_fused_chain_parity(backend, monkeypatch):
+    """Fused Filter→Join→GroupAgg vs the per-node materialized plan,
+    identical group results — grouping by the join key (the seg-feed
+    path: probe output = segment ids) AND by a gathered right column
+    (plain fused path), on both kernel backends."""
+    if backend == "interpret":
+        cat, m = _chain_cat(n=400, m=16)
+    else:
+        cat, m = _chain_cat()
+    monkeypatch.setenv("REPRO_SEGAGG_BACKEND", backend)
+    monkeypatch.setenv("REPRO_GROUPAGG_FUSED", backend)
+    pred = BinOp("and", Col("lv") > Const(-0.5), Col("flag"))
+    for keys, mg in ((("lk",), m), (("rv",), m)):
+        plan = GroupAgg(Filter(_join(), pred), keys,
+                        (("s", "sum", "lv"), ("c", "count", None),
+                         ("mx", "max", "lv")), max_groups=mg)
+        monkeypatch.setenv("REPRO_PLAN_FUSE", "on")
+        fused = _group_result(execute(plan, cat), keys[0])
+        monkeypatch.setenv("REPRO_PLAN_FUSE", "off")
+        unfused = _group_result(execute(plan, cat), keys[0])
+        _assert_groups_match(fused, unfused, f"{backend} {keys}")
+
+
+def test_fused_left_join_chain_parity(monkeypatch):
+    cat, m = _chain_cat(seed=5)
+    plan = GroupAgg(Filter(_join("left"), Col("lv") > Const(-1.0)),
+                    ("lk",), (("s", "sum", "rv"), ("c", "count", None)),
+                    max_groups=m)
+    monkeypatch.setenv("REPRO_PLAN_FUSE", "on")
+    fused = _group_result(execute(plan, cat), "lk")
+    monkeypatch.setenv("REPRO_PLAN_FUSE", "off")
+    _assert_groups_match(fused, _group_result(execute(plan, cat), "lk"),
+                         "left-join chain")
+
+
+def test_fused_project_rename_chain_parity(monkeypatch):
+    """Project renames fold through: pred + agg columns resolve through
+    the name mapping."""
+    cat, m = _chain_cat(seed=7)
+    sel = Project(_join(), (("key", Col("lk")), ("val", Col("lv")),
+                            ("f", Col("flag"))))
+    plan = GroupAgg(Filter(sel, Col("f")), ("key",),
+                    (("s", "sum", "val"),), max_groups=m)
+    monkeypatch.setenv("REPRO_PLAN_FUSE", "on")
+    fused = _group_result(execute(plan, cat), "key")
+    monkeypatch.setenv("REPRO_PLAN_FUSE", "off")
+    _assert_groups_match(fused, _group_result(execute(plan, cat), "key"),
+                         "project-rename chain")
+
+
+def test_seg_feed_skips_slot_build(monkeypatch):
+    """Grouping by the join key feeds the probe output straight into the
+    kernel: ZERO keyslot slot builds on the fused route (the probe IS
+    the slot assignment), at least one when materialized."""
+    from repro.relational import keyslot
+    cat, m = _chain_cat(seed=2)
+    plan = GroupAgg(_join(), ("lk",), (("s", "sum", "lv"),), max_groups=m)
+    monkeypatch.setenv("REPRO_PLAN_FUSE", "on")
+    b0 = keyslot.slot_build_count()
+    execute(plan, cat).to_numpy()
+    assert keyslot.slot_build_count() == b0     # probe fed the kernel
+    monkeypatch.setenv("REPRO_PLAN_FUSE", "off")
+    execute(plan, cat).to_numpy()
+    assert keyslot.slot_build_count() > b0
+
+
+def test_fused_chain_grouped_agg_call_parity(monkeypatch):
+    """The core/executors dispatch (grouped AggCall) consumes the fused
+    chain too: parity with the materialized route."""
+    from repro.core.aggify import build_aggregate
+    from repro.core.executors import execute_agg_call
+    from tests.helpers import fig1_catalog, fig1_program
+
+    prog = fig1_program()
+    agg = build_aggregate(prog)
+    from repro.core.loop_ir import Var
+    q = Filter(Join(Scan("PARTSUPP",
+                         ("ps_partkey", "ps_suppkey", "ps_supplycost")),
+                    Scan("SUPPLIER", ("s_suppkey", "s_name")),
+                    "ps_suppkey", "s_suppkey", "inner"),
+               Col("ps_supplycost") < Const(1e6))
+    from repro.relational.plan import AggCall
+    call = AggCall(child=q, aggregate=agg,
+                   param_binding=(("pCost", Col("ps_supplycost")),
+                                  ("sName", Col("s_name")),
+                                  ("minCost", Var("minCost")),
+                                  ("lb", Var("lb"))),
+                   group_keys=("ps_partkey",))
+    env = {"minCost": jnp.float32(100000.0), "lb": jnp.float32(0.0)}
+    outs = {}
+    for route in ("on", "off"):
+        monkeypatch.setenv("REPRO_PLAN_FUSE", route)
+        out = execute_agg_call(call, fig1_catalog(), env,
+                               var_dtypes=prog.var_dtypes).to_numpy()
+        outs[route] = dict(zip(out["ps_partkey"], out["suppName"]))
+    assert outs["on"] == outs["off"] == {0: 101, 1: 101}
+
+
+# --------------------------------------------------------------------------
+# sharded: subprocess 8-way mesh, fused chain parity
+# --------------------------------------------------------------------------
+
+
+def test_sharded_fused_chain_in_subprocess_8way_mesh():
+    code = """
+import os, numpy as np, jax, jax.numpy as jnp
+os.environ["REPRO_GROUPAGG_FUSED"] = "jnp"
+assert jax.device_count() == 8, jax.device_count()
+from jax.sharding import Mesh
+from repro.core.loop_ir import Col, Const
+from repro.relational import Filter, GroupAgg, Join, Scan, Table, execute
+
+mesh = Mesh(np.asarray(jax.devices()).reshape(8), ("data",))
+rng = np.random.default_rng(17)
+n, m = 4096, 60
+lt = Table.from_columns(
+    lk=rng.integers(0, m, n).astype(np.int32),
+    lv=rng.integers(-40, 40, n).astype(np.float32))
+rt = Table.from_columns(
+    rk=np.arange(m, dtype=np.int32),
+    rv=rng.integers(0, 9, m).astype(np.float32))
+plan = GroupAgg(
+    Filter(Join(Scan("L", ("lk", "lv")), Scan("R", ("rk", "rv")),
+                "lk", "rk"), Col("rv") > Const(2.0)),
+    ("lk",), (("s", "sum", "lv"), ("c", "count", None)), max_groups=m)
+
+os.environ["REPRO_PLAN_FUSE"] = "off"
+want = execute(plan, {"L": lt, "R": rt}).to_numpy()
+os.environ["REPRO_PLAN_FUSE"] = "on"
+got = execute(plan, {"L": lt.shard_rows(mesh, "data"), "R": rt}).to_numpy()
+ws, gs = np.argsort(want["lk"]), np.argsort(got["lk"])
+for c in want:
+    assert np.array_equal(np.asarray(want[c])[ws], np.asarray(got[c])[gs]), c
+print("OK")
+"""
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env = {**os.environ,
+           "JAX_PLATFORMS": "cpu",
+           "XLA_FLAGS": (os.environ.get("XLA_FLAGS", "") +
+                         " --xla_force_host_platform_device_count=8"),
+           "PYTHONPATH": os.path.abspath(src) + os.pathsep +
+                         os.environ.get("PYTHONPATH", "")}
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, env=env)
+    assert r.returncode == 0 and "OK" in r.stdout, r.stderr
