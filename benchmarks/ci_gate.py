@@ -32,6 +32,13 @@ Compares a freshly produced ``bench_group_agg.json`` (``benchmarks/run.py
   p50, the slot table must have been built exactly once for the whole
   bench stream, and the trace count must stay within the shape-bucket
   budget the bench declares (no retrace storm);
+* the incremental-ingest acceptance rows (``ingest_*``, when present in
+  the fresh artifact): the resident fold+snapshot p50
+  (``ingest_incremental_p50``) must beat the append+full-refresh p50
+  (``ingest_recompute_p50``) *within the same fresh run*, and the
+  ``ingest_counters`` row must account one fold per micro-batch with no
+  per-batch slot rebuilds (extends only — a rebuild per batch means the
+  resident slot table is not actually being reused);
 * a delta table of every row is printed so the perf trajectory is
   readable from the CI log.
 
@@ -222,6 +229,53 @@ def check_serving(fresh: dict[str, dict]) -> list[str]:
     return errors
 
 
+#: incremental-ingest acceptance: resident folds must beat the
+#: append+full-refresh model within the same fresh artifact
+INGEST_ROWS = ("ingest_recompute_p50", "ingest_incremental_p50",
+               "ingest_counters")
+
+
+def check_ingest(fresh: dict[str, dict]) -> list[str]:
+    if not any(name in fresh for name in INGEST_ROWS):
+        return []                    # bench not in this run's --only set
+    missing = [name for name in INGEST_ROWS if name not in fresh]
+    if missing:
+        return [f"ingest: acceptance rows missing from fresh run: "
+                f"{', '.join(missing)}"]
+    errors = []
+    re_us = float(fresh["ingest_recompute_p50"].get("us_per_call", 0.0))
+    in_us = float(fresh["ingest_incremental_p50"].get("us_per_call", 0.0))
+    if in_us >= re_us:
+        errors.append(f"ingest_incremental_p50: {in_us:.1f}us does not "
+                      f"beat ingest_recompute_p50: {re_us:.1f}us")
+    else:
+        print(f"ingest_incremental_p50: {in_us:.1f}us beats recompute "
+              f"{re_us:.1f}us ({re_us / max(in_us, 1e-9):.2f}x)")
+    derived = fresh["ingest_counters"].get("derived", "")
+    m = re.search(r"folds=(\d+)_batches=(\d+)_appends=(\d+)_"
+                  r"slot_extends=(\d+)_slot_builds=(\d+)", derived)
+    if not m:
+        return errors + [f"ingest_counters: derived field not parseable: "
+                         f"{derived!r}"]
+    folds, batches, appends, extends, builds = map(int, m.groups())
+    if folds != batches:
+        errors.append(f"ingest_counters: folds={folds} != "
+                      f"batches={batches} (want exactly one resident "
+                      f"fold per micro-batch)")
+    if appends != batches:
+        errors.append(f"ingest_counters: appends={appends} != "
+                      f"batches={batches}")
+    if builds > 1:
+        errors.append(f"ingest_counters: slot_builds={builds} across "
+                      f"{batches} batches — the resident slot table is "
+                      f"being rebuilt instead of extended "
+                      f"(slot_extends={extends})")
+    if not errors:
+        print(f"ingest_counters: folds={folds} == batches={batches}, "
+              f"slot_builds={builds} <= 1, slot_extends={extends}")
+    return errors
+
+
 def gate(fresh: dict[str, dict], baseline: dict[str, dict],
          threshold: float) -> list[str]:
     errors = []
@@ -273,6 +327,7 @@ def main(argv=None) -> int:
     errors += check_sortfree(fresh)
     errors += check_join(fresh)
     errors += check_serving(fresh)
+    errors += check_ingest(fresh)
     if errors:
         print()
         for e in errors:
@@ -282,7 +337,7 @@ def main(argv=None) -> int:
           f"{args.threshold:.1f}x; dense-bound accounting holds; "
           "sort-free beats sorted with a sort-free lowering; the fused "
           "join chain beats the materialized plan; serving caches hold "
-          "their contract")
+          "their contract; incremental ingest beats recompute")
     return 0
 
 

@@ -14,6 +14,9 @@ Prints ``name,us_per_call,derived`` CSV rows.
   serve_agg       — aggregate-serving layer: cached vs fresh-jit p50,
                     1k-request concurrent qps, trace/slot-build counters
                     (docs/serving.md)
+  ingest          — sustained micro-batch ingest: resident incremental
+                    folding vs append+full-refresh recompute
+                    (docs/serving.md "Incremental ingest")
 """
 from __future__ import annotations
 
@@ -33,9 +36,9 @@ def main() -> None:
                          "committed BENCH_*.json baselines use this)")
     args = ap.parse_args()
 
-    from . import (app_loops, applicability, group_agg, logical_reads,
-                   roofline_bench, scalability, serve_agg, tpch_loops,
-                   workload_loops)
+    from . import (app_loops, applicability, group_agg, ingest,
+                   logical_reads, roofline_bench, scalability, serve_agg,
+                   tpch_loops, workload_loops)
 
     scale = 0.005 if args.full else args.scale
     sizes = ((100, 1_000, 10_000, 100_000, 1_000_000, 3_000_000)
@@ -57,6 +60,10 @@ def main() -> None:
         # whole-plan fusion acceptance: fused vs materialized
         # filter-join-agg chain at 100× the default loop scale factor
         "tpch_join": lambda: tpch_loops.run_join_agg(),
+        # sustained-ingest acceptance: resident O(batch) folds vs the
+        # append+O(table)-refresh model on an identical batch stream
+        "ingest": lambda: ingest.run(
+            n=200_000 if args.full else 50_000),
     }
     only = None if args.only == "all" else set(args.only.split(","))
     print("name,us_per_call,derived")

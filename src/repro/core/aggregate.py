@@ -188,6 +188,65 @@ def associative_scan(agg: Aggregate, rows: PyTree,
     return jax.vmap(agg.terminate)(prefix)
 
 
+def fold_moments(a: jax.Array, b: jax.Array, moments=None) -> jax.Array:
+    """Merge two (C, R, S) fused-moment tensors OUTSIDE ``shard_map`` —
+    the public face of the cross-shard collective algebra for callers
+    that hold both operands on one host (the serving layer's incremental
+    ingest folds each micro-batch's moments into its resident tensor with
+    exactly this).  Sum and count rows add, min/max extremize; with
+    R = 6 the index rows merge as the lexicographic (key, global_row)
+    extremum of ``launch.sharded_agg._merge_index_rows`` — each operand's
+    index row enters only where its key row attains the merged extremum,
+    reduced by min (first-attaining tie order) or max (last-attaining).
+    Both operands' index rows must already be in ONE global row numbering
+    (the caller globalizes batch-local indices before folding — the
+    serving layer uses table positions).  ``moments`` follows
+    ``kernels.segment_agg.normalize_moments`` (default: the four value
+    moments, i.e. R = 4); for R = 4 the fold is pinned bit-for-bit equal
+    to ``moment_merge_aggregate(...).merge`` by tests.  Commutative and
+    associative (f32 sum rounding aside), with the identity tensor given
+    by ``_row_fills`` — fold order across micro-batches does not change
+    which row wins an arg-extremum."""
+    from repro.kernels.segment_agg import (ARGMAX_ROW, ARGMIN_ROW, MOMENTS,
+                                           NEG_INF, POS_INF, _index_tie,
+                                           moment_rows, normalize_moments)
+    a = jnp.asarray(a, jnp.float32)
+    b = jnp.asarray(b, jnp.float32)
+    if a.shape != b.shape or a.ndim != 3:
+        raise ValueError(f"fold_moments: operands must share one "
+                         f"(C, R, S) shape, got {a.shape} vs {b.shape}")
+    num_cols = a.shape[0]
+    norm = normalize_moments(MOMENTS if moments is None else moments,
+                             num_cols)
+    nrows = moment_rows(norm)
+    if a.shape[1] != nrows:
+        raise ValueError(f"fold_moments: moments spec implies {nrows} "
+                         f"rows per column, operands have {a.shape[1]}")
+    mn = jnp.minimum(a[:, 2], b[:, 2])
+    mx = jnp.maximum(a[:, 3], b[:, 3])
+    merged = [a[:, 0] + b[:, 0], a[:, 1] + b[:, 1], mn, mx]
+    if nrows == 6:
+        idx_cols = []
+        for c in range(num_cols):
+            rows = []
+            for which, row, gkey in (("argmin", ARGMIN_ROW, mn[c]),
+                                     ("argmax", ARGMAX_ROW, mx[c])):
+                tie_first = _index_tie(norm[c], which)
+                if tie_first is None:
+                    rows.append(jnp.full_like(gkey, POS_INF))
+                    continue
+                ident = POS_INF if tie_first else NEG_INF
+                key_row = 2 if which == "argmin" else 3
+                ca = jnp.where(a[c, key_row] == gkey, a[c, row], ident)
+                cb = jnp.where(b[c, key_row] == gkey, b[c, row], ident)
+                rows.append(jnp.minimum(ca, cb) if tie_first
+                            else jnp.maximum(ca, cb))
+            idx_cols.append(jnp.stack(rows))
+        merged.append(jnp.stack(idx_cols)[:, 0])
+        merged.append(jnp.stack(idx_cols)[:, 1])
+    return jnp.stack(merged, axis=1)
+
+
 def shard_merge(agg: Aggregate, local_state: PyTree, axis_name: str) -> PyTree:
     """Cross-device partial aggregation: all-gather the per-shard partial
     states over ``axis_name`` and left-fold ``merge`` in shard order.

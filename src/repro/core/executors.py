@@ -49,6 +49,9 @@ from repro.relational.plan import AggCall
 from repro.relational.table import Table
 
 from . import recognize as _recognize
+from .aggregate import fold_moments  # noqa: F401  (public re-export: the
+#   incremental serving layer folds micro-batch moments through the same
+#   door the grouped executors launch them from)
 from .aggify import CustomAggregate, RewrittenProgram, aggify, exec_stmts
 from .loop_ir import (Assign, Col, CursorLoop, Program, Var, assigned_vars,
                       eval_expr, expr_cols)
@@ -501,17 +504,16 @@ def _segagg_backend() -> str:
     everything — the serving circuit breaker traces its degraded
     executable under it.  Env overrides: REPRO_SEGAGG_BACKEND, or legacy
     REPRO_SEGAGG_PALLAS=1."""
-    import os as _os
-
+    from repro.configs import flags
     from repro.reliability.degrade import forced_backend
     forced = forced_backend()
     if forced is not None:
         return forced
-    env = _os.environ.get("REPRO_SEGAGG_BACKEND")
-    if env in ("pallas", "interpret", "jnp"):
+    env = flags.choice("REPRO_SEGAGG_BACKEND", ("pallas", "interpret", "jnp"))
+    if env is not None:
         return env
     on_tpu = jax.default_backend() == "tpu"
-    if _os.environ.get("REPRO_SEGAGG_PALLAS") == "1":
+    if flags.value("REPRO_SEGAGG_PALLAS") == "1":
         return "pallas" if on_tpu else "interpret"
     return "pallas" if on_tpu else "jnp"
 

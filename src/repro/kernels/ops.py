@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 
 from . import ref as _ref
+from repro.configs import flags
 from .decode_attn import decode_attention as _decode_pallas
 from .segment_agg import fused_segment_agg as _fused_segagg
 from .segment_agg import segment_agg as _segagg_pallas
@@ -31,7 +32,7 @@ def _on_tpu() -> bool:
 
 
 def want_pallas(default: bool | None = None) -> bool:
-    env = os.environ.get("REPRO_USE_PALLAS")
+    env = flags.value("REPRO_USE_PALLAS")
     if env is not None:
         return env not in ("0", "false", "False")
     if default is not None:

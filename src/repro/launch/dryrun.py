@@ -1,5 +1,6 @@
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+from repro.configs import flags
 # ^ MUST precede every other import (jax locks the device count on first
 # init).  Only the dry-run sees 512 placeholder devices; tests/benches see 1.
 
@@ -189,7 +190,7 @@ def lower_cell(arch_id: str, shape_name: str, multi_pod: bool,
 
     # persist the per-device HLO (gzip) so the analyzer can be improved
     # without recompiling all 80 cells
-    hlo_dir = os.environ.get("REPRO_HLO_DIR")
+    hlo_dir = flags.value("REPRO_HLO_DIR")
     if hlo_dir:
         import gzip
         os.makedirs(hlo_dir, exist_ok=True)

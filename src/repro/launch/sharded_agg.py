@@ -69,7 +69,6 @@ O(num_segments)-per-shard merge paths above with no changes here.
 """
 from __future__ import annotations
 
-import os
 from typing import Optional
 
 import jax
@@ -80,6 +79,7 @@ from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from repro.core.aggregate import Aggregate
+from repro.configs import flags
 from repro.kernels.segment_agg import (ARGMAX_ROW, ARGMIN_ROW, MOMENTS,
                                        NEG_INF, POS_INF, _index_tie,
                                        _normalize, _pad_rows, _row_fills,
@@ -92,7 +92,7 @@ def row_sharded_mesh(*arrays) -> Optional[tuple[Mesh, str]]:
     """(mesh, axis) when any array carries a NamedSharding split over >1
     device along dim 0; None for tracers, replicated arrays, composite row
     axes, or when ``REPRO_SEGAGG_SHARDED=off``."""
-    if os.environ.get("REPRO_SEGAGG_SHARDED") == "off":
+    if not flags.enabled("REPRO_SEGAGG_SHARDED"):
         return None
     for a in arrays:
         if a is None or isinstance(a, jax.core.Tracer):
@@ -313,6 +313,143 @@ def sharded_fused_segment_agg(vals: jax.Array, segs: jax.Array,
     if payloads:
         return out, picks
     return out
+
+
+def sharded_fold_batch(vals: jax.Array, segs: jax.Array, valid: jax.Array,
+                       pos: jax.Array, num_segments: int, *,
+                       mesh: Mesh, axis: str = "data",
+                       backend: str = "auto", block_rows: int = 256,
+                       block_segs: int | None = None,
+                       moments=MOMENTS, payloads=()):
+    """Aggregate ONE micro-batch into a replicated (C, R, num_segments)
+    moment tensor across a row-sharded mesh — the distributed half of the
+    serving layer's incremental ingest.  The batch arrives already
+    slotted against the resident table (``segs`` holds dense resident
+    slot ids, so slot numbering is globally consistent by construction —
+    no key exchange is needed, unlike ``sharded_sortfree_segment_agg``);
+    each shard runs ``fused_segment_agg`` in ``layout='unsorted'`` over
+    its row slice and the partial tensors merge with the standard
+    psum/pmin/pmax algebra.  Index rows are globalized by ``pos`` — the
+    batch rows' TABLE POSITIONS (f32-exact ints) — instead of the
+    axis-index offset of ``_merge_index_rows``: the caller folds the
+    result into a resident tensor whose index rows are position-numbered,
+    and position order equals loop order over the appended table, so
+    tie-order parity with a one-shot recompute holds by construction.
+    ``payloads`` selects winner payload values shard-locally exactly as
+    in ``sharded_fused_segment_agg`` (masked psum keyed on the merged
+    (key, position) pair).  Every collective moves O(num_segments)
+    elements per shard.  Returns ``(moments, picks)`` — replicated, ready
+    for ``core.aggregate.fold_moments`` against the resident tensor."""
+    from repro.reliability import faults as _faults
+    _faults.fail("shard_launch")
+    vals, valid = _normalize(jnp.asarray(vals), jnp.asarray(valid))
+    segs = jnp.asarray(segs).astype(jnp.int32)
+    pos = jnp.asarray(pos, jnp.float32)
+    nshards = mesh.shape[axis]
+    num_cols = vals.shape[1]
+    norm_moments = normalize_moments(moments, num_cols)
+    indexed = has_index_moments(norm_moments)
+    if payloads and not indexed:
+        raise ValueError("shard-local payload gathering requires an index "
+                         "moment on the key column (argmin_*/argmax_*)")
+
+    n = vals.shape[0]
+    pad = (-n) % nshards
+    if pad:
+        vals = jnp.pad(vals, ((0, pad), (0, 0)))
+        segs = jnp.concatenate(
+            [segs, jnp.full((pad,), num_segments - 1, jnp.int32)])
+        valid = jnp.pad(valid, ((0, pad), (0, 0)))
+        pos = jnp.pad(pos, (0, pad))
+    n_p = vals.shape[0]
+    if indexed and not index_moment_ok(n_p, block_rows):
+        raise ValueError(
+            f"index moments accumulate f32 row indices, exact only below "
+            f"2^24 (padded) total rows; got {n_p}")
+    shard_n = n_p // nshards
+    sh = NamedSharding(mesh, P(axis))
+    vals = jax.device_put(vals.astype(jnp.float32), sh)
+    segs = jax.device_put(segs, sh)
+    valid = jax.device_put(valid, sh)
+    pos = jax.device_put(pos, sh)
+    pv_flat: list[jax.Array] = []
+    for _c, _minimize, pvs in payloads:
+        for a in pvs:
+            a = jnp.asarray(a)
+            if a.shape[0] != n_p:
+                a = jnp.concatenate(
+                    [a, jnp.zeros((n_p - a.shape[0],), a.dtype)])
+            pv_flat.append(jax.device_put(a, sh))
+
+    def local(v, s, g, p, *pv):
+        out = fused_segment_agg(v, s, g, num_segments,
+                                block_rows=block_rows,
+                                block_segs=block_segs, backend=backend,
+                                moments=norm_moments, layout="unsorted")
+        sm = lax.psum(out[:, 0], axis)
+        cnt = lax.psum(out[:, 1], axis)
+        mn = lax.pmin(out[:, 2], axis)
+        mx = lax.pmax(out[:, 3], axis)
+        if not indexed:
+            return jnp.stack([sm, cnt, mn, mx], axis=1), ()
+        # globalize each attaining LOCAL row to its table position, then
+        # merge lexicographically on (key, position)
+        gi_cols = []
+        for c in range(num_cols):
+            rows = []
+            for which, row, gkey in (("argmin", ARGMIN_ROW, mn[c]),
+                                     ("argmax", ARGMAX_ROW, mx[c])):
+                tie_first = _index_tie(norm_moments[c], which)
+                if tie_first is None:
+                    rows.append(jnp.full_like(gkey, POS_INF))
+                    continue
+                ident = POS_INF if tie_first else NEG_INF
+                lkey = out[c, 2 if which == "argmin" else 3]
+                lp = out[c, row]
+                inr = (lp >= 0) & (lp < shard_n)
+                safe = jnp.clip(lp, 0, shard_n - 1).astype(jnp.int32)
+                cand = jnp.where((lkey == gkey) & inr, jnp.take(p, safe),
+                                 ident)
+                rows.append(lax.pmin(cand, axis) if tie_first
+                            else lax.pmax(cand, axis))
+            gi_cols.append(jnp.stack(rows))
+        gi = jnp.stack(gi_cols)
+        merged = jnp.concatenate(
+            [jnp.stack([sm, cnt, mn, mx], axis=1), gi], axis=1)
+        picks = []
+        it = iter(pv)
+        for c, minimize, pvs in payloads:
+            gkey = mn[c] if minimize else mx[c]
+            lkey = out[c, 2 if minimize else 3]
+            lp = out[c, ARGMIN_ROW if minimize else ARGMAX_ROW]
+            inr = (lp >= 0) & (lp < shard_n)
+            safe = jnp.clip(lp, 0, shard_n - 1).astype(jnp.int32)
+            # positions are unique across the table, so exactly one shard
+            # matches the merged position — the masked psum IS a select
+            won = ((lkey == gkey) & inr
+                   & (jnp.take(p, safe) == gi[c, 0 if minimize else 1]))
+            per = []
+            for _ in pvs:
+                arr = next(it)
+                gathered = jnp.take(arr, safe)
+                if gathered.dtype == jnp.bool_:
+                    r = lax.psum(jnp.where(won, gathered.astype(jnp.int32),
+                                           0), axis)
+                    per.append(r != 0)
+                else:
+                    per.append(lax.psum(
+                        jnp.where(won, gathered, jnp.zeros_like(gathered)),
+                        axis))
+            picks.append(tuple(per))
+        return merged, tuple(picks)
+
+    out_specs = (P(), tuple(tuple(P() for _ in pvs)
+                            for _c, _m, pvs in payloads))
+    return shard_map(
+        local, mesh=mesh,
+        in_specs=(P(axis),) * (4 + len(pv_flat)),
+        out_specs=out_specs, check_rep=False)(vals, segs, valid, pos,
+                                              *pv_flat)
 
 
 def sharded_sortfree_segment_agg(vals: jax.Array, key_words: jax.Array,

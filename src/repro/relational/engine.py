@@ -16,6 +16,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.loop_ir import eval_expr
+from repro.configs import flags
 from .plan import (AggCall, Filter, GroupAgg, IterSpace, Join, Limit, OrderBy,
                    Plan, Project, Scan)
 from .table import Table
@@ -200,7 +201,7 @@ def join_hash_enabled() -> bool:
     """Kill switch for the sort-free keyslot hash join (default: on).
     ``REPRO_JOIN_HASH=off`` restores the legacy stable-argsort +
     searchsorted lookup."""
-    return os.environ.get("REPRO_JOIN_HASH") != "off"
+    return flags.enabled("REPRO_JOIN_HASH")
 
 
 def _common_key_cast(lk: jax.Array, rk: jax.Array):
@@ -380,14 +381,14 @@ def _groupagg_fused_backend() -> Optional[str]:
     thread-local ``reliability.degrade.force_backend`` scope beats both
     — the serving circuit breaker traces degraded executables under
     it."""
-    import os
-
+    from ..configs import flags
     from ..reliability.degrade import forced_backend
     forced = forced_backend()
     if forced is not None:
         return forced
-    env = os.environ.get("REPRO_GROUPAGG_FUSED")
-    if env in ("pallas", "interpret", "jnp", "off"):
+    env = flags.choice("REPRO_GROUPAGG_FUSED",
+                       ("pallas", "interpret", "jnp", "off"))
+    if env is not None:
         return env
     return "pallas" if jax.default_backend() == "tpu" else None
 

@@ -38,13 +38,13 @@ Kill switch: ``REPRO_PLAN_FUSE=off`` restores per-node materialization
 """
 from __future__ import annotations
 
-import os
 from dataclasses import dataclass
 from typing import Any, Callable, Mapping, Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.configs import flags
 from repro.core.loop_ir import (BinOp, Call, Col, Expr, UnOp, Where,
                                 eval_expr)
 from .plan import Filter, Join, Plan, Project
@@ -58,7 +58,7 @@ __all__ = ["fuse_enabled", "match_chain", "execute_chain",
 def fuse_enabled() -> bool:
     """Kill switch for the whole-plan fusion pass (default: on).
     ``REPRO_PLAN_FUSE=off`` restores per-node Table materialization."""
-    return os.environ.get("REPRO_PLAN_FUSE") != "off"
+    return flags.enabled("REPRO_PLAN_FUSE")
 
 
 @dataclass(frozen=True)

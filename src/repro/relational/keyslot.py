@@ -52,15 +52,16 @@ sort it replaces.
 from __future__ import annotations
 
 import math
-import os
 import threading
 from contextlib import contextmanager
+from functools import partial
 from typing import Iterable, Mapping, Optional
 
 import jax
 import jax.numpy as jnp
 from jax import lax
 
+from ..configs import flags
 from ..reliability import faults
 from .group_bound import GroupBoundOverflow
 
@@ -71,6 +72,8 @@ __all__ = [
     "sortfree_enabled", "sortfree_result", "provide_slots",
     "provided_slots", "slot_build_count", "distinct_count_sketch",
     "adaptive_expand", "adaptive_enabled", "probe_rounds",
+    "SlotState", "fresh_slot_state", "slot_ids_extend",
+    "slot_state_build", "slot_extend_count",
 ]
 
 
@@ -80,7 +83,7 @@ def sortfree_enabled() -> bool:
     order-insensitive call — this only gates the dispatch.
     ``REPRO_GROUPAGG_SORTFREE=off`` forces every grouped call back onto
     the sorted route."""
-    return os.environ.get("REPRO_GROUPAGG_SORTFREE") != "off"
+    return flags.enabled("REPRO_GROUPAGG_SORTFREE")
 
 
 # ---------------------------------------------------------------------------
@@ -183,7 +186,7 @@ _MIN_EXPAND = 4
 def adaptive_enabled() -> bool:
     """Kill switch for sketch-driven probe-table sizing (default: on).
     ``REPRO_KEYSLOT_ADAPTIVE=off`` pins the fixed ``EXPAND`` ceiling."""
-    return os.environ.get("REPRO_KEYSLOT_ADAPTIVE") != "off"
+    return flags.enabled("REPRO_KEYSLOT_ADAPTIVE")
 
 
 def adaptive_expand(est_distinct: int, bucket: int) -> int:
@@ -286,6 +289,212 @@ def slot_ids_from_words(words: jax.Array, valid: jax.Array,
     occupied = jnp.arange(bucket) < jnp.minimum(dense[-1] + 1, bucket)
     overflowed = jnp.sum((valid & (seg == bucket)).astype(jnp.int32))
     return seg, owner, occupied, overflowed
+
+
+# ---------------------------------------------------------------------------
+# Incremental slotting: extend a resident assignment with a micro-batch.
+#
+# ``slot_ids_from_words`` is one-shot — its probe table is scratch, so a
+# serving layer folding micro-batches would re-probe *history* on every
+# arrival.  The stateful variant below keeps the probe table and a dense
+# key table resident: ``fresh_slot_state`` allocates them,
+# ``slot_ids_extend`` slots ONE batch against them (O(batch) work — the
+# loop's scatters are table-sized but the per-round elementwise work is
+# batch-sized, and history rows are never touched), and the returned
+# state carries the union key set for the next batch.  Dense ids are
+# *claim order across calls*: resident keys keep their ids forever
+# (appends never renumber), new keys take the next ids.
+# ---------------------------------------------------------------------------
+
+
+class SlotState:
+    """Resident slotting state: ``tbl`` (bucket×expand,) int32 maps probe
+    slots to dense ids (−1 empty), ``ktab`` (bucket, K) uint32 holds each
+    dense id's canonical key words, ``cnt`` is the number of dense ids
+    assigned.  Treat as immutable — ``slot_ids_extend`` returns a new
+    one.  A state whose extend reported ``overflowed > 0`` is NOT
+    reusable for further extends: overflow keys' scratch claims are
+    scrubbed to holes that sit on other keys' probe paths — the caller
+    must grow the bucket and rebuild (the serving layer's
+    double-and-retry does exactly this)."""
+
+    __slots__ = ("tbl", "ktab", "cnt", "bucket", "expand")
+
+    def __init__(self, tbl, ktab, cnt, bucket: int, expand: int):
+        self.tbl = tbl
+        self.ktab = ktab
+        self.cnt = cnt
+        self.bucket = int(bucket)
+        self.expand = int(expand)
+
+
+def fresh_slot_state(num_words: int, bucket: int,
+                     expand: int = EXPAND) -> SlotState:
+    """An empty resident slotting state for ``num_words``-word keys over a
+    ``bucket``-slot dense range (same power-of-two constraints as
+    ``slot_ids_from_words``)."""
+    if bucket & (bucket - 1) or bucket <= 0:
+        raise ValueError(f"bucket must be a positive power of two, got "
+                         f"{bucket}")
+    if expand & (expand - 1) or expand <= 0:
+        raise ValueError(f"expand must be a positive power of two, got "
+                         f"{expand}")
+    m = bucket * expand
+    return SlotState(jnp.full((m,), -1, jnp.int32),
+                     jnp.zeros((bucket, num_words), jnp.uint32),
+                     jnp.int32(0), bucket, expand)
+
+
+def slot_ids_extend(words: jax.Array, valid: jax.Array,
+                    state: SlotState,
+                    ) -> tuple[jax.Array, jax.Array, jax.Array, SlotState]:
+    """Slot one micro-batch against a resident assignment.  Returns
+    ``(seg, new_owner, overflowed, new_state)``:
+
+    * ``seg``        (N,)      int32 — dense slot per batch row (resident
+                     keys resolve to their existing id, new keys claim the
+                     next ids); invalid and overflowed rows hold
+                     ``bucket``;
+    * ``new_owner``  (bucket,) int32 — the *batch-local* row index that
+                     claimed each newly assigned slot this call (``N``
+                     everywhere else, including slots owned by earlier
+                     calls) — the caller globalizes it with the batch
+                     rows' table positions and merges into its resident
+                     representative table;
+    * ``overflowed`` ()        int32 — valid batch rows whose key found
+                     no dense slot (the union key set outgrew the
+                     bucket); nonzero also poisons ``new_state`` (see
+                     ``SlotState``);
+    * ``new_state``  — the state extended with this batch's keys.
+
+    The probe loop is ``slot_ids_from_words``'s claim/verify round with
+    the densifying prefix sum replaced by direct dense-id claims: a
+    winner writes ``cnt + rank`` (rank = its order among this round's
+    winners) into the probe table and its key words into the key table,
+    so every later prober — this round or next month's batch — resolves
+    by key-word equality against the id's recorded words.  A winner
+    always places on its own claim, so every probe slot a placed key
+    stepped over is occupied at call end: probe paths stay consistent
+    across calls (absent overflow).
+    """
+    bucket, expand = state.bucket, state.expand
+    words = jnp.asarray(words)
+    if state.ktab.shape[1] != words.shape[1]:
+        raise ValueError(
+            f"key-word arity changed: state has {state.ktab.shape[1]} "
+            f"words, batch has {words.shape[1]}")
+    seg, new_owner, overflowed, tbl, ktab, cnt = _extend_probe(
+        words, jnp.asarray(valid, bool), jnp.asarray(state.tbl),
+        jnp.asarray(state.ktab), jnp.asarray(state.cnt, jnp.int32),
+        bucket=bucket, expand=expand)
+    return seg, new_owner, overflowed, SlotState(tbl, ktab, cnt,
+                                                 bucket, expand)
+
+
+@partial(jax.jit, static_argnames=("bucket", "expand"))
+def _extend_probe(words, valid, state_tbl, state_ktab, state_cnt, *,
+                  bucket: int, expand: int):
+    # jitted per (batch shape, bucket, expand): the probe while_loop is
+    # traced once per shape instead of on every eager call — sustained
+    # ingest folds hit this thousands of times
+    m = bucket * expand
+    n, k = words.shape
+    h = _hash_words(words)
+    idx = jnp.arange(n, dtype=jnp.int32)
+    mask = jnp.uint32(m - 1)
+    scratch_rows = bucket + n          # overflow claims park past bucket
+    ktab_s = jnp.concatenate(
+        [state_ktab, jnp.zeros((n, k), jnp.uint32)], axis=0)
+
+    def cond(st):
+        _t, _k, _o, _c, _s, active, rnd = st
+        return (rnd < m) & jnp.any(active)
+
+    def body(st):
+        tbl, ktab, own_arr, cnt, slot, active, rnd = st
+        p = rnd.astype(jnp.uint32)
+        cand = ((h + (p * (p + 1)) // 2) & mask).astype(jnp.int32)
+        empty = jnp.take(tbl, cand, mode="clip") < 0
+        claim = jnp.full((m,), n, jnp.int32).at[cand].min(
+            jnp.where(active & empty, idx, n), mode="promise_in_bounds")
+        winner = active & empty & (jnp.take(claim, cand,
+                                            mode="clip") == idx)
+        rank = jnp.cumsum(winner.astype(jnp.int32)) - 1
+        newid = cnt + rank
+        tbl = tbl.at[jnp.where(winner, cand, m)].set(newid, mode="drop")
+        ktab = ktab.at[jnp.where(winner, newid, scratch_rows)].set(
+            words, mode="drop")
+        own_arr = own_arr.at[jnp.where(winner, newid, bucket)].set(
+            idx, mode="drop")
+        cnt = cnt + jnp.sum(winner.astype(jnp.int32))
+        own = jnp.take(tbl, cand, mode="clip")
+        ow = jnp.take(ktab, jnp.clip(own, 0, scratch_rows - 1), axis=0,
+                      mode="clip")
+        eq = (own >= 0) & jnp.all(ow == words, axis=1)
+        slot = jnp.where(active & eq, own, slot)
+        active = active & ~eq
+        return tbl, ktab, own_arr, cnt, slot, active, rnd + 1
+
+    st0 = (state_tbl, ktab_s,
+           jnp.full((bucket,), n, jnp.int32),
+           state_cnt,
+           jnp.full((n,), scratch_rows, jnp.int32), valid, jnp.int32(0))
+    tbl, ktab_s, new_owner, cnt, slot, active, _rnd = lax.while_loop(
+        cond, body, st0)
+
+    placed = ~active & valid & (slot < bucket)
+    seg = jnp.where(placed, slot, bucket).astype(jnp.int32)
+    overflowed = jnp.sum((valid & (seg == bucket)).astype(jnp.int32))
+    # overflow keys claimed scratch ids ≥ bucket; scrub those probe slots
+    # (holes — hence the no-extend-after-overflow contract above)
+    tbl = jnp.where(tbl >= bucket, jnp.int32(-1), tbl)
+    return (seg, new_owner, overflowed, tbl, ktab_s[:bucket],
+            jnp.minimum(cnt, bucket))
+
+
+def slot_state_build(table, keys: Iterable[str], bucket: int,
+                     expand: Optional[int] = None):
+    """Full stateful build: slot every row of ``table`` from a fresh
+    state — the seeding counterpart of ``slot_segment_ids`` for callers
+    that will keep extending (the serving layer's append path).  Counts
+    as a slot *build* (bumps the build counter, sized adaptively from
+    the distinct sketch like the one-shot path); subsequent
+    ``slot_ids_extend`` calls bump the *extend* counter instead — the
+    acceptance spies diff both.  Returns ``(seg, owner, overflowed,
+    state)`` with ``owner`` already table-global (a fresh build's batch
+    IS the table)."""
+    keys = tuple(keys)
+    global _SLOT_BUILDS
+    _SLOT_BUILDS += 1
+    words = key_words_for(table.columns[k] for k in keys)
+    mask = table.mask()
+    if expand is None:
+        expand = EXPAND
+        if (adaptive_enabled()
+                and not isinstance(words, jax.core.Tracer)
+                and not isinstance(mask, jax.core.Tracer)):
+            expand = adaptive_expand(distinct_count_sketch(table, keys),
+                                     bucket)
+    state = fresh_slot_state(words.shape[1], bucket, expand)
+    seg, owner, overflowed, state = slot_ids_extend(words, mask, state)
+    return seg, owner, overflowed, state
+
+
+_SLOT_EXTENDS = 0
+
+
+def slot_extend_count() -> int:
+    """Number of incremental ``slot_ids_extend`` calls made on behalf of
+    a Table append (the serving layer bumps it) since import — the
+    acceptance test asserts appends extend instead of rebuilding by
+    diffing this against ``slot_build_count``."""
+    return _SLOT_EXTENDS
+
+
+def note_slot_extend() -> None:
+    """Bump the extend counter (serving-layer append path)."""
+    global _SLOT_EXTENDS
+    _SLOT_EXTENDS += 1
 
 
 #: build-side probe-table expansion for ``build_probe``: the table holds

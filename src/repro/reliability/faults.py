@@ -46,6 +46,10 @@ SITES = (
                            #   fused kernel call site (trace-time)
     "shard_launch",        # launch.sharded_agg: raise entering a sharded
                            #   launcher
+    "ingest_fold",         # agg_server.ingest: raise entering the
+                           #   micro-batch moment fold (the chaos battery
+                           #   proves a failed fold never corrupts the
+                           #   resident state)
     "dispatcher_die",      # agg_server dispatcher loop: kill the thread
     "dispatcher_stall",    # agg_server dispatcher loop: sleep 0.25s once
                            #   (lets deadline/queue tests win races
@@ -152,4 +156,6 @@ def active_spec() -> Optional[str]:
 
 # arm from the environment at import: the CI chaos step exports
 # REPRO_FAULTS and the battery asserts the hook came live
-configure(os.environ.get("REPRO_FAULTS"))
+from repro.configs import flags as _flags  # noqa: E402  (import-time arming)
+
+configure(_flags.value("REPRO_FAULTS"))

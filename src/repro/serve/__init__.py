@@ -3,13 +3,17 @@ and the aggregate-serving layer (``agg_server``) — compiled-plan +
 slot-table caching with batched concurrent parameterized queries, under
 the ``guard`` failure contract (typed per-request errors, poison
 detection, deadlines/backpressure, degradation circuit breaker)."""
-from .agg_server import AggServer, ServeStats, guard_enabled, serving_enabled
+from .agg_server import (AggServer, ServeRequest, ServeResult, ServeStats,
+                         guard_enabled, serving_enabled)
 from .guard import (BackendFailure, BoundOverflow, CircuitBreaker,
                     DeadlineExceeded, GuardStats, PoisonedResult, QueueFull,
                     ServeError, ServerClosed, SlotTableStale, is_poisoned)
+from .incremental import IncrementalIneligible, incremental_enabled
 
 __all__ = [
-    "AggServer", "ServeStats", "serving_enabled", "guard_enabled",
+    "AggServer", "ServeStats", "ServeRequest", "ServeResult",
+    "serving_enabled", "guard_enabled",
+    "IncrementalIneligible", "incremental_enabled",
     "ServeError", "BoundOverflow", "SlotTableStale", "DeadlineExceeded",
     "QueueFull", "PoisonedResult", "BackendFailure", "ServerClosed",
     "GuardStats", "CircuitBreaker", "is_poisoned",

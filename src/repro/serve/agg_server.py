@@ -61,10 +61,12 @@ See docs/serving.md for the cache-key / invalidation / batching contract.
 """
 from __future__ import annotations
 
+import copy
+import dataclasses
 import math
-import os
 import threading
 import time
+import warnings
 from concurrent.futures import Future
 from contextlib import nullcontext
 from dataclasses import dataclass, field
@@ -75,6 +77,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.configs import flags
 from repro.relational import keyslot
 from repro.relational.engine import execute
 from repro.relational.group_bound import GroupBoundOverflow, resolve_group_bound
@@ -83,11 +86,14 @@ from repro.relational.plan import AggCall, GroupAgg, Plan, Scan
 from repro.relational.table import Table
 from repro.reliability import degrade, faults
 
+from . import incremental
 from .guard import (BackendFailure, BoundOverflow, CircuitBreaker,
                     DeadlineExceeded, GuardStats, PoisonedResult, QueueFull,
                     ServeError, ServerClosed, SlotTableStale, is_poisoned)
+from .incremental import IncrementalIneligible
 
-__all__ = ["AggServer", "ServeStats", "serving_enabled", "guard_enabled"]
+__all__ = ["AggServer", "ServeStats", "ServeRequest", "ServeResult",
+           "serving_enabled", "guard_enabled"]
 
 
 def serving_enabled() -> bool:
@@ -95,7 +101,7 @@ def serving_enabled() -> bool:
     ``REPRO_AGG_SERVE=off`` turns every call into a plain eager
     ``engine.execute`` — no executable cache, no slot-table cache, no
     batching."""
-    return os.environ.get("REPRO_AGG_SERVE") != "off"
+    return flags.enabled("REPRO_AGG_SERVE")
 
 
 def guard_enabled() -> bool:
@@ -103,7 +109,7 @@ def guard_enabled() -> bool:
     ``REPRO_SERVE_GUARD=off``.  Guard-off restores the PR-6 serving
     behavior exactly — caches and batching, raw exceptions on futures,
     no poison scan, no breaker, unbounded queue."""
-    return os.environ.get("REPRO_SERVE_GUARD") != "off"
+    return flags.enabled("REPRO_SERVE_GUARD")
 
 
 #: bounded poison recovery: an inferred bound that poisons a launch is
@@ -121,12 +127,56 @@ _MAX_STALE_REBUILDS = 2
 class ServeStats:
     """Counters the tests and the serving bench assert on.  ``traces``
     increments inside the jitted body (a Python side effect fires only
-    while tracing), so it counts actual retraces, not calls."""
+    while tracing), so it counts actual retraces, not calls.
+    ``slot_extends`` counts incremental slot-table extensions (an append
+    that reused the resident assignment instead of rebuilding);
+    ``folds`` counts resident micro-batch moment folds."""
     requests: int = 0
     batches: int = 0
     traces: int = 0
     slot_builds: int = 0
     slot_hits: int = 0
+    slot_extends: int = 0
+    appends: int = 0
+    ingests: int = 0
+    folds: int = 0
+    snapshots: int = 0
+
+
+@dataclass(frozen=True)
+class ServeRequest:
+    """The ONE request shape every serving entry point speaks (the typed
+    front door; ``execute``/``submit`` are thin wrappers over it).
+
+    * ``plan``        — the plan to serve (interned by identity);
+    * ``params``      — scalar parameter bindings (values vary per call,
+                        the signature keys the executable cache);
+    * ``deadline``    — seconds from submission after which a QUEUED
+                        request is shed with ``DeadlineExceeded``
+                        (async path only);
+    * ``consistency`` — ``"latest"`` (default): compute over the current
+                        catalog tables; ``"snapshot"``: serve a grouped
+                        plan from its resident incremental moment state
+                        (``AggServer.snapshot`` — O(num_segments)
+                        finalize, no history re-read), falling back to a
+                        full compute when the plan is ineligible or
+                        ``REPRO_INCR_AGG=off``.
+    """
+    plan: Plan
+    params: Optional[Mapping[str, Any]] = None
+    deadline: Optional[float] = None
+    consistency: str = "latest"
+
+
+@dataclass(frozen=True)
+class ServeResult:
+    """What a ``ServeRequest`` resolves to: the result ``table``, the
+    ``version`` of the plan's slot-scan catalog table at launch (None
+    when the plan has no slot scan — e.g. joins), and a point-in-time
+    copy of the server's ``stats`` counters."""
+    table: Table
+    version: Optional[int]
+    stats: "ServeStats"
 
 
 #: safety padding on the sketch estimate before bucketing: linear
@@ -155,14 +205,18 @@ class _PlanEntry:
 class AggServer:
     """Serve parameterized aggregate plans over a named catalog.
 
-    ``execute(plan, params)`` is the synchronous path (cache-aware, one
-    request per launch); ``submit(plan, params) -> Future`` is the
-    concurrent path — a dispatcher thread coalesces same-(plan,
-    parameter-signature) requests into one vmapped launch of up to
-    ``max_batch`` lanes.  ``update_table`` is the ONLY write: it swaps
-    the catalog entry and explicitly invalidates the slot tables derived
-    from the old version.  ``execute_uncached`` reproduces the
-    pre-serving cost model (fresh jit per call) for benchmarking."""
+    ``serve(ServeRequest) -> ServeResult`` is the typed request path;
+    ``execute(plan, params)`` is its synchronous positional wrapper
+    (cache-aware, one request per launch) and ``submit(plan, params) ->
+    Future`` / ``serve_async`` the concurrent path — a dispatcher thread
+    coalesces same-(plan, parameter-signature) requests into one vmapped
+    launch of up to ``max_batch`` lanes.  Writes go through the typed
+    mutation API: ``update_table`` (replace — full invalidation),
+    ``append_rows`` (append — executables survive, slot tables extend),
+    ``ingest`` (append + fold into resident incremental aggregates;
+    ``snapshot(plan)`` finalizes them in O(num_segments)).
+    ``execute_uncached`` reproduces the pre-serving cost model (fresh
+    jit per call) for benchmarking."""
 
     def __init__(self, catalog: Mapping[str, Table], *,
                  max_batch: int = 64, batch_window_s: float = 0.001,
@@ -182,9 +236,18 @@ class AggServer:
         self._cv = threading.Condition()
         self._plans: Dict[int, _PlanEntry] = {}
         #: (table name, table version, key names, bucket) →
-        #: (version tag, slot arrays) — the tag re-proves the version at
-        #: every hit (see _slot_table)
+        #: (version tag, slot arrays, SlotState | None) — the tag
+        #: re-proves the version at every hit (see _slot_table); the
+        #: state lets an append EXTEND the assignment instead of
+        #: rebuilding it
         self._slots: Dict[Any, tuple] = {}
+        #: (table name, new version) → (parent version, appended
+        #: positions) — the append chain slot extension and snapshot
+        #: catch-up walk; broken by update_table (full invalidation)
+        self._appends: Dict[Any, tuple] = {}
+        #: id(plan) → ResidentAgg — resident incremental moment state
+        #: (the plan entry in _plans holds the strong plan reference)
+        self._residents: Dict[int, incremental.ResidentAgg] = {}
         self._pending: Dict[Any, tuple] = {}
         self._breakers: Dict[Any, CircuitBreaker] = {}
         self._dispatcher: Optional[threading.Thread] = None
@@ -192,21 +255,225 @@ class AggServer:
         self.stats = ServeStats()
         self.guard_stats = GuardStats()
 
-    # -- catalog writes ----------------------------------------------------
+    # -- catalog writes: the typed mutation API ----------------------------
+    #
+    # Three verbs with three invalidation contracts (docs/serving.md):
+    #
+    #   update_table(name, t)  REPLACE — content may change arbitrarily.
+    #       Invalidates slot tables for the table, the executables of
+    #       every plan scanning it, its resident incremental state, and
+    #       breaks its append chain.
+    #   append_rows(name, rows)  APPEND — existing rows are immutable.
+    #       Bumps the version; executables SURVIVE (shapes unchanged
+    #       while rows fit the spare capacity) and slot tables EXTEND
+    #       incrementally instead of rebuilding.
+    #   ingest(name, batch)  APPEND + FOLD — append_rows plus an O(batch)
+    #       fold of the batch's moments into every resident incremental
+    #       aggregate registered on the table.
+
     def update_table(self, name: str, table: Table) -> None:
-        """Swap a catalog table.  Slot tables derived from the previous
-        version are dropped here (explicit invalidation on write);
-        executables survive — they are keyed on shapes, not versions, so
-        a shape-compatible mutation reuses the compiled program with the
-        rebuilt slot arrays passed in as fresh arguments."""
+        """REPLACE a catalog table — the big-hammer verb: arbitrary
+        content change, full invalidation (slot tables, the executables
+        of every plan scanning ``name``, resident incremental state, the
+        append chain).  Use ``append_rows``/``ingest`` for append-shaped
+        mutations — they keep the caches warm; an append-shaped call
+        here draws a ``DeprecationWarning`` pointing at them."""
         with self._lock:
+            old = self._catalog.get(name)
+            if old is not None and self._append_shaped(old, table):
+                warnings.warn(
+                    f"update_table({name!r}, ...) received an append-shaped "
+                    "table (old rows intact, new rows added).  Migrate to "
+                    "append_rows(name, rows) — preserves compiled "
+                    "executables and extends the slot table incrementally — "
+                    "or ingest(name, batch) to also fold resident "
+                    "incremental aggregates.  update_table keeps "
+                    "full-replace semantics: executables, slot tables, and "
+                    "resident state for this table are all invalidated.",
+                    DeprecationWarning, stacklevel=2)
             self._catalog[name] = table
-            self._slots = {k: v for k, v in self._slots.items()
-                           if k[0] != name}
+            self._invalidate(name)
+
+    def append_rows(self, name: str, rows) -> int:
+        """APPEND rows to a catalog table; returns the new
+        ``Table.version``.  ``rows`` is a Table (its invalid rows are
+        dropped) or a mapping of column → array with exactly the
+        table's columns.  Rows land in the first invalid positions of
+        the fixed-capacity layout; when the spare capacity runs out the
+        table GROWS (capacity at least doubles — this changes column
+        shapes, so executables legitimately retrace; appends that fit
+        the spare capacity change no shape and reuse every executable).
+        The append is recorded on the version chain, so slot tables
+        extend incrementally (``keyslot.slot_ids_extend``) and resident
+        incremental aggregates catch up at the next snapshot.
+        ``group_bound`` hints survive (unlike ``relational.concat``)."""
+        with self._lock:
+            t = self._catalog[name]
+            prev_version = t.version
+            cols, nb = self._coerce_rows(t, rows)
+            if nb == 0:
+                return t.version
+            mask = (np.ones(t.capacity, bool) if t.valid is None
+                    else np.asarray(t.valid))
+            holes = np.flatnonzero(~mask)
+            if len(holes) < nb:
+                t = self._grow_capacity(t, nb - len(holes))
+                mask = np.asarray(t.valid)
+                holes = np.flatnonzero(~mask)
+            pos = np.ascontiguousarray(holes[:nb])
+            posj = jnp.asarray(pos, jnp.int32)
+            new_cols = {c: a.at[posj].set(
+                jnp.asarray(cols[c]).astype(a.dtype))
+                for c, a in t.columns.items()}
+            new_valid = jnp.asarray(mask).at[posj].set(True)
+            t2 = Table(new_cols, new_valid, t.group_bound)
+            self._catalog[name] = t2
+            self._appends[(name, t2.version)] = (prev_version, pos)
+            self._trim_appends(name)
+            self.stats.appends += 1
+            return t2.version
+
+    def ingest(self, name: str, batch) -> int:
+        """APPEND + FOLD: ``append_rows`` the micro-batch, then fold its
+        moments into every resident incremental aggregate registered on
+        ``name`` — O(batch) slotting + aggregation and O(num_segments)
+        merges per resident plan, never an O(table) recompute.  Returns
+        the new table version.  Under the guard a fold failure follows
+        the serving ladder (degraded jnp retry → ``BackendFailure``; an
+        overflowing inferred bound doubles and retries →
+        ``BoundOverflow`` when declared); a failed fold NEVER corrupts
+        the resident state (folds commit atomically), and the append
+        itself always lands.  ``REPRO_INCR_AGG=off`` reduces this to
+        ``append_rows`` (residents drop; snapshots recompute)."""
+        with self._lock:
+            before = self._catalog[name].version
+            version = self.append_rows(name, batch)
+            self.stats.ingests += 1
+            if not incremental.incremental_enabled() \
+                    or not serving_enabled():
+                for pid, res in list(self._residents.items()):
+                    if res.name == name:
+                        del self._residents[pid]
+                return version
+            if version != before:
+                self._fold_residents(name)
+            return version
 
     def table(self, name: str) -> Table:
         with self._lock:
             return self._catalog[name]
+
+    # -- mutation plumbing -------------------------------------------------
+    def _invalidate(self, name: str) -> None:
+        """Full invalidation for a REPLACE write on ``name``."""
+        self._slots = {k: v for k, v in self._slots.items()
+                       if k[0] != name}
+        self._appends = {k: v for k, v in self._appends.items()
+                         if k[0] != name}
+        for pid, res in list(self._residents.items()):
+            if res.name == name:
+                del self._residents[pid]
+        for ent in self._plans.values():
+            if name in self._plan_tables(ent.submitted):
+                ent.execs.clear()
+
+    @staticmethod
+    def _plan_tables(plan: Plan) -> set:
+        """Catalog table names a plan tree scans."""
+        names, stack = set(), [plan]
+        while stack:
+            p = stack.pop()
+            if isinstance(p, Scan):
+                names.add(p.table)
+                continue
+            if dataclasses.is_dataclass(p):
+                for f in dataclasses.fields(p):
+                    v = getattr(p, f.name, None)
+                    if isinstance(v, Plan):
+                        stack.append(v)
+        return names
+
+    @staticmethod
+    def _append_shaped(old: Table, new: Table) -> bool:
+        """Heuristic behind the update_table deprecation warning: True
+        when ``new`` is ``old`` with rows added — same columns/dtypes,
+        old rows bit-identical in the prefix, old validity preserved,
+        and at least one row actually appended."""
+        if set(old.columns) != set(new.columns):
+            return False
+        if new.capacity < old.capacity:
+            return False
+        oc = old.capacity
+        om = np.asarray(old.mask())
+        nm = np.asarray(new.mask())
+        if not bool((om <= nm[:oc]).all()):      # no row was invalidated
+            return False
+        for c, a in old.columns.items():
+            b = new.columns[c]
+            if isinstance(a, jax.core.Tracer) or isinstance(b, jax.core.Tracer):
+                return False
+            if b.dtype != a.dtype:
+                return False
+            # appends may fill previously-invalid holes, so only the
+            # VALID old rows must survive bit-identically
+            if not np.array_equal(np.asarray(a)[om],
+                                  np.asarray(b)[:oc][om]):
+                return False
+        return int(nm.sum()) > int(om.sum())     # and rows were added
+
+    @staticmethod
+    def _coerce_rows(t: Table, rows) -> tuple:
+        """Normalize an append payload to (column → np array, row count);
+        a Table payload drops its invalid rows first."""
+        if isinstance(rows, Table):
+            keep = np.flatnonzero(np.asarray(rows.mask()))
+            cols = {c: np.asarray(a)[keep] for c, a in rows.columns.items()}
+        else:
+            cols = {c: np.asarray(a) for c, a in dict(rows).items()}
+        if set(cols) != set(t.columns):
+            raise ValueError(
+                f"append columns {sorted(cols)} do not match table "
+                f"columns {sorted(t.columns)}")
+        lens = {a.shape[0] for a in cols.values()}
+        if len(lens) > 1:
+            raise ValueError(f"append columns disagree on length: {lens}")
+        return cols, (lens.pop() if lens else 0)
+
+    @staticmethod
+    def _grow_capacity(t: Table, need: int) -> Table:
+        """Grow a table's fixed capacity by at least ``need`` spare rows
+        (geometric: at least doubles), padding columns with zeros and the
+        validity mask with False.  Shape change ⇒ executables keyed on
+        the catalog signature legitimately miss."""
+        extra = max(int(need), t.capacity)
+        cols = {c: jnp.concatenate(
+            [a, jnp.zeros((extra,) + a.shape[1:], a.dtype)])
+            for c, a in t.columns.items()}
+        valid = jnp.concatenate([t.mask(), jnp.zeros(extra, bool)])
+        return Table(cols, valid, t.group_bound)
+
+    _MAX_APPEND_CHAIN = 64
+
+    def _trim_appends(self, name: str) -> None:
+        ours = [k for k in self._appends if k[0] == name]
+        for k in ours[:-self._MAX_APPEND_CHAIN]:
+            del self._appends[k]
+
+    def _chain_positions(self, name: str, from_version: int,
+                         to_version: int):
+        """Appended positions between two versions of ``name`` (oldest
+        first, concatenated), or None when the chain is broken (an
+        update_table happened, or the chain was trimmed)."""
+        pend, v = [], to_version
+        while v != from_version:
+            got = self._appends.get((name, v))
+            if got is None:
+                return None
+            v, pos = got
+            pend.append(pos)
+        if not pend:
+            return np.zeros(0, np.int64)
+        return np.concatenate(pend[::-1])
 
     # -- introspection -----------------------------------------------------
     def describe(self, plan: Plan) -> dict:
@@ -225,18 +492,229 @@ class AggServer:
                              if pid == id(ent.submitted)},
             }
 
-    # -- synchronous path --------------------------------------------------
+    # -- the typed request path --------------------------------------------
+    def serve(self, request: ServeRequest) -> ServeResult:
+        """Synchronous service of one ``ServeRequest`` — the primary
+        entry point (``execute`` is the thin positional wrapper).
+        ``consistency="latest"`` computes over the current catalog;
+        ``consistency="snapshot"`` finalizes the plan's resident
+        incremental moment state (``snapshot``) — parameterized plans
+        and ineligible plans fall back to a latest compute.  Deadlines
+        apply to QUEUED requests only, i.e. to ``serve_async``."""
+        self._check_consistency(request)
+        if request.consistency == "snapshot" and not request.params:
+            table = self.snapshot(request.plan)
+        else:
+            table = self._execute(request.plan, request.params)
+        return self._result(request, table)
+
+    def serve_async(self, request: ServeRequest) -> Future:
+        """``serve`` through the batching dispatcher: returns a Future
+        resolving to a ``ServeResult`` (or a typed ``ServeError`` under
+        the guard — ``request.deadline`` seconds from now sheds the
+        request with ``DeadlineExceeded`` while queued).  Snapshot-
+        consistency requests resolve inline (the resident finalize is
+        O(num_segments) — there is nothing to batch)."""
+        self._check_consistency(request)
+        if request.consistency == "snapshot" and not request.params:
+            fut: Future = Future()
+            try:
+                fut.set_result(self.serve(request))
+            except Exception as e:      # noqa: BLE001 — future carries it
+                fut.set_exception(e)
+            return fut
+        inner = self.submit(request.plan, request.params,
+                            deadline=request.deadline)
+        out: Future = Future()
+
+        def _done(f: Future) -> None:
+            e = f.exception()
+            if e is not None:
+                out.set_exception(e)
+                return
+            try:
+                out.set_result(self._result(request, f.result()))
+            except Exception as ex:     # noqa: BLE001 — future carries it
+                out.set_exception(ex)
+
+        inner.add_done_callback(_done)
+        return out
+
+    @staticmethod
+    def _check_consistency(request: ServeRequest) -> None:
+        if request.consistency not in ("latest", "snapshot"):
+            raise ValueError(
+                f"unknown consistency {request.consistency!r} "
+                "(expected 'latest' or 'snapshot')")
+
+    def _result(self, request: ServeRequest, table: Table) -> ServeResult:
+        with self._lock:
+            ent = self._plans.get(id(request.plan))
+            name = ent.slot_scan if ent is not None else None
+            version = (self._catalog[name].version
+                       if name in self._catalog else None)
+            stats = copy.copy(self.stats)
+        return ServeResult(table=table, version=version, stats=stats)
+
+    # -- synchronous path (back-compat wrapper) ----------------------------
     def execute(self, plan: Plan, params: Optional[Mapping[str, Any]] = None
                 ) -> Table:
-        """Cache-aware execution of one parameterized request.  Serialized
-        under the server lock (deterministic trace accounting); use
-        ``submit`` for concurrency."""
+        """Cache-aware execution of one parameterized request — the
+        positional wrapper over ``serve(ServeRequest(plan, params))``.
+        Serialized under the server lock (deterministic trace
+        accounting); use ``submit``/``serve_async`` for concurrency."""
+        return self.serve(ServeRequest(plan=plan, params=params)).table
+
+    def _execute(self, plan: Plan,
+                 params: Optional[Mapping[str, Any]] = None) -> Table:
         params = dict(params or {})
         if not serving_enabled():
             return execute(plan, self._catalog, params)
         with self._lock:
             return self._launch(self._prepare(plan),
                                 self._psig(params), [params])[0]
+
+    # -- resident incremental aggregation ----------------------------------
+    def snapshot(self, plan: Plan) -> Table:
+        """Finalize the resident incremental aggregate for ``plan`` —
+        O(num_segments) decode of the resident (C, R, S) moment tensor,
+        never an O(table) re-read.  First call seeds the residency (one
+        full pass); later calls catch up on any ``append_rows`` the
+        table took since the last fold (via the version chain) and
+        finalize.  Ineligible plans (non-GroupAgg roots, unfused ops,
+        no dense bound, ``REPRO_INCR_AGG=off``) fall back to a plain
+        cached compute — same result, full cost."""
+        if not serving_enabled() or not incremental.incremental_enabled():
+            return self._execute(plan)
+        with self._lock:
+            self.stats.snapshots += 1
+            ent = self._prepare(plan)
+            res = self._residents.get(id(plan))
+            if res is None:
+                res = self._admit_resident(ent)
+                if res is None:
+                    return self._launch(ent, self._psig({}), [{}])[0]
+                self._residents[id(plan)] = res
+            t = self._catalog[res.name]
+            if res.version != t.version:
+                pos = self._chain_positions(res.name, res.version,
+                                            t.version)
+                try:
+                    if pos is None:     # chain broken: re-seed
+                        self._seed_resident(res)
+                    elif len(pos):
+                        self._guarded_fold(res, t, pos)
+                        self.stats.folds += 1
+                    else:
+                        res.version = t.version
+                except IncrementalIneligible:
+                    del self._residents[id(plan)]
+                    return self._launch(ent, self._psig({}), [{}])[0]
+            out = res.snapshot(self._catalog[res.name])
+            if self._guard and is_poisoned(out):
+                raise PoisonedResult(
+                    "resident snapshot carries the poison stamp")
+            return out
+
+    def _admit_resident(self, ent: _PlanEntry):
+        """Admit + seed a residency for a prepared plan entry, or None
+        when the plan cannot be served incrementally."""
+        if ent.slot_scan is None or ent.bound is None:
+            return None
+        plan = ent.plan
+        if not isinstance(plan, GroupAgg):
+            return None
+        t = self._catalog[ent.slot_scan]
+        res = incremental.ResidentAgg.admit(plan, ent.slot_scan, ent.keys,
+                                            t, ent.bound)
+        if res is None:
+            return None
+        res.inferred = ent.inferred
+        try:
+            self._seed_resident(res)
+        except IncrementalIneligible:
+            return None
+        return res
+
+    def _seed_resident(self, res) -> None:
+        """Seed (or re-seed) a residency, doubling an overflowing
+        inferred bound like the slot-table build does."""
+        t = self._catalog[res.name]
+        while True:
+            try:
+                res.seed(t)
+                return
+            except GroupBoundOverflow:
+                if not res.inferred:
+                    raise
+                _, bound = resolve_group_bound(res.bound * 2, t.capacity)
+                if bound is None or bound <= res.bound:
+                    raise IncrementalIneligible(
+                        "inferred bound outgrew the row capacity")
+                res.bound = bound
+
+    def _fold_residents(self, name: str) -> None:
+        """Fold the just-appended batch into every resident aggregate on
+        ``name`` (the ingest path; each resident catches up through the
+        version chain so a resident that missed earlier plain appends
+        still converges)."""
+        t = self._catalog[name]
+        for pid, res in list(self._residents.items()):
+            if res.name != name or res.version == t.version:
+                continue
+            pos = self._chain_positions(name, res.version, t.version)
+            try:
+                if pos is None:
+                    self._seed_resident(res)
+                elif len(pos):
+                    self._guarded_fold(res, t, pos)
+                    self.stats.folds += 1
+                else:
+                    res.version = t.version
+            except IncrementalIneligible:
+                del self._residents[pid]
+
+    def _guarded_fold(self, res, t: Table, pos) -> None:
+        """One resident fold under the serving failure contract: the
+        ``ingest_fold`` fault site fires first (chaos battery); a
+        backend exception retries the fold on the jnp path (degraded);
+        an overflowing batch doubles an inferred bucket via
+        ``ResidentAgg.grow`` and retries — a declared bound surfaces
+        ``BoundOverflow`` (guard) / ``GroupBoundOverflow`` (raw).  Folds
+        commit atomically, so every failure leaves the resident state
+        untouched."""
+        while True:
+            try:
+                faults.fail("ingest_fold")
+                res.fold(t, pos)
+                return
+            except GroupBoundOverflow as e:
+                if res.inferred and res.grow(t):
+                    continue
+                if not res.inferred:
+                    # declared bound: residency cannot absorb the growth
+                    self._residents.pop(
+                        next((pid for pid, r in self._residents.items()
+                              if r is res), None), None)
+                    if self._guard:
+                        raise BoundOverflow(str(e)) from e
+                    raise
+                raise IncrementalIneligible(
+                    "resident bucket outgrew the row capacity") from e
+            except (IncrementalIneligible, ServeError):
+                raise
+            except Exception as e:      # noqa: BLE001 — ladder absorbs
+                if not self._guard:
+                    raise
+                self.guard_stats.backend_failures += 1
+                try:
+                    res.fold(t, pos, backend="jnp")
+                    self.guard_stats.degraded_launches += 1
+                    return
+                except Exception as e2:  # noqa: BLE001
+                    raise BackendFailure(
+                        "incremental fold failed and the degraded (jnp) "
+                        "fold failed too") from e2
 
     def warmup(self, plan: Plan,
                params: Optional[Mapping[str, Any]] = None,
@@ -477,7 +955,7 @@ class AggServer:
             key = (ent.slot_scan, t.version, ent.keys, ent.bound)
             got = self._slots.get(key)
             if got is not None:
-                tag, arrs = got
+                tag, arrs, _state = got
                 if tag == t.version:
                     self.stats.slot_hits += 1
                     return arrs
@@ -494,14 +972,19 @@ class AggServer:
                         f"dead Table.version after {stale - 1} rebuilds")
                 continue
             try:
-                arrs = keyslot.slot_segment_ids(t, ent.keys, ent.bound)
+                if self._extend_slots(ent, t) is not None:
+                    continue    # cached under the live key: take the hit path
+                seg, owner, overflowed, state = keyslot.slot_state_build(
+                    t, ent.keys, ent.bound)
                 if not faults.fire("bound_unvalidated"):
-                    check_slot_overflow(arrs[3], ent.bound)  # concrete: raises
-                arrs = tuple(jax.block_until_ready(a) for a in arrs)
+                    check_slot_overflow(overflowed, ent.bound)  # concrete
+                occupied = jnp.arange(ent.bound, dtype=jnp.int32) < state.cnt
+                arrs = tuple(jax.block_until_ready(a)
+                             for a in (seg, owner, occupied, overflowed))
                 self.stats.slot_builds += 1
                 tag = t.version - 1 if faults.fire("slot_stale") \
                     else t.version
-                self._slots[key] = (tag, arrs)
+                self._slots[key] = (tag, arrs, state)
                 if stale:
                     continue    # recovering: re-prove the tag via the hit path
                 return arrs
@@ -521,6 +1004,61 @@ class AggServer:
                     return None
                 ent.plan = _dc_replace(ent.plan, max_groups=grown)
                 ent.bound = bound
+
+    def _extend_slots(self, ent: _PlanEntry, t: Table):
+        """Extend a cached ancestor slot table across the pending
+        ``append_rows`` chain instead of rebuilding: O(batch) per append
+        step (slot the new rows against the resident ``SlotState``, patch
+        ``seg`` at their positions, merge freshly claimed owners) vs the
+        O(table) full rebuild.  Returns the new slot arrays cached under
+        the live version, or None when no extendable ancestor exists
+        (then the caller falls back to ``slot_state_build``)."""
+        chain = []
+        v = t.version
+        while True:
+            got = self._slots.get((ent.slot_scan, v, ent.keys, ent.bound))
+            if got is not None and got[0] == v and got[2] is not None:
+                break
+            step = self._appends.get((ent.slot_scan, v))
+            if step is None:
+                return None
+            pv, pos = step
+            chain.append(pos)
+            v = pv
+        if not chain:
+            return None
+        akey = (ent.slot_scan, v, ent.keys, ent.bound)
+        _tag, (seg, owner, _occ, _ovf), state = self._slots[akey]
+        seg = jnp.asarray(seg)
+        owner = jnp.asarray(owner)
+        mask = t.mask()
+        for pos in reversed(chain):             # oldest append first
+            posj = jnp.asarray(pos, jnp.int32)
+            nb = int(posj.shape[0])
+            words = keyslot.key_words_for(
+                jnp.take(t.columns[k], posj, axis=0) for k in ent.keys)
+            bvalid = jnp.take(mask, posj)
+            segb, new_owner, ovf, state = keyslot.slot_ids_extend(
+                words, bvalid, state)
+            check_slot_overflow(ovf, ent.bound)  # concrete: raises
+            owner = jnp.where(
+                new_owner < nb,
+                jnp.take(posj, jnp.clip(new_owner, 0, nb - 1)),
+                owner).astype(jnp.int32)
+            if seg.shape[0] < t.capacity:        # capacity grew on append
+                seg = jnp.concatenate(
+                    [seg, jnp.full((t.capacity - seg.shape[0],),
+                                   ent.bound, jnp.int32)])
+            seg = seg.at[posj].set(segb)
+            keyslot.note_slot_extend()
+            self.stats.slot_extends += 1
+        occupied = jnp.arange(ent.bound, dtype=jnp.int32) < state.cnt
+        arrs = tuple(jax.block_until_ready(a)
+                     for a in (seg, owner, occupied, jnp.int32(0)))
+        del self._slots[akey]                    # superseded ancestor
+        self._slots[(ent.slot_scan, t.version, ent.keys, ent.bound)] = (
+            t.version, arrs, state)
+        return arrs
 
     # -- executables -------------------------------------------------------
     def _catalog_sig(self):

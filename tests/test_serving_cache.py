@@ -4,12 +4,17 @@ The contract under test (docs/serving.md):
 
 * the slot table is built exactly ONCE per (table version, key set,
   bucket) — repeated parameterized calls amortize slotting to zero;
-* a table mutation (``update_table`` with a filtered / recolumned /
-  appended table) rebuilds the slot table exactly once, FROM THE NEW
-  VERSION (spied on ``relational/keyslot.py``) — a stale read is
-  structurally impossible because slot arrays are executable *arguments*;
-* shape-compatible mutations do NOT invalidate the executable cache (no
-  retrace); capacity-changing mutations do (and must still be correct);
+* ``update_table`` is the REPLACE verb: it rebuilds the slot table
+  exactly once, FROM THE NEW VERSION (spied on
+  ``relational/keyslot.py``), and invalidates the executables of every
+  plan scanning the table — content may have changed arbitrarily, so
+  nothing derived from the old version survives.  A stale slot read is
+  structurally impossible because slot arrays are executable *arguments*
+  keyed by ``Table.version``;
+* ``append_rows`` is the APPEND verb: executables SURVIVE (no retrace
+  while rows fit the spare capacity) and the slot table EXTENDS
+  incrementally instead of rebuilding (tests/test_incremental_ingest.py
+  holds the full append/ingest battery);
 * a user-declared bound that overflows raises eagerly at the slot build;
   an inferred bound grows and revalidates instead;
 * ``REPRO_AGG_SERVE=off`` kills every cache but stays correct."""
@@ -70,26 +75,25 @@ def test_mutation_rebuilds_slots_once_from_new_version(monkeypatch):
     srv = AggServer({"T": t})
     plan = _plan()
 
-    eager_builds = []   # (version, ...) of CONCRETE (eager) probe builds
-    orig = keyslot.slot_segment_ids
+    eager_builds = []   # versions of CONCRETE (eager) probe builds
+    orig = keyslot.slot_state_build
 
-    def spy(table, keys, bucket):
+    def spy(table, keys, bucket, expand=None):
         import jax as _jax
         if not isinstance(next(iter(table.columns.values())),
                           _jax.core.Tracer):
             eager_builds.append(table.version)
-        return orig(table, keys, bucket)
+        return orig(table, keys, bucket, expand)
 
-    monkeypatch.setattr(keyslot, "slot_segment_ids", spy)
+    monkeypatch.setattr(keyslot, "slot_state_build", spy)
 
     srv.execute(plan)
     srv.execute(plan)
     assert eager_builds == [t.version]
-    traces_before = srv.stats.traces
 
-    # shape-compatible mutation: filter keeps capacity, so the compiled
-    # executable is reused — only the slot table (and the data flowing
-    # through the argument pytree) changes
+    # REPLACE: content changed arbitrarily (filter mutates the mask), so
+    # the slot table rebuilds once from the NEW version and the plan's
+    # executables are invalidated (the replace contract)
     t2 = t.filter(jnp.asarray(np.asarray(t.columns["v"]) >= 0))
     srv.update_table("T", t2)
     got = _groups(srv.execute(plan))
@@ -97,13 +101,17 @@ def test_mutation_rebuilds_slots_once_from_new_version(monkeypatch):
 
     assert eager_builds == [t.version, t2.version]   # rebuilt once, new version
     assert srv.stats.slot_builds == 2
-    assert srv.stats.traces == traces_before         # executable survived
-    # stale-read impossible: cached executable + rebuilt slots == fresh
+    # stale-read impossible: rebuilt slots + fresh executable == fresh
     assert got == _groups(execute(plan, {"T": t2}))
     assert got != _groups(execute(plan, {"T": t}))
 
 
-def test_with_column_mutation_keeps_executable():
+def test_update_table_invalidates_executables():
+    # the REPLACE verb drops every executable of every plan scanning the
+    # table — even for a shape-compatible swap the old trace may have
+    # folded stale content decisions in, so nothing derived from the old
+    # version survives (append_rows is the verb that keeps them; see
+    # tests/test_incremental_ingest.py)
     t = _table()
     srv = AggServer({"T": t})
     plan = _plan()
@@ -113,7 +121,7 @@ def test_with_column_mutation_keeps_executable():
         np.asarray(t.columns["v"]) * np.float32(2.0)))
     srv.update_table("T", t2)
     got = _groups(srv.execute(plan))
-    assert srv.stats.traces == traces                # same shapes: no retrace
+    assert srv.stats.traces == traces + 1            # replace: retrace
     assert srv.stats.slot_builds == 2                # new version: one rebuild
     assert got == _groups(execute(plan, {"T": t2}))
 
