@@ -24,19 +24,31 @@ the tile":
                             that the incremental p50 beats the
                             recompute p50 within the same artifact.
 
+Plus the overlapped ingest/query pair (docs/serving.md "Durability &
+consistency"): ``consistency="epoch"`` reads take the published epoch
+with no server lock, so a fold in flight must not stall them:
+
+  ingest_overlap_quiescent_p50     — epoch-read p50 with no writer.
+  ingest_overlap_under_ingest_p50  — epoch-read p50 while a writer
+                                     thread folds the same batch
+                                     stream; ``ci_gate.check_ingest``
+                                     bounds the ratio (a lock-coupled
+                                     read path blows far past it).
+
 Batches are pre-generated (identical streams for both models) and the
 first fold/refresh of each stream is excluded (seed/warm cost, paid
 once per residency, is not the steady state being measured).
 """
 from __future__ import annotations
 
+import threading
 import time
 
 import numpy as np
 
 from repro.relational.plan import GroupAgg, Scan
 from repro.relational.table import Table
-from repro.serve import AggServer
+from repro.serve import AggServer, ServeRequest
 
 from .util import emit
 
@@ -115,6 +127,46 @@ def run(n: int = 50_000, ngroups: int = 256, *, batches: int = 24,
          f"appends={srv.stats.appends}_"
          f"slot_extends={srv.stats.slot_extends}_"
          f"slot_builds={srv.stats.slot_builds}")
+    srv.close()
+
+    # epoch-read latency, quiescent vs under sustained ingest: epoch
+    # reads take the published epoch without the server lock, so a
+    # writer folding batches must not stall them
+    srv = AggServer(_catalog(n, ngroups, spare), guard=False)
+    req = ServeRequest(plan=plan, consistency="epoch")
+    srv.snapshot(plan).to_numpy()             # seed + publish the epoch
+    lat = []
+    for _ in range(256):
+        t0 = time.perf_counter()
+        srv.serve(req).table.to_numpy()
+        lat.append((time.perf_counter() - t0) * 1e6)
+    us_quiet = _pct(lat, 50)
+    emit("ingest_overlap_quiescent_p50", us_quiet,
+         f"epoch_reads={len(lat)}_n={n}_batch={batch_rows}")
+
+    folds0 = srv.stats.folds
+    stop = threading.Event()
+
+    def _writer():
+        try:
+            for b in _batches(batches, batch_rows, ngroups, seed=2):
+                srv.ingest("T", b)
+        finally:
+            stop.set()
+
+    wr = threading.Thread(target=_writer)
+    lat = []
+    wr.start()
+    while not stop.is_set() or len(lat) < 8:  # >=8 samples even if the
+        t0 = time.perf_counter()              # writer wins the race
+        srv.serve(req).table.to_numpy()
+        lat.append((time.perf_counter() - t0) * 1e6)
+    wr.join()
+    us_load = _pct(lat, 50)
+    emit("ingest_overlap_under_ingest_p50", us_load,
+         f"ratio_vs_quiescent={us_load / max(us_quiet, 1e-9):.2f}x_"
+         f"reads={len(lat)}_folds={srv.stats.folds - folds0}_"
+         f"batches={batches}")
     srv.close()
 
 

@@ -25,7 +25,7 @@ Rows:
   serve_agg_guarded_p50   — the same warm synchronous stream under the
                             failure guard (poison scan per launch,
                             breaker bookkeeping).  ``ci_gate.py``
-                            asserts the overhead stays under 10% of the
+                            asserts the overhead stays under 25% of the
                             cached p50.
   serve_agg_qps_1k        — 1k-request concurrent ``submit`` stream
                             (mixed parameters, 8 client threads):
@@ -119,7 +119,7 @@ def run(n: int = 8_192, ngroups: int = 256, *, uncached_reps: int = 12,
 
     # the identical warm synchronous stream with the guard on: per-launch
     # poison scan + breaker bookkeeping are the only deltas, so this row
-    # IS the guard's overhead (gated < 10% of cached p50 in ci_gate.py)
+    # IS the guard's overhead (gated < 25% of cached p50 in ci_gate.py)
     gsrv = AggServer(cat, max_batch=max_batch, batch_window_s=0.0005,
                      guard=True)
     gsrv.warmup(tile)

@@ -33,6 +33,8 @@ KNOWN = {
     "REPRO_SERVE_GUARD": "serving fault-tolerance ladder kill switch",
     "REPRO_INCR_AGG": "incremental ingest kill switch (off = ingest "
                       "appends but every snapshot recomputes)",
+    "REPRO_SERVE_CKPT": "durable checkpoint/restore kill switch (off = "
+                        "checkpoint() is a no-op, restore() recomputes)",
     "REPRO_PLAN_FUSE": "whole-plan fusion pass kill switch",
     "REPRO_JOIN_HASH": "keyslot hash-join lowering kill switch",
     "REPRO_GROUPAGG_SORTFREE": "sort-free grouped route kill switch",

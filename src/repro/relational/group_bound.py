@@ -120,16 +120,45 @@ def check_group_overflow(nseg, bound: Optional[int]):
     return None
 
 
+#: auxiliary stamp column ``poison_overflow`` adds when NO output column
+#: carries a strong sentinel (every column bool or unmarkable): False is
+#: an everyday bool value, so an all-bool result would otherwise be
+#: undetectably poisoned.  The stamp is 0.0 on a clean result and NaN on
+#: a poisoned one — a strong float column the serving detector
+#: (``serve.guard.is_poisoned``) reads like any other; the serving layer
+#: strips it before handing the result out.
+STAMP_COL = "__poison_stamp__"
+
+
+def _any_strong(cols: dict) -> bool:
+    """True when some column can carry a strong (non-bool) sentinel."""
+    for v in cols.values():
+        d = jnp.dtype(v.dtype)
+        if d != jnp.bool_ and poison_sentinel(d) is not None:
+            return True
+    return False
+
+
 def poison_overflow(cols: dict, ok) -> dict:
     """Poison every output column where the traced overflow guard failed:
     NaN for floating columns; for integers — which cannot hold NaN — the
     dtype minimum if signed, the dtype maximum if unsigned (whose minimum
     is 0, indistinguishable from a real aggregate); False for booleans.
-    ``ok=None`` (no runtime guard) is the identity."""
+    ``ok=None`` (no runtime guard) is the identity.
+
+    When no column can carry a strong sentinel (every output bool), an
+    auxiliary f32 ``STAMP_COL`` is added — 0.0 clean, NaN poisoned — so
+    the detector's all-or-none scan still has one strong column to read
+    (the bool-only blind spot fix; the serving layer strips the stamp
+    after its scan)."""
     if ok is None:
         return cols
     out = {}
     for k, v in cols.items():
         bad = poison_sentinel(v.dtype)
         out[k] = v if bad is None else jnp.where(ok, v, bad)
+    if cols and not _any_strong(cols):
+        shape = next(iter(cols.values())).shape
+        out[STAMP_COL] = jnp.where(ok, jnp.zeros(shape, jnp.float32),
+                                   jnp.full(shape, jnp.nan, jnp.float32))
     return out

@@ -54,6 +54,16 @@ SITES = (
     "dispatcher_stall",    # agg_server dispatcher loop: sleep 0.25s once
                            #   (lets deadline/queue tests win races
                            #   deterministically)
+    "fold_publish",        # incremental.ResidentAgg: crash between
+                           #   building the successor epoch and the
+                           #   atomic reference swap — the published
+                           #   epoch must stay the pre-fold one
+    "checkpoint_write",    # serve.checkpoint: truncate the payload file
+                           #   after writing (torn write; the manifest
+                           #   checksum must catch it at restore)
+    "restore_corrupt",     # serve.checkpoint: flip a byte of the payload
+                           #   as it is read back (bit rot; checksum
+                           #   verification must refuse the restore)
     "selftest",            # consumed only by the chaos battery's
                            #   env-config liveness test
 )

@@ -2,19 +2,23 @@
 and the aggregate-serving layer (``agg_server``) — compiled-plan +
 slot-table caching with batched concurrent parameterized queries, under
 the ``guard`` failure contract (typed per-request errors, poison
-detection, deadlines/backpressure, degradation circuit breaker)."""
+detection, deadlines/backpressure, degradation circuit breaker),
+epoch-published resident incremental aggregates (``incremental``), and
+durable resident-state checkpoints (``checkpoint``)."""
 from .agg_server import (AggServer, ServeRequest, ServeResult, ServeStats,
                          guard_enabled, serving_enabled)
-from .guard import (BackendFailure, BoundOverflow, CircuitBreaker,
-                    DeadlineExceeded, GuardStats, PoisonedResult, QueueFull,
-                    ServeError, ServerClosed, SlotTableStale, is_poisoned)
-from .incremental import IncrementalIneligible, incremental_enabled
+from .guard import (BackendFailure, BoundOverflow, CheckpointCorrupt,
+                    CircuitBreaker, DeadlineExceeded, GuardStats,
+                    PoisonedResult, QueueFull, ServeError, ServerClosed,
+                    SlotTableStale, is_poisoned, strip_poison_stamp)
+from .incremental import Epoch, IncrementalIneligible, incremental_enabled
 
 __all__ = [
     "AggServer", "ServeStats", "ServeRequest", "ServeResult",
     "serving_enabled", "guard_enabled",
-    "IncrementalIneligible", "incremental_enabled",
+    "Epoch", "IncrementalIneligible", "incremental_enabled",
     "ServeError", "BoundOverflow", "SlotTableStale", "DeadlineExceeded",
     "QueueFull", "PoisonedResult", "BackendFailure", "ServerClosed",
-    "GuardStats", "CircuitBreaker", "is_poisoned",
+    "CheckpointCorrupt", "GuardStats", "CircuitBreaker", "is_poisoned",
+    "strip_poison_stamp",
 ]

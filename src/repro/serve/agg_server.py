@@ -89,7 +89,8 @@ from repro.reliability import degrade, faults
 from . import incremental
 from .guard import (BackendFailure, BoundOverflow, CircuitBreaker,
                     DeadlineExceeded, GuardStats, PoisonedResult, QueueFull,
-                    ServeError, ServerClosed, SlotTableStale, is_poisoned)
+                    ServeError, ServerClosed, SlotTableStale, is_poisoned,
+                    strip_poison_stamp)
 from .incremental import IncrementalIneligible
 
 __all__ = ["AggServer", "ServeStats", "ServeRequest", "ServeResult",
@@ -141,6 +142,9 @@ class ServeStats:
     ingests: int = 0
     folds: int = 0
     snapshots: int = 0
+    epoch_reads: int = 0    # lock-free published-epoch decodes
+    checkpoints: int = 0    # durable checkpoints written
+    restores: int = 0       # durable checkpoints restored
 
 
 @dataclass(frozen=True)
@@ -158,9 +162,15 @@ class ServeRequest:
                         catalog tables; ``"snapshot"``: serve a grouped
                         plan from its resident incremental moment state
                         (``AggServer.snapshot`` — O(num_segments)
-                        finalize, no history re-read), falling back to a
-                        full compute when the plan is ineligible or
-                        ``REPRO_INCR_AGG=off``.
+                        finalize, no history re-read), catching up on
+                        pending appends first; ``"epoch"``: decode the
+                        resident's currently *published* epoch with NO
+                        server lock — never blocks on an in-flight fold
+                        or ``update_table``, may trail the newest append
+                        by the fold in flight (the result's ``version``
+                        is the epoch watermark actually served).  Both
+                        fall back to a full compute when the plan is
+                        ineligible or ``REPRO_INCR_AGG=off``.
     """
     plan: Plan
     params: Optional[Mapping[str, Any]] = None
@@ -233,6 +243,11 @@ class AggServer:
         self._breaker_cooldown = float(breaker_cooldown_s)
         self._breaker_clock = breaker_clock or time.monotonic
         self._lock = threading.RLock()
+        #: dedicated small mutex for counter mutation and stat/breaker
+        #: snapshots — ``describe()`` and ``ServeStats`` reads never
+        #: contend with a fold holding ``_lock``.  Lock order where both
+        #: are held: ``_lock`` then ``_stats_lock``, never the reverse.
+        self._stats_lock = threading.Lock()
         self._cv = threading.Condition()
         self._plans: Dict[int, _PlanEntry] = {}
         #: (table name, table version, key names, bucket) →
@@ -250,10 +265,32 @@ class AggServer:
         self._residents: Dict[int, incremental.ResidentAgg] = {}
         self._pending: Dict[Any, tuple] = {}
         self._breakers: Dict[Any, CircuitBreaker] = {}
+        #: resident-state payloads recovered by ``restore`` awaiting a
+        #: structurally matching plan: fingerprint → rehydration record
+        #: (serve/checkpoint.py); consumed at first ``snapshot``
+        self._restored: Dict[str, dict] = {}
+        #: synthetic version tokens for rehydrated watermarks — negative
+        #: (live ``Table.version`` tokens are positive, so they never
+        #: collide), one per rehydration
+        self._synth_version = 0
         self._dispatcher: Optional[threading.Thread] = None
         self._closed = False
         self.stats = ServeStats()
         self.guard_stats = GuardStats()
+
+    # -- stats plumbing ----------------------------------------------------
+    def _bump(self, name: str, k: int = 1) -> None:
+        with self._stats_lock:
+            setattr(self.stats, name, getattr(self.stats, name) + k)
+
+    def _gbump(self, name: str, k: int = 1) -> None:
+        with self._stats_lock:
+            setattr(self.guard_stats, name,
+                    getattr(self.guard_stats, name) + k)
+
+    def _stats_copy(self) -> ServeStats:
+        with self._stats_lock:
+            return copy.copy(self.stats)
 
     # -- catalog writes: the typed mutation API ----------------------------
     #
@@ -279,6 +316,7 @@ class AggServer:
         mutations — they keep the caches warm; an append-shaped call
         here draws a ``DeprecationWarning`` pointing at them."""
         with self._lock:
+            self._check_open()
             old = self._catalog.get(name)
             if old is not None and self._append_shaped(old, table):
                 warnings.warn(
@@ -308,6 +346,7 @@ class AggServer:
         incremental aggregates catch up at the next snapshot.
         ``group_bound`` hints survive (unlike ``relational.concat``)."""
         with self._lock:
+            self._check_open()
             t = self._catalog[name]
             prev_version = t.version
             cols, nb = self._coerce_rows(t, rows)
@@ -330,7 +369,7 @@ class AggServer:
             self._catalog[name] = t2
             self._appends[(name, t2.version)] = (prev_version, pos)
             self._trim_appends(name)
-            self.stats.appends += 1
+            self._bump("appends")
             return t2.version
 
     def ingest(self, name: str, batch) -> int:
@@ -344,11 +383,15 @@ class AggServer:
         ``BoundOverflow`` when declared); a failed fold NEVER corrupts
         the resident state (folds commit atomically), and the append
         itself always lands.  ``REPRO_INCR_AGG=off`` reduces this to
-        ``append_rows`` (residents drop; snapshots recompute)."""
+        ``append_rows`` (residents drop; snapshots recompute).
+        Raises typed ``ServerClosed`` after ``close()`` — a fold already
+        holding the lock when ``close`` lands completes and commits; it
+        is never torn down mid-commit."""
         with self._lock:
+            self._check_open()
             before = self._catalog[name].version
             version = self.append_rows(name, batch)
-            self.stats.ingests += 1
+            self._bump("ingests")
             if not incremental.incremental_enabled() \
                     or not serving_enabled():
                 for pid, res in list(self._residents.items()):
@@ -364,6 +407,14 @@ class AggServer:
             return self._catalog[name]
 
     # -- mutation plumbing -------------------------------------------------
+    def _check_open(self) -> None:
+        """Typed refusal for mutation verbs racing ``close()``: a verb
+        that acquired the server lock before the close commits in full
+        (fold-and-commit is atomic under the lock); one that arrives
+        after loses with ``ServerClosed``, never a half-commit."""
+        if self._closed:
+            raise ServerClosed("AggServer is closed")
+
     def _invalidate(self, name: str) -> None:
         """Full invalidation for a REPLACE write on ``name``."""
         self._slots = {k: v for k, v in self._slots.items()
@@ -477,20 +528,29 @@ class AggServer:
 
     # -- introspection -----------------------------------------------------
     def describe(self, plan: Plan) -> dict:
-        """Serving decisions for a plan (tests/bench introspection)."""
-        with self._lock:
-            ent = self._prepare(plan)
-            return {
-                "max_groups": getattr(ent.plan, "max_groups", None),
-                "bound": ent.bound,
-                "slot_scan": ent.slot_scan,
-                "inferred": ent.inferred,
-                "executables": len(ent.execs),
-                "guard": self._guard,
-                "breakers": {psig: br.state
-                             for (pid, psig), br in self._breakers.items()
-                             if pid == id(ent.submitted)},
-            }
+        """Serving decisions for a plan (tests/bench introspection).
+        Lock-free for an already-prepared plan: the entry lookup and the
+        counter/breaker snapshot take only the small stats mutex, so a
+        long fold or ``update_table`` holding the server lock never
+        blocks this read.  An unprepared plan pays one locked
+        ``_prepare`` (its first ``serve`` would have paid it anyway)."""
+        ent = self._plans.get(id(plan))
+        if ent is None:
+            with self._lock:
+                ent = self._prepare(plan)
+        with self._stats_lock:
+            breakers = {psig: br.state
+                        for (pid, psig), br in self._breakers.items()
+                        if pid == id(ent.submitted)}
+        return {
+            "max_groups": getattr(ent.plan, "max_groups", None),
+            "bound": ent.bound,
+            "slot_scan": ent.slot_scan,
+            "inferred": ent.inferred,
+            "executables": len(ent.execs),
+            "guard": self._guard,
+            "breakers": breakers,
+        }
 
     # -- the typed request path --------------------------------------------
     def serve(self, request: ServeRequest) -> ServeResult:
@@ -502,10 +562,13 @@ class AggServer:
         and ineligible plans fall back to a latest compute.  Deadlines
         apply to QUEUED requests only, i.e. to ``serve_async``."""
         self._check_consistency(request)
-        if request.consistency == "snapshot" and not request.params:
-            table = self.snapshot(request.plan)
-        else:
-            table = self._execute(request.plan, request.params)
+        if request.consistency in ("snapshot", "epoch") \
+                and not request.params:
+            table, version = self._snapshot_versioned(
+                request.plan, request.consistency)
+            return ServeResult(table=table, version=version,
+                               stats=self._stats_copy())
+        table = self._execute(request.plan, request.params)
         return self._result(request, table)
 
     def serve_async(self, request: ServeRequest) -> Future:
@@ -516,7 +579,8 @@ class AggServer:
         consistency requests resolve inline (the resident finalize is
         O(num_segments) — there is nothing to batch)."""
         self._check_consistency(request)
-        if request.consistency == "snapshot" and not request.params:
+        if request.consistency in ("snapshot", "epoch") \
+                and not request.params:
             fut: Future = Future()
             try:
                 fut.set_result(self.serve(request))
@@ -542,19 +606,24 @@ class AggServer:
 
     @staticmethod
     def _check_consistency(request: ServeRequest) -> None:
-        if request.consistency not in ("latest", "snapshot"):
+        if request.consistency not in ("latest", "snapshot", "epoch"):
             raise ValueError(
                 f"unknown consistency {request.consistency!r} "
-                "(expected 'latest' or 'snapshot')")
+                "(expected 'latest', 'snapshot' or 'epoch')")
+
+    def _live_version(self, plan: Plan) -> Optional[int]:
+        """The plan's slot-scan catalog version (None when the plan has
+        no slot scan).  Lock-free: dict reads are atomic and the result
+        is advisory (a concurrent writer may already have moved on)."""
+        ent = self._plans.get(id(plan))
+        name = ent.slot_scan if ent is not None else None
+        t = self._catalog.get(name) if name is not None else None
+        return t.version if t is not None else None
 
     def _result(self, request: ServeRequest, table: Table) -> ServeResult:
-        with self._lock:
-            ent = self._plans.get(id(request.plan))
-            name = ent.slot_scan if ent is not None else None
-            version = (self._catalog[name].version
-                       if name in self._catalog else None)
-            stats = copy.copy(self.stats)
-        return ServeResult(table=table, version=version, stats=stats)
+        return ServeResult(table=table,
+                           version=self._live_version(request.plan),
+                           stats=self._stats_copy())
 
     # -- synchronous path (back-compat wrapper) ----------------------------
     def execute(self, plan: Plan, params: Optional[Mapping[str, Any]] = None
@@ -581,19 +650,53 @@ class AggServer:
         never an O(table) re-read.  First call seeds the residency (one
         full pass); later calls catch up on any ``append_rows`` the
         table took since the last fold (via the version chain) and
-        finalize.  Ineligible plans (non-GroupAgg roots, unfused ops,
-        no dense bound, ``REPRO_INCR_AGG=off``) fall back to a plain
-        cached compute — same result, full cost."""
+        finalize.  An up-to-date residency serves LOCK-FREE from its
+        published epoch — a long fold or ``update_table`` in another
+        thread never blocks it.  Ineligible plans (non-GroupAgg roots,
+        unfused ops, no dense bound, ``REPRO_INCR_AGG=off``) fall back
+        to a plain cached compute — same result, full cost."""
+        return self._snapshot_versioned(plan, "snapshot")[0]
+
+    def _snapshot_versioned(self, plan: Plan, consistency: str
+                            ) -> Tuple[Table, Optional[int]]:
+        """(result table, served watermark version).
+
+        Fast path — NO server lock: capture the resident's published
+        epoch (one atomic reference read; the epoch is one immutable
+        object, so the decode can never see a torn mix of pre-/post-fold
+        state).  ``"snapshot"`` takes it only when the epoch is at the
+        live catalog version; ``"epoch"`` takes whatever epoch is
+        published (pre-fold or post-fold — the returned version says
+        which), so it never waits on a fold in flight.
+
+        Slow path — under the lock: seed/rehydrate the residency or
+        fold the pending append-chain suffix, then decode."""
         if not serving_enabled() or not incremental.incremental_enabled():
-            return self._execute(plan)
+            return self._execute(plan), self._live_version(plan)
+        self._bump("snapshots")
+        res = self._residents.get(id(plan))
+        if res is not None:
+            ep = res.current_epoch()
+            if ep is not None:
+                live = self._catalog.get(res.name)
+                fresh = live is not None and ep.version == live.version
+                if fresh or consistency == "epoch":
+                    self._bump("epoch_reads")
+                    out = res.snapshot_epoch(ep, live if fresh else None)
+                    if self._guard and is_poisoned(out):
+                        raise PoisonedResult(
+                            "resident snapshot carries the poison stamp")
+                    return strip_poison_stamp(out), ep.version
         with self._lock:
-            self.stats.snapshots += 1
             ent = self._prepare(plan)
             res = self._residents.get(id(plan))
             if res is None:
-                res = self._admit_resident(ent)
+                res = self._rehydrate_resident(ent)
                 if res is None:
-                    return self._launch(ent, self._psig({}), [{}])[0]
+                    res = self._admit_resident(ent)
+                if res is None:
+                    out = self._launch(ent, self._psig({}), [{}])[0]
+                    return out, self._live_version(plan)
                 self._residents[id(plan)] = res
             t = self._catalog[res.name]
             if res.version != t.version:
@@ -604,17 +707,31 @@ class AggServer:
                         self._seed_resident(res)
                     elif len(pos):
                         self._guarded_fold(res, t, pos)
-                        self.stats.folds += 1
+                        self._bump("folds")
                     else:
                         res.version = t.version
                 except IncrementalIneligible:
                     del self._residents[id(plan)]
-                    return self._launch(ent, self._psig({}), [{}])[0]
+                    out = self._launch(ent, self._psig({}), [{}])[0]
+                    return out, self._live_version(plan)
             out = res.snapshot(self._catalog[res.name])
-            if self._guard and is_poisoned(out):
-                raise PoisonedResult(
-                    "resident snapshot carries the poison stamp")
-            return out
+            version = res.version
+        if self._guard and is_poisoned(out):
+            raise PoisonedResult(
+                "resident snapshot carries the poison stamp")
+        return strip_poison_stamp(out), version
+
+    def _rehydrate_resident(self, ent: _PlanEntry):
+        """A residency recovered from a durable checkpoint for a
+        structurally matching plan, or None (serve/checkpoint.py);
+        consumes the stored payload on success.  The recovered epoch
+        sits at the checkpoint watermark — the normal version-chain
+        catch-up right after folds the append suffix through the
+        existing fold path."""
+        if not self._restored:
+            return None
+        from . import checkpoint
+        return checkpoint.rehydrate(self, ent)
 
     def _admit_resident(self, ent: _PlanEntry):
         """Admit + seed a residency for a prepared plan entry, or None
@@ -668,7 +785,7 @@ class AggServer:
                     self._seed_resident(res)
                 elif len(pos):
                     self._guarded_fold(res, t, pos)
-                    self.stats.folds += 1
+                    self._bump("folds")
                 else:
                     res.version = t.version
             except IncrementalIneligible:
@@ -706,15 +823,54 @@ class AggServer:
             except Exception as e:      # noqa: BLE001 — ladder absorbs
                 if not self._guard:
                     raise
-                self.guard_stats.backend_failures += 1
+                self._gbump("backend_failures")
                 try:
                     res.fold(t, pos, backend="jnp")
-                    self.guard_stats.degraded_launches += 1
+                    self._gbump("degraded_launches")
                     return
                 except Exception as e2:  # noqa: BLE001
                     raise BackendFailure(
                         "incremental fold failed and the degraded (jnp) "
                         "fold failed too") from e2
+
+    # -- durable checkpoints -----------------------------------------------
+    def checkpoint(self, directory: str) -> Optional[str]:
+        """Write a durable checkpoint of every resident incremental
+        aggregate (its published epoch: moments, slot table, owner,
+        payloads, watermark) to ``directory`` — a versioned, checksummed
+        manifest plus one payload file, written temp-then-rename so a
+        crash mid-write never leaves a file a later ``restore`` could
+        mistake for complete.  Returns the manifest path, or None when
+        there is nothing resident to persist or the kill switch
+        (``REPRO_SERVE_CKPT=off``) / the serving layer is off."""
+        if not flags.enabled("REPRO_SERVE_CKPT") or not serving_enabled():
+            return None
+        from . import checkpoint as _ckpt
+        with self._lock:
+            path = _ckpt.write_checkpoint(self, directory)
+        if path is not None:
+            self._bump("checkpoints")
+        return path
+
+    def restore(self, directory: str) -> int:
+        """Load the newest checkpoint in ``directory`` and stage its
+        resident payloads for rehydration; returns the number staged (0
+        when the directory holds no checkpoint or the kill switch is
+        off).  Verification is strict: a manifest or payload that fails
+        its checksum raises typed ``CheckpointCorrupt`` and installs
+        NOTHING — the server keeps serving from live state (recompute),
+        never from partially-read durable state.  A staged payload is
+        consumed at the first ``snapshot`` of a structurally matching
+        plan; any rows appended past the checkpoint watermark replay
+        through the normal fold path (the version chain)."""
+        if not flags.enabled("REPRO_SERVE_CKPT") or not serving_enabled():
+            return 0
+        from . import checkpoint as _ckpt
+        with self._lock:
+            n = _ckpt.read_checkpoint(self, directory)
+        if n:
+            self._bump("restores")
+        return n
 
     def warmup(self, plan: Plan,
                params: Optional[Mapping[str, Any]] = None,
@@ -773,7 +929,7 @@ class AggServer:
             if self._guard:
                 depth = sum(len(r) for _, r in self._pending.values())
                 if depth >= self._max_queue:
-                    self.guard_stats.queue_rejects += 1
+                    self._gbump("queue_rejects")
                     fut.set_exception(QueueFull(
                         f"admission queue at capacity ({self._max_queue} "
                         f"requests) — retry with backoff or raise max_queue"))
@@ -832,7 +988,7 @@ class AggServer:
             self._dispatch_loop()
         except BaseException:   # noqa: BLE001 — supervised: respawn
             with self._cv:
-                self.guard_stats.dispatcher_restarts += 1
+                self._gbump("dispatcher_restarts")
                 t = threading.Thread(
                     target=self._dispatch_main, name="agg-serve-dispatch",
                     daemon=True)
@@ -873,7 +1029,7 @@ class AggServer:
         live = []
         for params, fut, dl in reqs:
             if dl is not None and now > dl:
-                self.guard_stats.deadline_shed += 1
+                self._gbump("deadline_shed")
                 if not fut.done():
                     fut.set_exception(DeadlineExceeded(
                         "request deadline passed while queued"))
@@ -957,14 +1113,14 @@ class AggServer:
             if got is not None:
                 tag, arrs, _state = got
                 if tag == t.version:
-                    self.stats.slot_hits += 1
+                    self._bump("slot_hits")
                     return arrs
                 # the entry claims a version the catalog no longer holds —
                 # structurally impossible (the key carries the version)
                 # without corruption/injection.  Never serve it: drop and
                 # rebuild, bounded, then surface SlotTableStale.
                 del self._slots[key]
-                self.guard_stats.stale_rebuilds += 1
+                self._gbump("stale_rebuilds")
                 stale += 1
                 if stale > _MAX_STALE_REBUILDS:
                     raise SlotTableStale(
@@ -981,7 +1137,7 @@ class AggServer:
                 occupied = jnp.arange(ent.bound, dtype=jnp.int32) < state.cnt
                 arrs = tuple(jax.block_until_ready(a)
                              for a in (seg, owner, occupied, overflowed))
-                self.stats.slot_builds += 1
+                self._bump("slot_builds")
                 tag = t.version - 1 if faults.fire("slot_stale") \
                     else t.version
                 self._slots[key] = (tag, arrs, state)
@@ -1051,7 +1207,7 @@ class AggServer:
                                    ent.bound, jnp.int32)])
             seg = seg.at[posj].set(segb)
             keyslot.note_slot_extend()
-            self.stats.slot_extends += 1
+            self._bump("slot_extends")
         occupied = jnp.arange(ent.bound, dtype=jnp.int32) < state.cnt
         arrs = tuple(jax.block_until_ready(a)
                      for a in (seg, owner, occupied, jnp.int32(0)))
@@ -1121,7 +1277,10 @@ class AggServer:
             outs.extend(self._guarded_bucket(ent, psig, chunk)
                         if self._guard
                         else self._launch_bucket(ent, psig, chunk))
-        return outs
+        # the auxiliary bool-only poison stamp is serving-internal: the
+        # guarded scan above has read it; callers get their own columns
+        return [strip_poison_stamp(o) if isinstance(o, Table) else o
+                for o in outs]
 
     def _launch_bucket(self, ent: _PlanEntry, psig, plist,
                        degraded: bool = False):
@@ -1132,10 +1291,10 @@ class AggServer:
             slots = got if got is not None else ()
         nb = 1 if not psig else 1 << (n - 1).bit_length()
         fn = self._executable(ent, psig, nb, degraded)
-        self.stats.requests += n
-        self.stats.batches += 1
+        self._bump("requests", n)
+        self._bump("batches")
         if degraded:
-            self.guard_stats.degraded_launches += 1
+            self._gbump("degraded_launches")
         if not degraded:
             faults.fail("backend_exc")
         if not psig:
@@ -1153,9 +1312,13 @@ class AggServer:
         key = (id(ent.submitted), psig)
         br = self._breakers.get(key)
         if br is None:
-            br = self._breakers[key] = CircuitBreaker(
+            br = CircuitBreaker(
                 self._breaker_threshold, self._breaker_cooldown,
                 self._breaker_clock)
+            # insertion under the stats mutex: describe() iterates the
+            # breaker dict lock-free of the big server lock
+            with self._stats_lock:
+                br = self._breakers.setdefault(key, br)
         return br
 
     def _guarded_bucket(self, ent: _PlanEntry, psig, plist):
@@ -1178,7 +1341,7 @@ class AggServer:
                 outs = self._launch_bucket(ent, psig, plist,
                                            degraded=degraded)
                 if not degraded and br.record_success():
-                    self.guard_stats.breaker_recoveries += 1
+                    self._gbump("breaker_recoveries")
             except GroupBoundOverflow as e:
                 raise BoundOverflow(str(e)) from e
             except ServeError:
@@ -1187,9 +1350,9 @@ class AggServer:
                 if degraded:
                     raise BackendFailure(
                         "degraded (jnp) launch failed") from e
-                self.guard_stats.backend_failures += 1
+                self._gbump("backend_failures")
                 if br.record_failure():
-                    self.guard_stats.breaker_trips += 1
+                    self._gbump("breaker_trips")
                 try:
                     outs = self._launch_bucket(ent, psig, plist,
                                                degraded=True)
@@ -1211,7 +1374,7 @@ class AggServer:
                 poisoned = poisoned or seen[id(out)]
             if not poisoned:
                 return outs
-            self.guard_stats.poisoned += 1
+            self._gbump("poisoned")
             if (not ent.inferred or ent.bound is None
                     or attempts >= _MAX_POISON_RETRIES):
                 raise PoisonedResult(
@@ -1221,7 +1384,7 @@ class AggServer:
                     "declaration")
             # inferred bound: double, rebuild, relaunch (bounded)
             attempts += 1
-            self.guard_stats.poison_retries += 1
+            self._gbump("poison_retries")
             time.sleep(0.001 * attempts)    # brief rebuild backoff
             self._grow_bound(ent)
 

@@ -37,7 +37,8 @@ import numpy as np
 __all__ = [
     "ServeError", "BoundOverflow", "SlotTableStale", "DeadlineExceeded",
     "QueueFull", "PoisonedResult", "BackendFailure", "ServerClosed",
-    "is_poisoned", "CircuitBreaker", "GuardStats",
+    "CheckpointCorrupt", "is_poisoned", "strip_poison_stamp",
+    "CircuitBreaker", "GuardStats",
 ]
 
 
@@ -96,6 +97,18 @@ class ServerClosed(ServeError, RuntimeError):
     the pre-guard ``submit``-after-close contract."""
 
 
+class CheckpointCorrupt(ServeError):
+    """A checkpoint manifest or payload failed checksum / format
+    verification at restore time (torn write, bit rot, truncation).
+    The restore installs NOTHING — the server keeps serving from live
+    state (recompute), never from partially-read durable state.  The
+    ``path`` attribute names the offending file."""
+
+    def __init__(self, msg: str, path=None):
+        super().__init__(msg)
+        self.path = path
+
+
 # ---------------------------------------------------------------------------
 # Poison detection
 # ---------------------------------------------------------------------------
@@ -134,6 +147,19 @@ def is_poisoned(table) -> bool:
             return False
         strong = True
     return strong
+
+
+def strip_poison_stamp(table):
+    """Drop the auxiliary ``group_bound.STAMP_COL`` from a result table
+    (identity when absent).  The stamp exists only so the bool-only
+    blind spot is detectable — the caller sees the columns they asked
+    for; the serving layer applies this AFTER its poison scan."""
+    from repro.relational.group_bound import STAMP_COL
+    if STAMP_COL not in table.columns:
+        return table
+    from repro.relational.table import Table
+    cols = {k: v for k, v in table.columns.items() if k != STAMP_COL}
+    return Table(cols, table.valid, table.group_bound)
 
 
 # ---------------------------------------------------------------------------

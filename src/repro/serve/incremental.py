@@ -45,9 +45,23 @@ payloads, and representatives scatter across it over identity fills.
 
 ``snapshot`` finalizes the resident tensor to a result ``Table`` with
 the exact decode of ``engine._group_agg_fused`` — no history re-read.
+
+**Epoch publication.**  All resident state lives in ONE immutable
+``Epoch`` (moments, ``SlotState``, owner, payloads, the watermark table
+and its version, a monotone epoch counter).  ``seed``/``fold``/``grow``
+build the complete successor epoch first and commit it with a single
+reference assignment — atomic under the GIL — so a concurrent reader
+that captures ``current_epoch()`` always decodes a pre-commit or
+post-commit generation, never a torn mix, WITHOUT any lock.  The
+``fold_publish`` fault site fires between build and swap (modeling a
+crash there): the published epoch stays the pre-fold one.  Invariants
+(checked by tests): ``epoch_id`` increases by exactly 1 per commit, and
+the ``version`` watermark never moves backwards.
 """
 from __future__ import annotations
 
+import dataclasses
+from dataclasses import dataclass
 from typing import Dict, List, Mapping, Optional, Tuple
 
 import jax
@@ -69,8 +83,10 @@ from repro.relational.keyslot import (check_slot_overflow, fresh_slot_state,
                                       sortfree_result)
 from repro.relational.plan import GroupAgg, Plan, Scan
 from repro.relational.table import Table
+from repro.reliability import faults
 
-__all__ = ["IncrementalIneligible", "ResidentAgg", "incremental_enabled"]
+__all__ = ["Epoch", "IncrementalIneligible", "ResidentAgg",
+           "incremental_enabled"]
 
 _ARG_OPS = ("argmin", "argmax")
 _FUSED_OPS = ("sum", "min", "max", "count", "mean", "argmin", "argmax")
@@ -91,6 +107,27 @@ class IncrementalIneligible(RuntimeError):
     """The resident state can no longer serve this plan incrementally
     (capacity outgrew an f32-exactness gate, or the bucket hit the row
     capacity); the server drops the residency and snapshots recompute."""
+
+
+@dataclass(frozen=True)
+class Epoch:
+    """One published generation of resident state — IMMUTABLE.  A reader
+    that captured this object can decode a complete, internally
+    consistent snapshot at ``version`` with no further synchronization:
+    every field was built before the epoch was published, and commits
+    replace the whole object, never a field.  ``table`` is the catalog
+    table the epoch folded to (append-only successors keep its valid
+    rows bit-identical, so decoding against it is exact at the
+    watermark)."""
+    state: object                       # keyslot.SlotState (never mutated)
+    moments: jax.Array                  # (C, nrows, bound + 1)
+    owner: jax.Array                    # (bound,) representative positions
+    payloads: Mapping[str, jax.Array]   # arg agg name → (bound + 1,)
+    bound: int                          # dense bucket the arrays are sized by
+    version: int                        # table-version watermark folded to
+    epoch_id: int                       # +1 per commit (seed/fold/grow)
+    folds: int                          # committed folds since seed
+    table: Table                        # catalog table AT the watermark
 
 
 def _backend() -> Optional[str]:
@@ -147,17 +184,62 @@ class ResidentAgg:
             tuple(tuple(sorted(s)) for s in ms),
             max(1, len(self.value_cols)))
         self.nrows = moment_rows(self.norm)
-        # resident arrays (set by seed)
-        self.state = None              # keyslot.SlotState
-        self.moments: Optional[jax.Array] = None   # (C, nrows, bound + 1)
-        self.owner: Optional[jax.Array] = None     # (bound,) table positions
-        self.payloads: Dict[str, jax.Array] = {}   # arg agg → (bound + 1,)
-        self.version: Optional[int] = None         # table version folded to
-        self.folds = 0
+        #: the ONE mutable cell: the currently published epoch (None
+        #: before seed).  Writes are single reference assignments —
+        #: atomic under the GIL — done only by seed/fold/grow/the
+        #: version setter; readers capture it once (``current_epoch``)
+        self._epoch: Optional[Epoch] = None
         # the local fold math jits once per (batch shape, bucket) — a
         # sustained ingest stream pays kernel time, not eager dispatch
         self._fold_jit = jax.jit(self._fold_math,
                                  static_argnames=("backend",))
+
+    # -- epoch accessors ---------------------------------------------------
+    def current_epoch(self) -> Optional[Epoch]:
+        """The published epoch — capture ONCE and read only its fields;
+        a second call may already observe a successor."""
+        return self._epoch
+
+    @property
+    def state(self):
+        ep = self._epoch
+        return None if ep is None else ep.state
+
+    @property
+    def moments(self) -> Optional[jax.Array]:
+        ep = self._epoch
+        return None if ep is None else ep.moments
+
+    @property
+    def owner(self) -> Optional[jax.Array]:
+        ep = self._epoch
+        return None if ep is None else ep.owner
+
+    @property
+    def payloads(self) -> Dict[str, jax.Array]:
+        ep = self._epoch
+        return {} if ep is None else dict(ep.payloads)
+
+    @property
+    def folds(self) -> int:
+        ep = self._epoch
+        return 0 if ep is None else ep.folds
+
+    @property
+    def version(self) -> Optional[int]:
+        ep = self._epoch
+        return None if ep is None else ep.version
+
+    @version.setter
+    def version(self, v: int) -> None:
+        """Advance the watermark without changing state (an append chain
+        that contributed zero rows) — still a full epoch commit, so the
+        epoch-id invariant keeps counting."""
+        ep = self._epoch
+        if ep is None or ep.version == v:
+            return
+        self._epoch = dataclasses.replace(ep, version=v,
+                                          epoch_id=ep.epoch_id + 1)
 
     # -- admission ---------------------------------------------------------
     @classmethod
@@ -310,10 +392,13 @@ class ResidentAgg:
                 got, jnp.take(pv, jnp.clip(pick, 0, cap - 1)),
                 jnp.zeros((), pv.dtype))
         jax.block_until_ready((fused, owner))
-        self.state, self.moments, self.owner = state, fused, owner
-        self.payloads = payloads
-        self.version = table.version
-        self.folds = 0
+        prev = self._epoch
+        ep = Epoch(state=state, moments=fused, owner=owner,
+                   payloads=payloads, bound=self.bound,
+                   version=table.version,
+                   epoch_id=1 if prev is None else prev.epoch_id + 1,
+                   folds=0, table=table)
+        self._epoch = ep        # the single atomic publication
 
     def fold(self, table: Table, positions, *,
              backend: Optional[str] = None) -> None:
@@ -324,10 +409,14 @@ class ResidentAgg:
         the degraded (jnp) retry of the serving guard."""
         cap = table.capacity
         self._check_caps(cap)
+        ep = self._epoch        # captured ONCE: the pre-fold generation
         pos = jnp.asarray(np.asarray(positions), jnp.int32)
         nb = int(pos.shape[0])
         if nb == 0:
-            self.version = table.version
+            if ep is not None and ep.version != table.version:
+                self._epoch = dataclasses.replace(
+                    ep, version=table.version, epoch_id=ep.epoch_id + 1,
+                    table=table)
             return
         be = backend or self.backend
         bcols = {c: jnp.take(table.columns[c], pos)
@@ -335,7 +424,7 @@ class ResidentAgg:
         bvalid = jnp.ones((nb,), bool)
         words = key_words_for(bcols[k] for k in self.keys)
         seg, new_owner, overflowed, new_state = slot_ids_extend(
-            words, bvalid, self.state)
+            words, bvalid, ep.state)
         check_slot_overflow(int(overflowed), self.bound)   # concrete: raises
         vals_b = self._vals(bcols, nb)
         arg_names = [name for name, *_rest in self._arg_aggs()]
@@ -352,7 +441,7 @@ class ResidentAgg:
                 moments=self.norm, payloads=specs)
             batch_pick = {name: picks[j][0] for j, (name, *_rest)
                           in enumerate(self._arg_aggs())}
-            merged = fold_moments(self.moments, batch_moments,
+            merged = fold_moments(ep.moments, batch_moments,
                                   moments=self.norm)
             payload_vals = []
             for name, minimize, i, _pc in self._arg_aggs():
@@ -360,29 +449,35 @@ class ResidentAgg:
                 # positions transition invalid→valid exactly once, so a
                 # batch position can never equal a resident index value:
                 # inequality IS "the batch row won this slot"
-                wins = merged[i, row] != self.moments[i, row]
-                p = self.payloads[name]
+                wins = merged[i, row] != ep.moments[i, row]
+                p = ep.payloads[name]
                 payload_vals.append(jnp.where(
                     wins, batch_pick[name].astype(p.dtype), p))
             claimed = new_owner < nb
             owner = jnp.where(claimed,
                               jnp.take(pos,
                                        jnp.clip(new_owner, 0, nb - 1)),
-                              self.owner)
+                              ep.owner)
         else:
             merged, owner, payload_vals = self._fold_jit(
-                vals_b, seg, pos, self.moments, self.owner, new_owner,
-                tuple(self.payloads[n] for n in arg_names),
+                vals_b, seg, pos, ep.moments, ep.owner, new_owner,
+                tuple(ep.payloads[n] for n in arg_names),
                 tuple(bcols[pc] for _, _, _, pc in self._arg_aggs()),
                 backend=be)
         payloads = dict(zip(arg_names, payload_vals))
         # surface any backend failure HERE (inside the guarded fold), not
-        # asynchronously at snapshot time — then commit atomically
+        # asynchronously at snapshot time — then build the COMPLETE
+        # successor epoch and publish it with one reference swap
         jax.block_until_ready((merged, owner, tuple(payloads.values())))
-        self.state, self.moments, self.owner = new_state, merged, owner
-        self.payloads = payloads
-        self.version = table.version
-        self.folds += 1
+        succ = Epoch(state=new_state, moments=merged, owner=owner,
+                     payloads=payloads, bound=self.bound,
+                     version=table.version, epoch_id=ep.epoch_id + 1,
+                     folds=ep.folds + 1, table=table)
+        # the crash-between-build-and-swap site: everything above is
+        # garbage-collectable scratch until the assignment below runs,
+        # so a failure HERE leaves readers on the pre-fold epoch
+        faults.fail("fold_publish")
+        self._epoch = succ
 
     def grow(self, table: Table) -> bool:
         """Double the resident bucket after an overflowing batch: re-slot
@@ -394,13 +489,14 @@ class ResidentAgg:
         _, b2 = resolve_group_bound(self.bound * 2, table.capacity)
         if b2 is None or b2 <= self.bound:
             return False
-        cnt = int(self.state.cnt)
+        ep = self._epoch        # captured ONCE: the pre-grow generation
+        cnt = int(ep.state.cnt)
         ns2 = b2 + 1
-        st2 = fresh_slot_state(self.state.ktab.shape[1], b2,
-                               self.state.expand)
+        st2 = fresh_slot_state(ep.state.ktab.shape[1], b2,
+                               ep.state.expand)
         if cnt:
             segmap, _own, ovf, st2 = slot_ids_extend(
-                self.state.ktab[:cnt], jnp.ones((cnt,), bool), st2)
+                ep.state.ktab[:cnt], jnp.ones((cnt,), bool), st2)
             if int(ovf) != 0:      # cannot happen: b2 ≥ 2·cnt
                 return False
             inv_b = jnp.full((b2,), cnt, jnp.int32).at[segmap].set(
@@ -412,21 +508,22 @@ class ResidentAgg:
         occ = jnp.concatenate([occ_b, jnp.zeros((1,), bool)])
         safe = jnp.clip(inv, 0, max(cnt - 1, 0))
         fills = jnp.asarray(_row_fills(self.norm), jnp.float32).reshape(
-            self.moments.shape[0], self.nrows)
+            ep.moments.shape[0], self.nrows)
         moments2 = jnp.where(occ[None, None, :],
-                             self.moments[:, :, safe], fills[:, :, None])
+                             ep.moments[:, :, safe], fills[:, :, None])
         payloads2 = {
             name: jnp.where(occ, jnp.take(p, safe),
                             jnp.zeros((), p.dtype))
-            for name, p in self.payloads.items()}
+            for name, p in ep.payloads.items()}
         owner2 = jnp.where(
             occ_b,
-            jnp.take(self.owner, jnp.clip(inv_b, 0, self.bound - 1)),
+            jnp.take(ep.owner, jnp.clip(inv_b, 0, self.bound - 1)),
             jnp.int32(-1))
         jax.block_until_ready((moments2, owner2))
         self.bound = b2
-        self.state, self.moments, self.owner = st2, moments2, owner2
-        self.payloads = payloads2
+        self._epoch = dataclasses.replace(
+            ep, state=st2, moments=moments2, owner=owner2,
+            payloads=payloads2, bound=b2, epoch_id=ep.epoch_id + 1)
         return True
 
     def snapshot(self, table: Table) -> Table:
@@ -434,11 +531,20 @@ class ResidentAgg:
         of ``engine._group_agg_fused`` over claim-order slots, assembled
         by the shared ``sortfree_result`` epilogue.  O(num_segments); the
         table's history is never re-read."""
-        cap = table.capacity
-        occupied = jnp.arange(self.bound) < self.state.cnt
-        rep_b = jnp.where(occupied, self.owner, cap).astype(jnp.int32)
+        return self.snapshot_epoch(self._epoch, table)
+
+    def snapshot_epoch(self, ep: Epoch, table: Optional[Table] = None
+                       ) -> Table:
+        """Decode one captured epoch — reads ONLY ``ep``'s fields (plus
+        the optional ``table`` override, which must be the epoch's
+        watermark table or an append-descendant of it), so it is safe to
+        run with no lock while folds publish successors concurrently."""
+        t = ep.table if table is None else table
+        cap = t.capacity
+        occupied = jnp.arange(ep.bound) < ep.state.cnt
+        rep_b = jnp.where(occupied, ep.owner, cap).astype(jnp.int32)
         rep, out_valid = overflow_extended(rep_b, occupied, cap)
-        fused = self.moments
+        fused = ep.moments
         out: Dict[str, jax.Array] = {}
         for name, op, col in self.aggs:
             if op == "count":
@@ -446,10 +552,10 @@ class ResidentAgg:
                     jnp.int64 if jax.config.jax_enable_x64 else jnp.int32)
                 continue
             if op in _ARG_OPS:
-                out[name] = self.payloads[name]
+                out[name] = ep.payloads[name]
                 continue
             i = self.col_idx[col]
-            d = table.columns[col].dtype
+            d = t.columns[col].dtype
             if op == "sum":
                 out[name] = fused[i, 0].astype(d)
             elif op == "mean":
@@ -458,5 +564,5 @@ class ResidentAgg:
                 out[name] = fused[i, 2].astype(d)
             else:
                 out[name] = fused[i, 3].astype(d)
-        return sortfree_result(table, self.keys, rep, out_valid, 0,
-                               self.bound, out)
+        return sortfree_result(t, self.keys, rep, out_valid, 0,
+                               ep.bound, out)

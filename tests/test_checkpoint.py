@@ -1,0 +1,266 @@
+"""Durable checkpoint/restore battery (serve/checkpoint.py).
+
+The contract under test (docs/serving.md "Durability & consistency"):
+
+* checkpoint → kill (new process modeled as a fresh ``AggServer`` over
+  the live table) → restore → replay yields BIT-identical snapshots to
+  the uninterrupted server, across the fused-op battery of the
+  incremental-ingest tests — including rows ingested after the
+  checkpoint (replayed through the normal fold path, one catch-up
+  fold, never a re-seed);
+* a torn payload write (``checkpoint_write`` fault) and read-path bit
+  rot (``restore_corrupt`` fault) surface as typed
+  ``CheckpointCorrupt`` and install NOTHING — snapshots recompute and
+  stay correct, never silently wrong;
+* a catalog that diverged from the watermark (rows replaced) quietly
+  declines rehydration — the residency re-seeds from live data;
+* files commit atomically (temp-then-rename, manifest last; no ``.tmp``
+  litter) and sequence numbers increase so restore takes the newest;
+* ``REPRO_SERVE_CKPT=off`` turns both verbs into no-ops.
+"""
+import glob
+import os
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.relational import Table, execute, keyslot
+from repro.relational.plan import GroupAgg, Scan
+from repro.reliability import faults
+from repro.serve import AggServer, CheckpointCorrupt, ServeRequest
+
+SCHEMA = ("k", "v", "p")
+
+
+def _plan(max_groups=128):
+    return GroupAgg(Scan("T", SCHEMA), ("k",),
+                    (("s", "sum", "v"), ("c", "count", None),
+                     ("mn", "min", "v"), ("mx", "max", "v"),
+                     ("me", "mean", "v"),
+                     ("am", "argmin", ("v", "p")),
+                     ("ax", "argmax", ("v", "p"))),
+                    max_groups=max_groups)
+
+
+def _mk_table(n=512, card=40, seed=0, spare=512):
+    # integer-valued f32 payloads: every moment is f32-exact, so replayed
+    # folds and the uninterrupted server agree BITWISE (== on dicts)
+    rng = np.random.default_rng(seed)
+    cap = n + spare
+    cols = {"k": rng.integers(0, card, cap).astype(np.int32),
+            "v": rng.integers(-40, 40, cap).astype(np.float32),
+            "p": rng.integers(0, 10_000, cap).astype(np.int32)}
+    valid = np.arange(cap) < n
+    return Table({c: jnp.asarray(a) for c, a in cols.items()},
+                 jnp.asarray(valid))
+
+
+def _batch(nb, card, seed):
+    rng = np.random.default_rng(seed)
+    return {"k": rng.integers(0, card, nb).astype(np.int32),
+            "v": rng.integers(-40, 40, nb).astype(np.float32),
+            "p": rng.integers(0, 10_000, nb).astype(np.int32)}
+
+
+def _groups(t: Table) -> dict:
+    out = t.to_numpy()
+    return {int(out["k"][i]):
+            tuple(float(out[c][i]) for c in ("s", "c", "mn", "mx", "me",
+                                             "am", "ax"))
+            for i in range(len(out["s"]))}
+
+
+def _reference(srv: AggServer, plan) -> dict:
+    return _groups(execute(plan, {"T": srv.table("T")}))
+
+
+def _primed_server(tmp_path, pre_batches=3, seed=0):
+    """A server with a seeded + folded residency, checkpointed."""
+    srv = AggServer({"T": _mk_table(seed=seed)})
+    plan = _plan()
+    srv.snapshot(plan)
+    for i in range(pre_batches):
+        srv.ingest("T", _batch(48, 60, seed=100 + i))
+    mpath = srv.checkpoint(str(tmp_path))
+    return srv, plan, mpath
+
+
+# ---------------------------------------------------------------------------
+# the headline: checkpoint → kill → restore → replay, bit-identical
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("post_batches", [0, 1, 3])
+def test_checkpoint_restore_replay_bit_parity(tmp_path, post_batches):
+    srv, plan, mpath = _primed_server(tmp_path)
+    assert mpath is not None and os.path.exists(mpath)
+    assert srv.stats.checkpoints == 1
+    # rows ingested AFTER the checkpoint: the restore must replay them
+    for i in range(post_batches):
+        srv.ingest("T", _batch(32, 60, seed=200 + i))
+    truth = _groups(srv.snapshot(plan))
+
+    # "kill": a fresh server over the live table — no process memory
+    srv2 = AggServer({"T": srv.table("T")})
+    assert srv2.restore(str(tmp_path)) == 1
+    assert srv2.stats.restores == 1
+    plan2 = _plan()     # a fresh, structurally identical plan object
+    got = _groups(srv2.snapshot(plan2))
+    assert got == truth
+    # the suffix replayed through the fold path: at most one catch-up
+    # fold, never a re-seed (slot_builds counts the seed's build)
+    assert srv2.stats.folds == (1 if post_batches else 0)
+    assert srv2.stats.slot_builds == 0
+    # and the residency keeps folding afterwards
+    srv2.ingest("T", _batch(16, 60, seed=300))
+    assert _groups(srv2.snapshot(plan2)) == _reference(srv2, plan2)
+    srv.close()
+    srv2.close()
+
+
+def test_restored_snapshot_version_reaches_live_watermark(tmp_path):
+    srv, plan, _ = _primed_server(tmp_path)
+    srv.ingest("T", _batch(32, 60, seed=210))
+    live_version = srv.table("T").version
+    srv2 = AggServer({"T": srv.table("T")})
+    srv2.restore(str(tmp_path))
+    plan2 = _plan()
+    res = srv2.serve(ServeRequest(plan=plan2, consistency="snapshot"))
+    assert res.version == live_version
+    # a subsequent epoch read serves the caught-up epoch lock-free
+    res2 = srv2.serve(ServeRequest(plan=plan2, consistency="epoch"))
+    assert res2.version == live_version
+    assert srv2.stats.epoch_reads >= 1
+    srv.close()
+    srv2.close()
+
+
+def test_restore_replays_appends_recorded_before_first_snapshot(tmp_path):
+    """Ingests that land on the NEW server before its first snapshot are
+    chained on top of the synthetic checkpoint step — one catch-up fold
+    covers both the pre-restart suffix and the fresh batches."""
+    srv, plan, _ = _primed_server(tmp_path)
+    srv.ingest("T", _batch(32, 60, seed=220))       # pre-restart suffix
+    srv2 = AggServer({"T": srv.table("T")})
+    srv2.restore(str(tmp_path))
+    srv2.ingest("T", _batch(24, 60, seed=221))      # lands BEFORE snapshot
+    plan2 = _plan()
+    assert _groups(srv2.snapshot(plan2)) == _reference(srv2, plan2)
+    assert srv2.stats.slot_builds == 0              # never re-seeded
+    srv.close()
+    srv2.close()
+
+
+# ---------------------------------------------------------------------------
+# corruption: torn writes and bit rot are typed, never silently wrong
+# ---------------------------------------------------------------------------
+
+
+def test_torn_checkpoint_write_detected_at_restore(tmp_path):
+    srv = AggServer({"T": _mk_table(seed=1)})
+    plan = _plan()
+    srv.snapshot(plan)
+    with faults.inject("checkpoint_write:1"):
+        mpath = srv.checkpoint(str(tmp_path))
+    assert mpath is not None        # the writer didn't notice the tear
+    srv2 = AggServer({"T": srv.table("T")})
+    with pytest.raises(CheckpointCorrupt, match="checksum"):
+        srv2.restore(str(tmp_path))
+    assert srv2.stats.restores == 0
+    # nothing installed: the snapshot re-seeds and is correct
+    plan2 = _plan()
+    builds0 = keyslot.slot_build_count()
+    assert _groups(srv2.snapshot(plan2)) == _reference(srv2, plan2)
+    assert keyslot.slot_build_count() > builds0     # re-seeded from live
+    srv.close()
+    srv2.close()
+
+
+def test_restore_bit_rot_detected(tmp_path):
+    srv, plan, _ = _primed_server(tmp_path, seed=2)
+    srv2 = AggServer({"T": srv.table("T")})
+    with faults.inject("restore_corrupt:1"):
+        with pytest.raises(CheckpointCorrupt) as ei:
+            srv2.restore(str(tmp_path))
+    assert ei.value.path and ei.value.path.endswith(".npz")
+    assert not srv2._restored       # all-or-nothing: nothing staged
+    plan2 = _plan()
+    assert _groups(srv2.snapshot(plan2)) == _reference(srv2, plan2)
+    srv.close()
+    srv2.close()
+
+
+def test_truncated_manifest_is_typed(tmp_path):
+    srv, plan, mpath = _primed_server(tmp_path, seed=3)
+    with open(mpath, "r+") as f:    # crash mid-manifest-write, modeled
+        f.truncate(os.path.getsize(mpath) // 2)
+    srv2 = AggServer({"T": srv.table("T")})
+    with pytest.raises(CheckpointCorrupt, match="manifest"):
+        srv2.restore(str(tmp_path))
+    srv.close()
+    srv2.close()
+
+
+def test_diverged_catalog_declines_rehydration(tmp_path):
+    """update_table after the checkpoint: the watermark rows no longer
+    match, so the restore stages but rehydration declines and the
+    snapshot re-seeds — correct, just not incremental."""
+    srv, plan, _ = _primed_server(tmp_path, seed=4)
+    t = srv.table("T")
+    t2 = t.with_column("v", jnp.asarray(np.asarray(t.columns["v"]) * 2))
+    srv2 = AggServer({"T": t2})
+    assert srv2.restore(str(tmp_path)) == 1
+    plan2 = _plan()
+    builds0 = keyslot.slot_build_count()
+    assert _groups(srv2.snapshot(plan2)) == _reference(srv2, plan2)
+    assert keyslot.slot_build_count() > builds0     # seeded from live data
+    srv.close()
+    srv2.close()
+
+
+# ---------------------------------------------------------------------------
+# file mechanics: atomic commit, newest-wins sequencing
+# ---------------------------------------------------------------------------
+
+
+def test_atomic_files_and_sequencing(tmp_path):
+    srv, plan, m1 = _primed_server(tmp_path, seed=5)
+    srv.ingest("T", _batch(32, 60, seed=400))
+    srv.snapshot(plan)              # fold the batch in before checkpoint 2
+    m2 = srv.checkpoint(str(tmp_path))
+    assert m2 != m1
+    assert not glob.glob(str(tmp_path / "*.tmp"))   # rename committed all
+    truth = _groups(srv.snapshot(plan))
+    # restore takes the NEWEST checkpoint: zero replay folds needed
+    srv2 = AggServer({"T": srv.table("T")})
+    srv2.restore(str(tmp_path))
+    plan2 = _plan()
+    assert _groups(srv2.snapshot(plan2)) == truth
+    assert srv2.stats.folds == 0
+    srv.close()
+    srv2.close()
+
+
+def test_checkpoint_without_residents_is_none(tmp_path):
+    srv = AggServer({"T": _mk_table(seed=6)})
+    assert srv.checkpoint(str(tmp_path)) is None
+    assert srv.stats.checkpoints == 0
+    srv2 = AggServer({"T": _mk_table(seed=6)})
+    assert srv2.restore(str(tmp_path)) == 0     # empty dir: no manifest
+    srv.close()
+    srv2.close()
+
+
+def test_kill_switch_disables_both_verbs(tmp_path, monkeypatch):
+    srv, plan, _ = _primed_server(tmp_path, seed=7)
+    monkeypatch.setenv("REPRO_SERVE_CKPT", "off")
+    assert srv.checkpoint(str(tmp_path)) is None
+    srv2 = AggServer({"T": srv.table("T")})
+    assert srv2.restore(str(tmp_path)) == 0
+    plan2 = _plan()
+    # snapshots recompute exactly as if no checkpoint existed
+    assert _groups(srv2.snapshot(plan2)) == _reference(srv2, plan2)
+    srv.close()
+    srv2.close()

@@ -109,6 +109,55 @@ def test_detector_empty_result_is_clean():
     assert not is_poisoned(t)
 
 
+def test_stamp_added_only_for_bool_only_outputs():
+    """The bool-only blind-spot fix: when NO output column can carry a
+    strong sentinel, ``poison_overflow`` adds the auxiliary f32 stamp
+    column (0.0 clean / NaN poisoned); any strong column present means
+    no stamp (the normal all-or-none scan already works)."""
+    from repro.relational.group_bound import STAMP_COL
+
+    bools = {"a": jnp.ones(3, bool)}
+    mixed = {"a": jnp.ones(3, bool), "b": jnp.ones(3, jnp.float32)}
+    assert STAMP_COL not in poison_overflow(mixed, jnp.array(False))
+    assert STAMP_COL not in poison_overflow(dict(bools), None)  # no guard
+    stamped = poison_overflow(dict(bools), jnp.array(False))
+    assert np.isnan(np.asarray(stamped[STAMP_COL])).all()
+    clean = poison_overflow(dict(bools), jnp.array(True))
+    assert np.array_equal(np.asarray(clean[STAMP_COL]),
+                          np.zeros(3, np.float32))
+
+
+def test_bool_only_sortfree_output_is_now_detectable():
+    """Regression for the bool-only blind spot through the real route: a
+    bool key and a bool aggregate used to make a poisoned result
+    indistinguishable from data; the stamp column closes that, and the
+    serving layer strips it after the scan."""
+    from repro.relational.group_bound import STAMP_COL
+    from repro.relational.keyslot import sortfree_result
+    from repro.serve.guard import strip_poison_stamp
+
+    n, bucket = 16, 4
+    t = Table({"k": jnp.asarray(np.arange(n) % 2 == 0)},
+              jnp.ones(n, bool))
+
+    def run(unplaced):
+        rep = jnp.zeros(bucket + 1, jnp.int32)
+        out_valid = jnp.ones(bucket + 1, bool)
+        return sortfree_result(t, ("k",), rep, out_valid, unplaced, bucket,
+                               {"any": jnp.ones(bucket + 1, bool)})
+
+    poisoned = jax.jit(run)(jnp.int32(7))
+    assert STAMP_COL in poisoned.columns
+    assert is_poisoned(poisoned)            # the blind spot is closed
+    clean = jax.jit(run)(jnp.int32(0))
+    assert not is_poisoned(clean)
+    stripped = strip_poison_stamp(clean)
+    assert STAMP_COL not in stripped.columns
+    assert set(stripped.columns) == {"k", "any"}
+    # identity on tables that never carried the stamp
+    assert strip_poison_stamp(stripped) is stripped
+
+
 def test_poisoned_end_to_end_through_sortfree_route():
     """The whole-column stamp as the executors actually produce it: a
     traced slot-overflow guard fails and every output column (keys and

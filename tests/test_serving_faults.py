@@ -373,6 +373,59 @@ def test_close_without_drain_fails_queue_typed():
         assert isinstance(fut.exception(timeout=120), ServerClosed)
 
 
+def test_close_drain_racing_ingest_commits_or_typed():
+    """``close(drain=True)`` racing concurrent ``ingest`` calls: every
+    ingest either commits IN FULL (its rows land and the resident state
+    converges to them) or fails typed ``ServerClosed`` having changed
+    nothing — never a half-committed append or torn resident state."""
+    import jax.numpy as jnp
+    from repro.relational import Table, execute
+    from repro.relational.plan import GroupAgg, Scan
+
+    rng = np.random.default_rng(21)
+    cap, n0, nb = 1024, 256, 16
+    cols = {"k": rng.integers(0, 30, cap).astype(np.int32),
+            "v": rng.integers(-9, 9, cap).astype(np.float32)}
+    t = Table({c: jnp.asarray(a) for c, a in cols.items()},
+              jnp.asarray(np.arange(cap) < n0))
+    plan = GroupAgg(Scan("T", ("k", "v")), ("k",),
+                    (("s", "sum", "v"), ("c", "count", None)),
+                    max_groups=64)
+    srv = AggServer({"T": t})
+    srv.snapshot(plan)                       # seed the residency
+    outcomes = []
+
+    def one(i):
+        r = np.random.default_rng(100 + i)
+        b = {"k": r.integers(0, 30, nb).astype(np.int32),
+             "v": r.integers(-9, 9, nb).astype(np.float32)}
+        try:
+            outcomes.append(("ok", srv.ingest("T", b)))
+        except ServerClosed:
+            outcomes.append(("closed", None))
+
+    threads = [threading.Thread(target=one, args=(i,)) for i in range(8)]
+    for th in threads:
+        th.start()
+    time.sleep(0.002)
+    srv.close(drain=True)
+    for th in threads:
+        th.join(timeout=120)
+    assert len(outcomes) == 8
+    committed = [o for o in outcomes if o[0] == "ok"]
+    live = srv.table("T")
+    # committed ingests landed in full; refused ones changed nothing
+    assert int(np.asarray(live.mask()).sum()) == n0 + nb * len(committed)
+    assert srv.stats.ingests == len(committed)
+    # resident state never half-committed: snapshot == full recompute
+    def groups(tab):
+        out = tab.to_numpy()
+        return {int(out["k"][i]): (float(out["s"][i]), float(out["c"][i]))
+                for i in range(len(out["s"]))}
+    assert groups(srv.snapshot(plan)) == \
+        groups(execute(plan, {"T": live}))
+
+
 def test_concurrent_load_with_faults_stays_correct():
     """Mixed chaos under concurrency: a dispatcher death and a backend
     failure mid-stream; every future still resolves to a typed error or
